@@ -1,0 +1,83 @@
+"""Shared benchmark harness: tiny trained LM + timing + CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.glvq import GLVQConfig
+from repro.data.calibration import collect_h, quantize_model
+from repro.data.synthetic import make_batch, markov_tokens, token_batches
+from repro.launch.train import make_train_step, opt_init
+from repro.models import registry
+from repro.optim import AdamWConfig
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+@functools.lru_cache(maxsize=1)
+def tiny_trained_lm(steps: int = 80):
+    """Train the benchmark model once per process (llama-family, reduced)."""
+    cfg = reduced(get_config("llama2-7b"))
+    opt_cfg = AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=5)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    opt = opt_init(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, remat=False,
+                                   dtype=jnp.float32))
+    for batch in token_batches(cfg, 8, 32, steps, seed=0):
+        params, opt, _ = step(params, opt, batch)
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=1)
+def calibration_h(n_batches: int = 2):
+    cfg, params = tiny_trained_lm()
+    calib = [make_batch(cfg, 4, 32, 1000 + i,
+                        stream=markov_tokens(cfg.vocab, 40_000, 0))
+             for i in range(n_batches)]
+    return collect_h(params, calib, cfg)
+
+
+def eval_ppl(params, cfg, seed: int = 99, n: int = 4) -> float:
+    tot = 0.0
+    for i in range(n):
+        b = make_batch(cfg, 8, 32, seed + i,
+                       stream=markov_tokens(cfg.vocab, 40_000, 0))
+        tot += float(registry.loss_fn(params, b, cfg, dtype=jnp.float32,
+                                      remat=False))
+    return float(np.exp(tot / n))
+
+
+def quantize_and_ppl(method: str, bits: float, *, d: int = 8,
+                     iters: int = 100, use_h: bool = True,
+                     qcfg_extra: Optional[dict] = None) -> float:
+    cfg, params = tiny_trained_lm()
+    h_acc = calibration_h() if use_h else None
+    qcfg = GLVQConfig(d=d, bits=int(np.ceil(bits)), iters=iters, lr=1e-2,
+                      group_size=32, **(qcfg_extra or {}))
+    t0 = time.perf_counter()
+    q, _ = quantize_model(params, cfg, method=method, qcfg=qcfg,
+                          h_acc=h_acc, bits=bits)
+    dt = time.perf_counter() - t0
+    return eval_ppl(q, cfg), dt

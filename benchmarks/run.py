@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table. Emits
+``name,us_per_call,derived`` CSV rows (also mirrored to stdout)."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list of table substrings to run")
+    args = ap.parse_args(argv)
+
+    from benchmarks import tables
+    from benchmarks.common import ROWS
+
+    runs = [
+        ("table1", tables.run_table1_perplexity),
+        ("table2", tables.run_table2_downstream),
+        ("table3", tables.run_table3_fractional),
+        ("table4", tables.run_table4_throughput),
+        ("table5", tables.run_table5_overhead),
+        ("table6", tables.run_ablation_bit_allocation),
+        ("table7", tables.run_ablation_lattice),
+        ("table8", tables.run_ablation_companding),
+        ("table9", tables.run_ablation_group_size),
+        ("table11", tables.run_ablation_calibration_size),
+        ("table12", tables.run_ablation_rounding),
+    ]
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    for name, fn in runs:
+        if only and not any(o in name for o in only):
+            continue
+        print(f"# --- {name}: {fn.__doc__.splitlines()[0]}", flush=True)
+        fn()
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Lower + compile a production cell without hardware (the dry-run).
+
+Run:  PYTHONPATH=src python examples/multi_pod_dryrun.py \
+          --arch qwen3-1.7b --shape decode_32k --mesh multi --quant-bits 2
+"""
+from repro.launch.dryrun import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""The paper's full pipeline at laptop scale: train -> calibrate -> GLVQ
+quantize at 2/3/4 bits -> compare perplexity against RTN / GPTQ /
+fixed-lattice (Tables 1 & 7 protocol).
+
+Run:  PYTHONPATH=src python examples/quantize_and_eval.py
+"""
+import sys
+sys.path.insert(0, ".")
+
+from benchmarks.common import tiny_trained_lm, calibration_h, eval_ppl, \
+    quantize_and_ppl
+
+cfg, params = tiny_trained_lm(steps=80)
+print(f"trained tiny llama ({cfg.n_layers}L d={cfg.d_model}); "
+      f"fp32 ppl = {eval_ppl(params, cfg):.3f}")
+for bits in (4, 3, 2):
+    row = [f"{bits}-bit:"]
+    for method in ("glvq", "glvq+", "rtn", "gptq", "fixed-lattice"):
+        ppl, _ = quantize_and_ppl(method, bits)
+        row.append(f"{method}={ppl:.2f}")
+    print("  ".join(row))

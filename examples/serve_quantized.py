@@ -1,0 +1,9 @@
+"""End-to-end serving driver: batched-request decode loop over
+GLVQ-quantized weights (streaming per-layer dequantization, Sec 3.4).
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py --quant-bits 4
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""End-to-end training driver: train a small LM on the synthetic Markov
+language with WSD schedule, checkpoints and automatic resume.
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py --steps 200
+(`--arch` accepts any of the 10 assigned architectures; reduced configs.)
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

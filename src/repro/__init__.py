@@ -1,0 +1,2 @@
+"""repro: GLVQ low-bit LLM compression framework (JAX + Pallas TPU)."""
+__version__ = "0.1.0"

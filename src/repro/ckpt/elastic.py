@@ -1,0 +1,63 @@
+"""Elastic restore: reshard a checkpoint onto whatever mesh is alive.
+
+On restart after node failure the data axis may shrink/grow (model axis is
+fixed by the TP layout). Checkpoints store full (unsharded) host arrays, so
+elastic restore = restore + device_put with the NEW mesh's NamedShardings.
+Batch size per replica is re-derived so the global batch stays constant when
+possible (gradient-accumulation factor absorbs non-divisible remainders).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.ckpt.manager import CheckpointManager
+from repro.parallel import sharding as shlib
+
+__all__ = ["ElasticPlan", "plan_elastic", "elastic_restore"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_devices: int
+    new_devices: int
+    per_replica_batch: int
+    accum_steps: int            # gradient accumulation to keep global batch
+
+    @property
+    def changed(self) -> bool:
+        return self.old_devices != self.new_devices
+
+
+def plan_elastic(global_batch: int, mesh: Mesh,
+                 old_devices: Optional[int] = None) -> ElasticPlan:
+    n_dp = shlib.dp_size(mesh)
+    new_devices = mesh.devices.size
+    old = old_devices or new_devices
+    # keep global batch fixed; fold any non-divisible remainder into accum
+    accum = 1
+    per = global_batch // n_dp
+    while per * n_dp * accum < global_batch:
+        accum += 1
+        per = max(global_batch // (n_dp * accum), 1)
+    return ElasticPlan(old_devices=old, new_devices=new_devices,
+                       per_replica_batch=per, accum_steps=accum)
+
+
+def elastic_restore(mgr: CheckpointManager, template, mesh: Mesh):
+    """Restore latest checkpoint and place it sharded on the (new) mesh."""
+    step, host_tree = mgr.restore_latest(template)
+    if step is None:
+        return None, None
+    specs = shlib.param_specs(host_tree, mesh)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    placed = jax.tree.map(put, host_tree, specs,
+                          is_leaf=lambda x: isinstance(x, np.ndarray))
+    return step, placed

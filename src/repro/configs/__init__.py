@@ -1,0 +1,27 @@
+"""Architecture registry: repro.configs.get_config('<arch-id>')."""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced
+
+_MODULES = {
+    "minicpm-2b": "minicpm_2b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "dbrx-132b": "dbrx_132b",
+    "whisper-large-v3": "whisper_large_v3",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "llama2-7b": "llama2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+ASSIGNED = tuple(a for a in ARCHS if a != "llama2-7b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG

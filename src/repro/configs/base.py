@@ -1,0 +1,139 @@
+"""Model/shape configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "reduced"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                  # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    act: str = "swiglu"          # swiglu | sq_relu | gelu
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    rope_kind: str = "default"   # default | mrope | none
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # --- hybrid (recurrentgemma / RG-LRU) ---
+    window: int = 0              # local-attention window (0 = global)
+    scan_unit: Tuple[str, ...] = ("attn",)   # block types in one scan repeat
+    scan_tail: Tuple[str, ...] = ()          # remainder layers (unscanned)
+    # --- enc-dec (whisper) ---
+    enc_layers: int = 0          # >0 => encoder-decoder
+    frontend_stride: int = 4     # audio frames -> encoder positions (stub)
+    # --- vlm stub ---
+    n_vision_tokens: int = 0
+    # --- numerics / schedule hints ---
+    norm_eps: float = 1e-5
+    lr_schedule: str = "cosine"  # cosine | wsd (minicpm)
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def n_repeats(self) -> int:
+        body = self.n_layers - len(self.scan_tail)
+        assert body % len(self.scan_unit) == 0, (self.arch, body, self.scan_unit)
+        return body // len(self.scan_unit)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.act == "swiglu":
+            per_mlp = 3 * d * self.d_ff
+        else:
+            per_mlp = 2 * d * self.d_ff
+        if self.n_experts:
+            per_mlp = per_mlp * self.n_experts + d * self.n_experts
+        per_ssm = 0
+        if self.family == "ssm":
+            d_in = self.ssm_expand * d
+            per_ssm = d * (2 * d_in + 2 * self.ssm_state) + d_in * d
+            per_attn, per_mlp = 0, 0
+        layers = self.n_layers * (per_attn + per_mlp + per_ssm)
+        if self.family == "hybrid":
+            # RG-LRU blocks replace attention in 2/3 of layers; roughly same size
+            pass
+        if self.enc_layers:
+            layers = (self.enc_layers + self.n_layers) * (per_attn * 1.5 + per_mlp)
+        return int(emb + layers)
+
+    def active_param_count(self) -> int:
+        """MoE: parameters touched per token (6*N_active*D flops convention)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        per_mlp_total = (3 if self.act == "swiglu" else 2) * d * self.d_ff
+        dense_like = self.param_count() \
+            - self.n_layers * per_mlp_total * self.n_experts \
+            + self.n_layers * per_mlp_total * self.top_k
+        return int(dense_like)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    unit = cfg.scan_unit
+    tail = cfg.scan_tail
+    n_layers = len(unit) + len(tail) if (len(unit) + len(tail)) > 1 else 2
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_headdim=16 if cfg.ssm_headdim else 0,
+        ssm_chunk=8,
+        window=min(cfg.window, 8),
+        enc_layers=min(cfg.enc_layers, 2),
+        n_vision_tokens=min(cfg.n_vision_tokens, 4),
+        mrope_sections=(4, 2, 2),
+    )

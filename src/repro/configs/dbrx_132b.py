@@ -1,0 +1,7 @@
+"""DBRX-132B [hf:databricks/dbrx-base; unverified] — 16 experts, top-4."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="dbrx-132b", family="moe", n_layers=40, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=10_752, vocab=100_352,
+    act="swiglu", n_experts=16, top_k=4, scan_unit=("attn_moe",))

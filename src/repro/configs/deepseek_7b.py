@@ -1,0 +1,7 @@
+"""DeepSeek-7B [arXiv:2401.02954; hf] — llama architecture."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="deepseek-7b", family="dense", n_layers=30, d_model=4096,
+    n_heads=32, n_kv_heads=32, head_dim=128, d_ff=11_008, vocab=102_400,
+    act="swiglu", scan_unit=("attn",))

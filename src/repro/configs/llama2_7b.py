@@ -1,0 +1,7 @@
+"""Llama-2-7B — the paper's own evaluation model (Table 1/2/4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="llama2-7b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=32, head_dim=128, d_ff=11_008, vocab=32_000,
+    act="swiglu", scan_unit=("attn",))

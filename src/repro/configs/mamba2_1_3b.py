@@ -1,0 +1,8 @@
+"""Mamba2-1.3B [arXiv:2405.21060; unverified] — SSD, attention-free."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="mamba2-1.3b", family="ssm", n_layers=48, d_model=2048,
+    n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=50_280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    conv_width=4, scan_unit=("mamba",))

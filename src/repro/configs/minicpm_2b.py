@@ -1,0 +1,9 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf] — llama-like dense, WSD schedule."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="minicpm-2b", family="dense", n_layers=40, d_model=2304,
+    n_heads=36, n_kv_heads=36, head_dim=64, d_ff=5760, vocab=122_753,
+    act="swiglu", tie_embeddings=True, lr_schedule="wsd",
+    scan_unit=("attn",),
+    notes="WSD schedule wired via optim.schedule.wsd")

@@ -1,0 +1,7 @@
+"""Nemotron-4-15B [arXiv:2402.16819; unverified] — GQA, squared-ReLU FFN."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="nemotron-4-15b", family="dense", n_layers=32, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=24_576, vocab=256_000,
+    act="sq_relu", scan_unit=("attn",))

@@ -1,0 +1,9 @@
+"""Qwen2-VL-7B [arXiv:2409.12191; hf] — M-RoPE backbone, vision stub."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen2-vl-7b", family="vlm", n_layers=28, d_model=3584,
+    n_heads=28, n_kv_heads=4, head_dim=128, d_ff=18_944, vocab=152_064,
+    act="swiglu", rope_kind="mrope", mrope_sections=(16, 24, 24),
+    n_vision_tokens=64, scan_unit=("attn",),
+    notes="vision frontend stubbed: input_specs() provides patch embeddings")

@@ -1,0 +1,7 @@
+"""Qwen3-1.7B [hf:Qwen/Qwen3-8B family; hf] — qk-norm, GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen3-1.7b", family="dense", n_layers=28, d_model=2048,
+    n_heads=16, n_kv_heads=8, head_dim=128, d_ff=6144, vocab=151_936,
+    act="swiglu", qk_norm=True, scan_unit=("attn",))

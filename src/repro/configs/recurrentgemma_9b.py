@@ -1,0 +1,12 @@
+"""RecurrentGemma-9B [arXiv:2402.19427; unverified] — RG-LRU + local attn 1:2.
+
+38 layers = 12 x (rglru, rglru, attn_local) + (rglru, rglru) tail; MQA (kv=1),
+sliding window 2048.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="recurrentgemma-9b", family="hybrid", n_layers=38, d_model=4096,
+    n_heads=16, n_kv_heads=1, head_dim=256, d_ff=12_288, vocab=256_000,
+    act="swiglu", window=2048,
+    scan_unit=("rglru", "rglru", "attn_local"), scan_tail=("rglru", "rglru"))

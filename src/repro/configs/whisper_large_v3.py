@@ -1,0 +1,12 @@
+"""Whisper-large-v3 [arXiv:2212.04356; unverified] — enc-dec, conv stub.
+
+"32L" counts encoder depth; the decoder mirrors it (as in the real model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="whisper-large-v3", family="audio", n_layers=32, d_model=1280,
+    n_heads=20, n_kv_heads=20, head_dim=64, d_ff=5120, vocab=51_866,
+    act="gelu", rope_kind="none", enc_layers=32, frontend_stride=4,
+    scan_unit=("attn",),
+    notes="conv frontend stubbed: input_specs() provides frame embeddings")

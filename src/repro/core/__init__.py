@@ -1,0 +1,10 @@
+"""Paper core: Grouped Lattice Vector Quantization (GLVQ)."""
+from repro.core.glvq import GLVQConfig, quantize_group, quantize_layer, dequantize_layer
+from repro.core.sdba import sdba, allocate_bits, group_salience, fractional_bits
+from repro.core import lattice, companding, packing, baselines, quantized
+
+__all__ = [
+    "GLVQConfig", "quantize_group", "quantize_layer", "dequantize_layer",
+    "sdba", "allocate_bits", "group_salience", "fractional_bits",
+    "lattice", "companding", "packing", "baselines", "quantized",
+]

@@ -1,0 +1,122 @@
+"""PTQ baselines the paper compares against / ablates.
+
+* RTN       — round-to-nearest, symmetric, per (input-group x output column).
+* GPTQ      — data-aware column-wise quantization with Hessian error
+              propagation (Frantar et al. 2022), blocked Cholesky form.
+* Fixed-lattice — GLVQ pipeline with a frozen shared basis (QuIP#-style E8
+              for d=8, scaled identity otherwise): the paper's Table 7 ablation.
+* GCD       — GLVQ with greedy-coordinate-descent index assignment (Table 12).
+
+All operate on W [K, N] with y = x @ W, matching repro.core.glvq layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg
+
+from repro.core import glvq as glvq_lib
+from repro.core import lattice
+
+__all__ = ["rtn_quantize", "gptq_quantize", "fixed_lattice_config", "e8_basis"]
+
+
+def rtn_quantize(w: jax.Array, bits: int, group_size: int = 128) -> jax.Array:
+    """Symmetric RTN with per-(group, column) scales. Returns dequantized W."""
+    k, n = w.shape
+    n_g = k // group_size
+    wg = w.astype(jnp.float32).reshape(n_g, group_size, n)
+    qmax = 2.0 ** (bits - 1) - 1 if bits > 1 else 1.0
+    scale = jnp.max(jnp.abs(wg), axis=1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(wg / scale), -qmax - (0 if bits == 1 else 1), qmax)
+    return (q * scale).reshape(k, n).astype(w.dtype)
+
+
+def gptq_quantize(
+    w: jax.Array,
+    h: jax.Array,
+    bits: int,
+    group_size: int = 128,
+    percdamp: float = 0.01,
+    block: int = 128,
+) -> jax.Array:
+    """GPTQ over the input dim (rows of W [K, N]); H = X X^T is [K, K].
+
+    Column-major GPTQ quantizes one input channel at a time and spreads the
+    error over the not-yet-quantized channels using the Cholesky of H^{-1}.
+    Runs in numpy float64 (offline, calibration-time).
+    """
+    w_np = np.asarray(w, np.float64).copy()          # [K, N]
+    h_np = np.asarray(h, np.float64).copy()
+    k, n = w_np.shape
+
+    dead = np.diag(h_np) == 0
+    h_np[dead, dead] = 1.0
+    w_np[dead, :] = 0.0
+    damp = percdamp * np.mean(np.diag(h_np))
+    h_np[np.diag_indices(k)] += damp
+
+    hinv = np.linalg.inv(h_np)
+    # upper Cholesky factor U with H^{-1} = U^T U
+    hinv_u = scipy.linalg.cholesky(hinv, lower=False)
+
+    qmax = 2.0 ** (bits - 1) - 1 if bits > 1 else 1.0
+    out = np.zeros_like(w_np)
+    scale = np.zeros((1, n))
+    for i1 in range(0, k, block):
+        i2 = min(i1 + block, k)
+        w_blk = w_np[i1:i2, :].copy()
+        err_blk = np.zeros_like(w_blk)
+        u_blk = hinv_u[i1:i2, i1:i2]
+        for i in range(i2 - i1):
+            gi = i1 + i
+            if gi % group_size == 0:
+                g_rows = w_np[gi : gi + group_size, :]
+                scale = np.maximum(np.max(np.abs(g_rows), axis=0, keepdims=True) / qmax, 1e-12)
+            d = u_blk[i, i]
+            q = np.clip(np.round(w_blk[i, :] / scale[0]), -qmax - (0 if bits == 1 else 1), qmax)
+            dq = q * scale[0]
+            out[gi, :] = dq
+            err = (w_blk[i, :] - dq) / d
+            if i + 1 < i2 - i1:
+                w_blk[i + 1 :, :] -= np.outer(u_blk[i, i + 1 :], err)
+            err_blk[i, :] = err
+        if i2 < k:
+            w_np[i2:, :] -= hinv_u[i1:i2, i2:].T @ err_blk
+    return jnp.asarray(out, dtype=w.dtype)
+
+
+def e8_basis() -> np.ndarray:
+    """Generator of the E8 lattice (Conway & Sloane), det = 1.
+
+    Rows of the standard generator; we return columns-as-basis-vectors.
+    """
+    g = np.zeros((8, 8))
+    g[0, 0] = 2.0
+    for i in range(1, 7):
+        g[i, i - 1] = -1.0
+        g[i, i] = 1.0
+    g[7, :] = 0.5
+    return g.T
+
+
+def fixed_lattice_config(cfg: glvq_lib.GLVQConfig) -> glvq_lib.GLVQConfig:
+    """Ablation: same pipeline, frozen (shared) lattice basis."""
+    return dataclasses.replace(cfg, learn_lattice=False)
+
+
+def fixed_lattice_init(d: int, bits: int, data_std: float = 1.0) -> jnp.ndarray:
+    """Shared basis for the fixed-lattice ablation: scaled E8 for d=8,
+    scaled identity (product lattice == vector RTN) otherwise."""
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 1
+    scale = 3.0 * data_std / max(hi + 0.5, 1.0)
+    if d == 8:
+        base = e8_basis()
+        base = base / np.abs(np.linalg.det(base)) ** (1.0 / d)
+        return jnp.asarray(scale * base, jnp.float32)
+    return jnp.asarray(scale * np.eye(d), jnp.float32)

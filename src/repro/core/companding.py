@@ -1,0 +1,51 @@
+"""Group-specific mu-law companding (paper Eq. 9, 12).
+
+F_mu(x)    = sgn(x) * ln(1 + mu|x|) / ln(1 + mu)         (|x| <= 1)
+F_mu^-1(y) = sgn(y) * ((1 + mu)^{|y|} - 1) / mu
+
+mu is learned per group jointly with the generation matrix; the init is
+mu0 = 100 * tanh(kurtosis / 10), projected to [MU_MIN, MU_MAX] after each
+update. Weights are normalized by their group max-abs before companding
+(the scale is fp16 side information) so that |x| <= 1 holds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MU_MIN = 10.0
+MU_MAX = 255.0
+
+__all__ = ["MU_MIN", "MU_MAX", "compand", "expand", "init_mu", "project_mu", "kurtosis"]
+
+
+def compand(x: jax.Array, mu: jax.Array) -> jax.Array:
+    """F_mu(x); x expected in [-1, 1]."""
+    mu = jnp.asarray(mu, x.dtype)
+    return jnp.sign(x) * jnp.log1p(mu * jnp.abs(x)) / jnp.log1p(mu)
+
+
+def expand(y: jax.Array, mu: jax.Array) -> jax.Array:
+    """F_mu^{-1}(y)."""
+    mu = jnp.asarray(mu, y.dtype)
+    return jnp.sign(y) * jnp.expm1(jnp.abs(y) * jnp.log1p(mu)) / mu
+
+
+def kurtosis(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Sample (excess-free, i.e. plain) kurtosis of a flat array."""
+    x = x.reshape(-1).astype(jnp.float32)
+    m = jnp.mean(x)
+    c = x - m
+    var = jnp.mean(c * c)
+    m4 = jnp.mean(c ** 4)
+    return m4 / (var * var + eps)
+
+
+def init_mu(group_weights: jax.Array) -> jax.Array:
+    """Paper Eq. 12: mu0 = 100 tanh(kappa / 10), projected into range."""
+    kappa = kurtosis(group_weights)
+    return project_mu(100.0 * jnp.tanh(kappa / 10.0))
+
+
+def project_mu(mu: jax.Array) -> jax.Array:
+    return jnp.clip(mu, MU_MIN, MU_MAX)

@@ -1,0 +1,278 @@
+"""GLVQ: grouped lattice vector quantization (paper Alg. 1).
+
+Layout convention (shared with the Pallas kernels):
+  * A linear layer weight is W [K, N] with y = x @ W (K = in, N = out).
+  * Groups are ``group_size`` consecutive INPUT channels (rows of W) — the
+    paper's "column groups" of the [out, in] matrix.
+  * Within a group, lattice vectors of length d run along the OUTPUT dim:
+    W[k, n0:n0+d] is one lattice vector. This makes runtime decoding of a
+    [group_size, Nb] tile a single (group_size*Nb/d, d) @ (d, d) matmul.
+
+Per group we learn (G_g, mu_g) by alternating Babai rounding (codes are
+treated as constants, refreshed every iteration) with Adam steps on the
+calibration-aware reconstruction loss
+
+    L_g = || (W_g - What_g)^T X_g ||_F^2  + lam * ||G_g - G0_g||_F^2
+        = tr(Dw^T H_g Dw) + lam ||G - G0||^2,    H_g = X_g X_g^T,
+
+followed by spectral clipping of G and projection of mu to [10, 255].
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import companding, lattice
+
+__all__ = ["GLVQConfig", "GroupQuant", "quantize_group", "quantize_layer", "dequantize_layer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GLVQConfig:
+    d: int = 16                    # lattice dimension
+    group_size: int = 128          # input channels per group (paper default)
+    bits: int = 4                  # target average bit-width N
+    iters: int = 100               # alternating-optimization steps
+    lr: float = 7e-3               # Adam lr on (G, mu)
+    lam: float = 0.1               # Frobenius anchor (paper Eq. 8)
+    use_companding: bool = True    # group-specific mu-law (ablation: False)
+    learn_lattice: bool = True     # ablation: fixed shared lattice if False
+    bit_allocation: bool = True    # SDBA (GLVQ) vs uniform (GLVQ-u)
+    rounding: str = "babai"        # "babai" | "gcd" (ablation)
+    gcd_sweeps: int = 2
+    sigma_lo: float = 0.25         # spectral clip, relative to G0's sigmas
+    sigma_hi: float = 4.0
+    fixed_mu: float = 50.0         # used when use_companding=False
+    adam_b1: float = 0.9
+    adam_b2: float = 0.99
+    adam_eps: float = 1e-8
+
+
+class GroupQuant(dict):
+    """Pytree of stacked per-group results (plain dict for jax friendliness).
+
+    keys: codes [n_g, gs, N] int32, g [n_g, d, d] f32, mu [n_g] f32,
+          scale [n_g] f32, bits [n_g] int32.
+    """
+
+
+def _to_vectors(y: jax.Array, d: int) -> jax.Array:
+    """[gs, N] -> [d, gs*N/d] with vectors along the output dim."""
+    gs, n = y.shape
+    return y.reshape(gs, n // d, d).transpose(2, 0, 1).reshape(d, gs * n // d)
+
+
+def _from_vectors(v: jax.Array, gs: int, n: int) -> jax.Array:
+    d = v.shape[0]
+    return v.reshape(d, gs, n // d).transpose(1, 2, 0).reshape(gs, n)
+
+
+def _clip_range(bits: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Traced version of lattice.int_range (bits may be a per-group tracer)."""
+    bits = jnp.asarray(bits, jnp.float32)
+    lo = -jnp.exp2(bits - 1.0)
+    hi = jnp.exp2(bits - 1.0) - 1.0
+    # bits == 1 -> {-1, 0}: the generic formula already gives (-1, 0).
+    return lo, hi
+
+
+def _round_codes(g: jax.Array, y_vec: jax.Array, bits: jax.Array, cfg: GLVQConfig) -> jax.Array:
+    lo, hi = _clip_range(bits)
+    g_inv = jnp.linalg.inv(g)
+    z = jnp.clip(jnp.round(g_inv @ y_vec), lo, hi)
+    if cfg.rounding == "gcd":
+        z = _gcd_refine(g, y_vec, z, lo, hi, cfg.gcd_sweeps)
+    return z
+
+
+def _gcd_refine(g, y, z, lo, hi, sweeps):
+    """Greedy coordinate descent on ||y - G z||^2 (ablation baseline)."""
+    gram_diag = jnp.sum(g * g, axis=0)  # ||g_i||^2
+
+    def body(_, z):
+        def coord(i, z):
+            r = y - g @ z                      # residual
+            gi = g[:, i]
+            delta = (gi @ r) / (gram_diag[i] + 1e-12)
+            zi = jnp.clip(jnp.round(z[i] + delta), lo, hi)
+            return z.at[i].set(zi)
+        return jax.lax.fori_loop(0, z.shape[0], coord, z)
+
+    return jax.lax.fori_loop(0, sweeps, body, z)
+
+
+def _reconstruct(g, z, mu, scale, gs, n, cfg: GLVQConfig) -> jax.Array:
+    yq = g @ z
+    w_hat_n = _from_vectors(yq, gs, n)
+    w_hat_n = companding.expand(w_hat_n, mu) if cfg.use_companding else \
+        companding.expand(w_hat_n, jnp.asarray(cfg.fixed_mu))
+    return w_hat_n * scale
+
+
+def quantize_group(
+    w: jax.Array,                  # [gs, N]
+    h: Optional[jax.Array],        # [gs, gs] = X_g X_g^T, or None (proxy: I)
+    bits: jax.Array,               # scalar int32
+    cfg: GLVQConfig,
+    g_init: Optional[jax.Array] = None,   # override (fixed-lattice ablation)
+):
+    """Run Alg. 1 on one group. Returns dict(codes, g, mu, scale, w_hat)."""
+    gs, n = w.shape
+    d = cfg.d
+    w = w.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    wn = w / scale
+
+    if h is None:
+        h_sel = jnp.eye(gs, dtype=jnp.float32)
+    else:
+        h_sel = h.astype(jnp.float32)
+
+    def _g0_for(y0):
+        v0 = _to_vectors(y0, d)
+        g0 = lattice.init_generation_matrix(v0, int(cfg.bits))
+        # coverage rescale for the group's actual bit-width (traced-safe):
+        # init used cfg.bits; correct the radial scale by 2^(cfg.bits - bits).
+        return g0 * jnp.exp2(jnp.asarray(cfg.bits, jnp.float32)
+                             - jnp.asarray(bits, jnp.float32))
+
+    def _init_err(mu_c):
+        y0 = companding.compand(wn, mu_c)
+        g0 = _g0_for(y0)
+        z = _round_codes(g0, _to_vectors(y0, d), bits, cfg)
+        w_hat = _reconstruct(g0, z, mu_c, scale, gs, n, cfg)
+        dw = w - w_hat
+        return jnp.sum((h_sel @ dw) * dw)
+
+    if cfg.use_companding:
+        # robust init: kurtosis-based mu (paper Eq. 12) can land poorly on
+        # light-tailed groups; pick the best of three candidates by the
+        # actual H-weighted reconstruction error at init.
+        cands = jnp.stack([companding.init_mu(wn),
+                           jnp.asarray(20.0, jnp.float32),
+                           jnp.asarray(80.0, jnp.float32)])
+        errs = jnp.stack([_init_err(c) for c in cands])
+        mu0 = cands[jnp.argmin(errs)]
+    else:
+        mu0 = jnp.asarray(cfg.fixed_mu, jnp.float32)
+
+    y0 = companding.compand(wn, mu0) if cfg.use_companding else \
+        companding.compand(wn, jnp.asarray(cfg.fixed_mu))
+    if g_init is None:
+        g0 = _g0_for(y0)
+    else:
+        g0 = g_init
+    s0 = jnp.linalg.svd(g0, compute_uv=False)
+    sig_lo, sig_hi = cfg.sigma_lo * s0[-1], cfg.sigma_hi * s0[0]
+
+    if h is None:
+        h = jnp.eye(gs, dtype=jnp.float32)
+    h = h.astype(jnp.float32)
+    # normalize H so the loss scale (and lr) is layer-size independent
+    h = h / (jnp.trace(h) / gs + 1e-12)
+
+    def loss_fn(g, mu):
+        mu_eff = mu if cfg.use_companding else jnp.asarray(cfg.fixed_mu)
+        y = companding.compand(wn, mu_eff)
+        z = jax.lax.stop_gradient(_round_codes(g, _to_vectors(y, d), bits, cfg))
+        w_hat = _reconstruct(g, z, mu, scale, gs, n, cfg)
+        dw = w - w_hat
+        rec = jnp.sum((h @ dw) * dw)
+        reg = cfg.lam * jnp.sum((g - g0) ** 2)
+        return rec + reg
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1))
+
+    def step(carry, _):
+        g, mu, m, v, t, best = carry
+        loss, (gg, gmu) = grad_fn(g, mu)
+        # keep the best-seen (G, mu): the alternating loop is not monotone
+        # because Z is refreshed every iteration.
+        best_loss, best_g, best_mu = best
+        better = loss < best_loss
+        best = (jnp.where(better, loss, best_loss),
+                jnp.where(better, g, best_g),
+                jnp.where(better, mu, best_mu))
+        if not cfg.learn_lattice:
+            gg = jnp.zeros_like(gg)
+        if not cfg.use_companding:
+            gmu = jnp.zeros_like(gmu)
+        grads = (gg, gmu)
+        t = t + 1.0
+        lr = cfg.lr
+        m = jax.tree.map(lambda a, b: cfg.adam_b1 * a + (1 - cfg.adam_b1) * b, m, grads)
+        v = jax.tree.map(lambda a, b: cfg.adam_b2 * a + (1 - cfg.adam_b2) * b * b, v, grads)
+        mhat = jax.tree.map(lambda a: a / (1 - cfg.adam_b1 ** t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - cfg.adam_b2 ** t), v)
+        upd = jax.tree.map(lambda a, b: lr * a / (jnp.sqrt(b) + cfg.adam_eps), mhat, vhat)
+        g = g - upd[0]
+        mu = mu - upd[1] * 100.0   # mu lives on a [10, 255] scale
+        g = lattice.spectral_clip(g, sig_lo, sig_hi)
+        mu = companding.project_mu(mu)
+        return (g, mu, m, v, t, best), None
+
+    zeros = (jnp.zeros_like(g0), jnp.zeros_like(mu0))
+    init = (g0, mu0, zeros, zeros, jnp.asarray(0.0),
+            (jnp.asarray(jnp.inf), g0, mu0))
+    (g_last, mu_last, _, _, _, best), _ = jax.lax.scan(
+        step, init, None, length=cfg.iters)
+    # final candidates: best-seen vs last iterate
+    last_loss = loss_fn(g_last, mu_last)
+    take_last = last_loss < best[0]
+    g = jnp.where(take_last, g_last, best[1])
+    mu = jnp.where(take_last, mu_last, best[2])
+
+    mu_eff = mu if cfg.use_companding else jnp.asarray(cfg.fixed_mu)
+    y = companding.compand(wn, mu_eff)
+    z = _round_codes(g, _to_vectors(y, d), bits, cfg)
+    w_hat = _reconstruct(g, z, mu, scale, gs, n, cfg)
+    codes = _from_vectors(z, gs, n).astype(jnp.int32)
+    return dict(codes=codes, g=g, mu=mu, scale=scale, w_hat=w_hat)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "has_h"))
+def _quantize_layer_jit(w_groups, h_groups, bits, cfg: GLVQConfig, has_h: bool):
+    fn = lambda wg, hg, b: quantize_group(wg, hg if has_h else None, b, cfg)
+    return jax.vmap(fn)(w_groups, h_groups, bits)
+
+
+def quantize_layer(
+    w: jax.Array,                       # [K, N]
+    h: Optional[jax.Array],             # [K, K] calibration second moment
+    cfg: GLVQConfig,
+    bits_per_group: Optional[jax.Array] = None,
+) -> GroupQuant:
+    """Quantize a full layer; vmaps Alg. 1 over the K/group_size groups."""
+    k, n = w.shape
+    gs = cfg.group_size
+    if k % gs:
+        raise ValueError(f"K={k} not divisible by group_size={gs}")
+    if n % cfg.d:
+        raise ValueError(f"N={n} not divisible by lattice dim d={cfg.d}")
+    n_g = k // gs
+    w_groups = w.reshape(n_g, gs, n)
+    if h is not None:
+        hb = h.reshape(n_g, gs, n_g, gs)
+        h_groups = jnp.stack([hb[i, :, i, :] for i in range(n_g)])
+    else:
+        h_groups = jnp.zeros((n_g, gs, gs), w.dtype)
+    if bits_per_group is None:
+        bits_per_group = jnp.full((n_g,), cfg.bits, jnp.int32)
+    out = _quantize_layer_jit(w_groups, h_groups, bits_per_group, cfg, h is not None)
+    out["bits"] = bits_per_group
+    return GroupQuant(out)
+
+
+def dequantize_layer(q: GroupQuant, cfg: GLVQConfig) -> jax.Array:
+    """Reference decode: [n_g, gs, N] codes -> [K, N] weights."""
+    def dec(codes, g, mu, scale):
+        gs, n = codes.shape
+        z = _to_vectors(codes.astype(jnp.float32), cfg.d)
+        return _reconstruct(g, z, mu, scale, gs, n, cfg)
+    w_groups = jax.vmap(dec)(q["codes"], q["g"], q["mu"], q["scale"])
+    n_g, gs, n = w_groups.shape
+    return w_groups.reshape(n_g * gs, n)

@@ -1,0 +1,182 @@
+"""Lattice primitives: Babai rounding, generation-matrix init, spectral clipping.
+
+A lattice is {G z | z in Z^d} for a full-rank generation matrix G (d x d).
+Encoding approximates the closest-lattice-point problem with Babai rounding
+(round the coordinates of G^{-1} x); decoding is the exact mat-vec G z.
+With a b-bit budget per weight the integer coordinates are clipped to the
+signed range [-2^{b-1}, 2^{b-1}-1], so storage is exactly b bits/coordinate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "int_range",
+    "babai_round",
+    "babai_decode",
+    "init_generation_matrix",
+    "spectral_clip",
+    "lll_reduce",
+    "gram_schmidt_norms",
+    "babai_error_bound",
+]
+
+
+def int_range(bits: int) -> Tuple[int, int]:
+    """Signed integer range for ``bits``-bit lattice coordinates."""
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    if bits == 1:  # binary lattice: use {-1, 0}? prefer symmetric {-1, 1}->{-1,0}
+        lo, hi = -1, 0
+    return lo, hi
+
+
+def babai_round(g_inv: jax.Array, x: jax.Array, bits: int) -> jax.Array:
+    """Babai rounding: z = clip(round(G^{-1} x)).
+
+    Args:
+      g_inv: [d, d] inverse generation matrix.
+      x:     [d, ...] target vectors (d leading).
+      bits:  clip range per coordinate.
+    Returns integer codes with the same shape as ``x`` (int32).
+    """
+    lo, hi = int_range(bits)
+    coords = jnp.tensordot(g_inv, x, axes=[[1], [0]])
+    z = jnp.clip(jnp.round(coords), lo, hi)
+    return z.astype(jnp.int32)
+
+
+def babai_decode(g: jax.Array, z: jax.Array) -> jax.Array:
+    """Decode lattice points: x_hat = G z.  z: [d, ...]."""
+    return jnp.tensordot(g, z.astype(g.dtype), axes=[[1], [0]])
+
+
+def init_generation_matrix(
+    vectors: jax.Array,
+    bits: int,
+    *,
+    eps: float = 1e-6,
+    coverage_quantile: float = 0.999,
+) -> jax.Array:
+    """Paper init: Cholesky of the group's d x d covariance, scaled so that
+    Babai coordinates of the data fill the 2^bits range.
+
+    Args:
+      vectors: [d, L] the group's (companded, normalized) sub-vectors.
+      bits: target bit-width of the group.
+    Returns G0 [d, d].
+    """
+    d = vectors.shape[0]
+    cov = vectors @ vectors.T / max(vectors.shape[1], 1)
+    cov = cov + eps * jnp.eye(d, dtype=vectors.dtype)
+    chol = jnp.linalg.cholesky(cov)
+    # Scale so that round(G^{-1} w) lands inside the clip range for
+    # ``coverage_quantile`` of the data.
+    coords = jax.scipy.linalg.solve_triangular(chol, vectors, lower=True)
+    _, hi = int_range(bits)
+    mag = jnp.quantile(jnp.abs(coords), coverage_quantile)
+    scale = mag / max(hi + 0.5, 0.5)
+    scale = jnp.maximum(scale, eps)
+    return chol * scale
+
+
+def spectral_clip(g: jax.Array, sigma_min: float, sigma_max: float) -> jax.Array:
+    """Clip the singular values of G into [sigma_min, sigma_max]."""
+    u, s, vt = jnp.linalg.svd(g, full_matrices=False)
+    s = jnp.clip(s, sigma_min, sigma_max)
+    return (u * s[..., None, :]) @ vt
+
+
+def gram_schmidt_norms(basis: np.ndarray) -> np.ndarray:
+    """Norms of the Gram-Schmidt orthogonalization of the basis columns."""
+    b = np.asarray(basis, dtype=np.float64)
+    d = b.shape[1]
+    ortho = np.zeros_like(b)
+    for i in range(d):
+        v = b[:, i].copy()
+        for j in range(i):
+            denom = ortho[:, j] @ ortho[:, j]
+            if denom > 0:
+                v -= (b[:, i] @ ortho[:, j]) / denom * ortho[:, j]
+        ortho[:, i] = v
+    return np.linalg.norm(ortho, axis=0)
+
+
+def _mu_coeffs(basis: np.ndarray) -> np.ndarray:
+    """Gram-Schmidt projection coefficients mu[j, i] = <b_i, b*_j>/||b*_j||^2."""
+    b = np.asarray(basis, dtype=np.float64)
+    d = b.shape[1]
+    ortho = np.zeros_like(b)
+    mu = np.zeros((d, d))
+    for i in range(d):
+        v = b[:, i].copy()
+        for j in range(i):
+            denom = ortho[:, j] @ ortho[:, j]
+            c = (b[:, i] @ ortho[:, j]) / denom if denom > 0 else 0.0
+            mu[j, i] = c
+            v -= c * ortho[:, j]
+        ortho[:, i] = v
+    return mu
+
+
+def babai_error_bound(basis: np.ndarray) -> float:
+    """Appendix A bound:  ||e|| <= 1/2 sqrt( sum_j (1 + sum_{i>j}|mu_ji|)^2 ||b*_j||^2 ).
+
+    Valid for ANY basis (the LLL-reduced case specializes |mu| <= 1/2).
+    """
+    norms = gram_schmidt_norms(basis)
+    mu = _mu_coeffs(basis)
+    d = len(norms)
+    total = 0.0
+    for j in range(d):
+        alpha = 0.5 * (1.0 + np.abs(mu[j, j + 1 :]).sum())
+        total += (alpha ** 2) * norms[j] ** 2
+    return float(np.sqrt(total))
+
+
+def lll_reduce(basis: np.ndarray, delta: float = 0.75, max_iters: int = 10_000) -> np.ndarray:
+    """LLL lattice-basis reduction (numpy, offline).  Columns are basis vectors.
+
+    Used offline to precondition learned generation matrices so that Babai
+    rounding's error bound (Appendix A) tightens; the lattice itself is
+    unchanged (unimodular transform).
+    """
+    b = np.asarray(basis, dtype=np.float64).copy()
+    n = b.shape[1]
+
+    def gso(b):
+        ortho = np.zeros_like(b)
+        mu = np.zeros((n, n))
+        for i in range(n):
+            v = b[:, i].copy()
+            for j in range(i):
+                denom = ortho[:, j] @ ortho[:, j]
+                mu[i, j] = (b[:, i] @ ortho[:, j]) / denom if denom > 0 else 0.0
+                v -= mu[i, j] * ortho[:, j]
+            ortho[:, i] = v
+        return ortho, mu
+
+    ortho, mu = gso(b)
+    k, iters = 1, 0
+    while k < n and iters < max_iters:
+        iters += 1
+        for j in range(k - 1, -1, -1):
+            if abs(mu[k, j]) > 0.5:
+                b[:, k] -= round(mu[k, j]) * b[:, j]
+                ortho, mu = gso(b)
+        nk = ortho[:, k] @ ortho[:, k]
+        nk1 = ortho[:, k - 1] @ ortho[:, k - 1]
+        if nk >= (delta - mu[k, k - 1] ** 2) * nk1:
+            k += 1
+        else:
+            b[:, [k, k - 1]] = b[:, [k - 1, k]]
+            ortho, mu = gso(b)
+            k = max(k - 1, 1)
+    return b

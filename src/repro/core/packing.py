@@ -1,0 +1,64 @@
+"""Bit-packing of integer lattice codes into uint32 payloads.
+
+Codes are b-bit two's-complement fields packed ``per_word = 32 // b`` to a
+word along the LAST axis (the layer's output dim in our layout). For b = 3
+per_word = 10, leaving 2 spare bits per word (6.25% padding) — this is the
+only bit-width whose field size does not divide 32; the overhead is included
+in the rate accounting of the benchmarks.
+
+The unpack is branch-free (broadcasted shifts + masks), which is exactly what
+the Pallas kernel replays on TPU VPU lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["per_word", "packed_len", "pack_codes", "unpack_codes"]
+
+
+def per_word(bits: int) -> int:
+    if not 1 <= bits <= 8:
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
+    return 32 // bits
+
+
+def packed_len(n: int, bits: int) -> int:
+    pw = per_word(bits)
+    return (n + pw - 1) // pw
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack int codes [..., N] -> uint32 [..., ceil(N / per_word)].
+
+    Codes must lie in the signed b-bit range.
+    """
+    pw = per_word(bits)
+    n = codes.shape[-1]
+    n_words = packed_len(n, bits)
+    pad = n_words * pw - n
+    mask = (1 << bits) - 1
+    u = (codes.astype(jnp.int32) & mask).astype(jnp.uint32)
+    if pad:
+        u = jnp.pad(u, [(0, 0)] * (u.ndim - 1) + [(0, pad)])
+    u = u.reshape(u.shape[:-1] + (n_words, pw))
+    shifts = (jnp.arange(pw, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    return jnp.sum(u << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(words: jax.Array, bits: int, n: int) -> jax.Array:
+    """Unpack uint32 [..., W] -> signed int32 codes [..., n]."""
+    pw = per_word(bits)
+    shifts = (jnp.arange(pw, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    fields = (words[..., None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    fields = fields.reshape(words.shape[:-1] + (words.shape[-1] * pw,))[..., :n]
+    # sign-extend b-bit two's complement
+    f = fields.astype(jnp.int32)
+    sign_bit = 1 << (bits - 1)
+    return f - 2 * (f & sign_bit)
+
+
+def packed_nbytes(n_codes: int, bits: int) -> int:
+    """Physical bytes used by packing ``n_codes`` b-bit codes."""
+    return 4 * packed_len(n_codes, bits)

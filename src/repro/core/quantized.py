@@ -1,0 +1,242 @@
+"""Quantized-weight containers and runtime decode paths.
+
+``QuantLinear`` stores a layer as
+  * ``packed``  uint32 [K, n_words]   (b-bit codes packed along the out dim)
+  * ``g``       f32   [n_groups, d, d]
+  * ``mu``      f32   [n_groups]
+  * ``scale``   f32   [n_groups]
+plus static metadata (bits, d, group_size, K, N). Mixed-bit layers (SDBA)
+are stored as up-to-three uniform-bit segments with a group permutation.
+
+Two decode paths:
+  * ``decode_xla``  — pure-jnp unpack + blocked G·Z + inverse companding.
+    Used on CPU and in the multi-pod dry-run (Pallas CPU lowering is
+    interpret-only); XLA fuses the unpack arithmetic but materializes W.
+  * kernels.ops.glvq_matmul — Pallas TPU fused decode+GEMM (see repro.kernels)
+    which never materializes W in HBM; selected with use_pallas=True.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import companding, packing
+from repro.core.glvq import GLVQConfig, GroupQuant
+
+__all__ = ["QuantLinearMeta", "pack_layer", "decode_xla", "quant_matmul_xla",
+           "segment_layer", "QuantSegments"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantLinearMeta:
+    k: int
+    n: int
+    bits: int
+    d: int
+    group_size: int
+
+    @property
+    def n_groups(self) -> int:
+        return self.k // self.group_size
+
+    @property
+    def n_words(self) -> int:
+        return packing.packed_len(self.n, self.bits)
+
+    def payload_bytes(self) -> int:
+        side = self.n_groups * (2 * self.d * self.d + 2 + 2)  # fp16 G + mu + scale
+        return 4 * self.k * self.n_words + side
+
+
+def pack_layer(q: GroupQuant, cfg: GLVQConfig, bits: int) -> Dict[str, jax.Array]:
+    """Pack a uniform-bit GroupQuant into the runtime layout."""
+    codes = q["codes"]                       # [n_g, gs, N]
+    n_g, gs, n = codes.shape
+    flat = codes.reshape(n_g * gs, n)
+    packed = packing.pack_codes(flat, bits)  # [K, n_words]
+    return dict(packed=packed, g=q["g"], mu=q["mu"], scale=q["scale"])
+
+
+def decode_xla(payload: Dict[str, jax.Array], meta: QuantLinearMeta) -> jax.Array:
+    """Dequantize the full layer: uint32 payload -> f32 W [K, N]."""
+    codes = packing.unpack_codes(payload["packed"], meta.bits, meta.n)   # [K, N]
+    n_g, gs, d = meta.n_groups, meta.group_size, meta.d
+    z = codes.reshape(n_g, gs, meta.n // d, d).astype(jnp.float32)
+    # w_vec = G @ z  (vectors along the output dim) == z @ G^T
+    y = jnp.einsum("gsvd,ged->gsve", z, payload["g"])
+    y = y.reshape(n_g, gs, meta.n)
+    w = companding.expand(y, payload["mu"][:, None, None])
+    w = w * payload["scale"][:, None, None]
+    return w.reshape(meta.k, meta.n)
+
+
+def quant_matmul_xla(x: jax.Array, payload: Dict[str, jax.Array],
+                     meta: QuantLinearMeta, dtype=jnp.bfloat16) -> jax.Array:
+    """y = x @ dequant(W) via the XLA path."""
+    w = decode_xla(payload, meta).astype(dtype)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Mixed-bit (SDBA) segmented storage
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantSegments:
+    """Mixed-precision layer = list of (meta, payload, group_indices)."""
+    segments: List[Tuple[QuantLinearMeta, Dict[str, jax.Array], np.ndarray]]
+    k: int
+    n: int
+    group_size: int
+
+    def payload_bytes(self) -> int:
+        return sum(m.payload_bytes() for m, _, _ in self.segments)
+
+    def avg_bits(self) -> float:
+        tot = sum(m.bits * len(idx) for m, _, idx in self.segments)
+        cnt = sum(len(idx) for _, _, idx in self.segments)
+        return tot / cnt
+
+
+def segment_layer(q: GroupQuant, cfg: GLVQConfig) -> QuantSegments:
+    """Split a mixed-bit GroupQuant into uniform-bit packed segments."""
+    bits = np.asarray(q["bits"])
+    n_g, gs, n = q["codes"].shape
+    segs = []
+    for b in sorted(set(bits.tolist())):
+        idx = np.nonzero(bits == b)[0]
+        sub = GroupQuant(
+            codes=q["codes"][idx], g=q["g"][idx], mu=q["mu"][idx],
+            scale=q["scale"][idx], bits=q["bits"][idx])
+        payload = pack_layer(sub, cfg, int(b))
+        meta = QuantLinearMeta(k=len(idx) * gs, n=n, bits=int(b), d=cfg.d,
+                               group_size=gs)
+        segs.append((meta, payload, idx))
+    return QuantSegments(segments=segs, k=n_g * gs, n=n, group_size=gs)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model quantized parameter trees (serving path)
+# ---------------------------------------------------------------------------
+
+QUANTIZABLE = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "wx", "wg", "wr",
+               "wi", "in_proj", "out_proj", "router"}
+
+_PAYLOAD_KEYS = {"packed", "g", "mu", "scale"}
+
+
+def _meta_key(names: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Stable key for a weight independent of stack/tail container position:
+    the (block-kind, weight-name) suffix, e.g. ("attn", "wq")."""
+    return tuple(names[-2:])
+
+
+def quantized_param_shapes(params_sds, *, bits: int, d: int,
+                           group_size: int = 128):
+    """SDS transform: replace quantizable weights with packed payload SDS.
+
+    Leading stack/expert dims of a weight [lead..., K, N] are PRESERVED on
+    the payload (packed [lead..., K, n_words]) so per-layer slices decode
+    inside the model's scan — the paper's streaming decode (Sec. 3.4).
+    Returns (new_sds_tree, meta_by_key) — no device data is touched.
+    """
+    meta = {}
+
+    def conv(path, leaf):
+        names = tuple(p.key for p in path if hasattr(p, "key"))
+        name = names[-1] if names else ""
+        if name in QUANTIZABLE and leaf.ndim >= 2:
+            lead, (k, n) = leaf.shape[:-2], leaf.shape[-2:]
+            if k % group_size == 0 and n % d == 0:
+                m = QuantLinearMeta(k=k, n=n, bits=bits, d=d,
+                                    group_size=group_size)
+                meta[_meta_key(names)] = m
+                n_g = k // group_size
+                return dict(
+                    packed=jax.ShapeDtypeStruct(lead + (k, m.n_words), jnp.uint32),
+                    g=jax.ShapeDtypeStruct(lead + (n_g, d, d), jnp.float32),
+                    mu=jax.ShapeDtypeStruct(lead + (n_g,), jnp.float32),
+                    scale=jax.ShapeDtypeStruct(lead + (n_g,), jnp.float32),
+                )
+        return leaf
+
+    new = jax.tree_util.tree_map_with_path(conv, params_sds)
+    return new, meta
+
+
+def quantize_param_tree(params, *, cfg: GLVQConfig, bits: Optional[int] = None,
+                        h_by_key: Optional[Dict] = None):
+    """Offline: run GLVQ on every quantizable weight (uniform bit-width).
+
+    Stacked weights [lead..., K, N] are quantized per unstacked layer (groups
+    never cross layer boundaries). Returns (quantized tree, meta_by_key).
+    """
+    from repro.core import glvq as glvq_lib
+    bits = bits if bits is not None else cfg.bits
+    meta = {}
+
+    def conv(path, leaf):
+        names = tuple(p.key for p in path if hasattr(p, "key"))
+        name = names[-1] if names else ""
+        if name in QUANTIZABLE and leaf.ndim >= 2:
+            lead, (k, n) = leaf.shape[:-2], leaf.shape[-2:]
+            if k % cfg.group_size == 0 and n % cfg.d == 0:
+                w = leaf.reshape((-1, k, n))
+                h = h_by_key.get(_meta_key(names)) if h_by_key else None
+                payloads = []
+                for i in range(w.shape[0]):
+                    q = glvq_lib.quantize_layer(w[i], h, cfg)
+                    payloads.append(pack_layer(q, cfg, bits))
+                payload = jax.tree.map(lambda *xs: jnp.stack(xs).reshape(
+                    lead + xs[0].shape), *payloads)
+                m = QuantLinearMeta(k=k, n=n, bits=bits, d=cfg.d,
+                                    group_size=cfg.group_size)
+                meta[_meta_key(names)] = m
+                return payload
+        return leaf
+
+    new = jax.tree_util.tree_map_with_path(conv, params)
+    return new, meta
+
+
+def _decode_any(payload: Dict[str, jax.Array], m: QuantLinearMeta, dtype):
+    """Decode a payload with arbitrary leading stack dims."""
+    packed = payload["packed"]
+    lead = packed.shape[:-2]
+    if not lead:
+        return decode_xla(payload, m).astype(dtype)
+    flat = {k: v.reshape((-1,) + v.shape[len(lead):]) for k, v in payload.items()}
+    w = jax.vmap(lambda p: decode_xla(p, m))(flat)
+    return w.reshape(lead + (m.k, m.n)).astype(dtype)
+
+
+def materialize_tree(qparams, meta_by_key, dtype=jnp.bfloat16):
+    """Inside-jit decode: payload dicts -> dense weights (original shapes).
+
+    Works on the full tree or on any subtree (e.g. a per-layer slice inside
+    jax.lax.scan — the streaming-decode path)."""
+
+    def rebuild(node, names=()):
+        if isinstance(node, dict) and set(node) == _PAYLOAD_KEYS \
+                and _meta_key(names) in meta_by_key:
+            return _decode_any(node, meta_by_key[_meta_key(names)], dtype)
+        if isinstance(node, dict):
+            return {k: rebuild(v, names + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(v, names) for v in node)
+        return node
+
+    return rebuild(qparams)
+
+
+def decode_segments(qs: QuantSegments) -> jax.Array:
+    """Reassemble the full [K, N] weight from mixed-bit segments."""
+    w = jnp.zeros((qs.k // qs.group_size, qs.group_size, qs.n), jnp.float32)
+    for meta, payload, idx in qs.segments:
+        wseg = decode_xla(payload, meta).reshape(len(idx), qs.group_size, qs.n)
+        w = w.at[jnp.asarray(idx)].set(wseg)
+    return w.reshape(qs.k, qs.n)

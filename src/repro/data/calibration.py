@@ -1,0 +1,172 @@
+"""Calibration capture + whole-model PTQ drivers (dense LM family).
+
+Mirrors GPTQ-style calibration: run the model over calibration batches and
+accumulate the second moment H = X^T X of every linear layer's input, then
+quantize each weight with its own H. Reuses ``repro.models.layers`` for all
+math; only the layer loop is reimplemented (python-level, unstacked) because
+taps inside jax.lax.scan would change the core model code.
+
+``quantize_model`` returns FAKE-QUANT (dequantized) params — the accuracy
+evaluation path of the paper's Tables 1-3. Packed serving payloads come from
+``repro.core.quantized.quantize_param_tree``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sdba import group_salience, fractional_bits, sdba as sdba_fn
+from repro.core.baselines import gptq_quantize, rtn_quantize, fixed_lattice_init
+from repro.core.glvq import GLVQConfig, quantize_layer, dequantize_layer
+from repro.models import layers
+from repro.models.layers import rms_norm
+
+__all__ = ["collect_h", "quantize_model", "layer_slice", "layer_set"]
+
+
+def layer_slice(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def layer_set(tree, i: int, sub):
+    return jax.tree.map(lambda a, s: a.at[i].set(s), tree, sub)
+
+
+def _dense_taps(params, batch, cfg: ModelConfig, dtype=jnp.float32):
+    """Forward pass emitting per-layer linear inputs (dense/vlm families)."""
+    from repro.models import lm
+    x, pos = lm.embed_inputs(params, batch, cfg, dtype)
+    taps: List[Dict[str, jnp.ndarray]] = []
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    r = cfg.n_repeats
+    assert cfg.scan_unit == ("attn",), "calibration taps: dense family only"
+    blocks = params["blocks"][0]
+    for i in range(r):
+        p = layer_slice(blocks, i)
+        t = {}
+        h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        t["attn_in"] = h
+        q, k, v = layers._qkv(p["attn"], h, cfg, pos)
+        mask = jnp.tril(jnp.ones((h.shape[1], h.shape[1]), jnp.bool_))[None, None, None]
+        o = layers._sdpa(q, k, v, mask, n_rep).reshape(h.shape[0], h.shape[1], -1)
+        t["attn_mid"] = o
+        x = x + o @ p["attn"]["wo"].astype(dtype)
+        h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        t["mlp_in"] = h
+        m = h @ p["mlp"]["w1"].astype(dtype)
+        if cfg.act == "swiglu":
+            m = jax.nn.silu(m) * (h @ p["mlp"]["w3"].astype(dtype))
+        elif cfg.act == "sq_relu":
+            m = jnp.square(jax.nn.relu(m))
+        else:
+            m = jax.nn.gelu(m)
+        t["mlp_mid"] = m
+        x = x + m @ p["mlp"]["w2"].astype(dtype)
+        taps.append(t)
+    return taps
+
+_TAP_OF_WEIGHT = dict(wq="attn_in", wk="attn_in", wv="attn_in", wo="attn_mid",
+                      w1="mlp_in", w3="mlp_in", w2="mlp_mid")
+_GROUP_OF_WEIGHT = dict(wq="attn", wk="attn", wv="attn", wo="attn",
+                        w1="mlp", w3="mlp", w2="mlp")
+
+
+def collect_h(params, batches: Iterable[dict], cfg: ModelConfig):
+    """Accumulate H = X^T X per (layer, tap). Returns h[layer][tap] (np)."""
+    acc: List[Dict[str, np.ndarray]] = []
+    n = 0
+    for batch in batches:
+        taps = _dense_taps(params, batch, cfg)
+        for i, t in enumerate(taps):
+            if len(acc) <= i:
+                acc.append({})
+            for k, v in t.items():
+                flat = np.asarray(v, np.float64).reshape(-1, v.shape[-1])
+                h = flat.T @ flat
+                acc[i][k] = acc[i].get(k, 0.0) + h
+        n += 1
+    return acc
+
+
+@dataclasses.dataclass
+class QuantReport:
+    method: str
+    bits: float
+    layer_mse: List[float]
+
+
+def quantize_model(params, cfg: ModelConfig, *, method: str = "glvq",
+                   qcfg: Optional[GLVQConfig] = None,
+                   h_acc: Optional[list] = None,
+                   bits: Optional[float] = None):
+    """Fake-quant every transformer linear; returns (new_params, report).
+
+    method: glvq | glvq+ | glvq-u | rtn | gptq | fixed-lattice | gcd
+    ("glvq+" = beyond-paper: per-output-column RMS normalization before the
+    lattice, absorbing per-channel dynamic range like AWQ/RTN scales do.)
+    ``bits`` may be fractional for glvq (SDBA mixes widths per Sec 4.3).
+    """
+    qcfg = qcfg or GLVQConfig()
+    bits = bits if bits is not None else float(qcfg.bits)
+    blocks = params["blocks"][0]
+    r = cfg.n_repeats
+    new_blocks = blocks
+    mses = []
+    for i in range(r):
+        p = layer_slice(blocks, i)
+        for grp, wname in [("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+                           ("attn", "wo"), ("mlp", "w1"), ("mlp", "w3"),
+                           ("mlp", "w2")]:
+            if wname not in p[grp]:
+                continue
+            w = p[grp][wname]
+            h = None
+            if h_acc is not None:
+                h = jnp.asarray(h_acc[i][_TAP_OF_WEIGHT[wname]], jnp.float32)
+            w_hat = _quantize_one(w, h, method, qcfg, bits)
+            mses.append(float(jnp.mean((w - w_hat) ** 2)))
+            p[grp][wname] = w_hat.astype(w.dtype)
+        new_blocks = layer_set(new_blocks, i, p)
+    out = dict(params, blocks=(new_blocks,))
+    return out, QuantReport(method=method, bits=bits, layer_mse=mses)
+
+
+def _quantize_one(w, h, method: str, qcfg: GLVQConfig, bits: float):
+    k, n = w.shape
+    gs = qcfg.group_size
+    if method == "glvq+":
+        # beyond-paper: per-output-column RMS scale, lattice on normalized W
+        cs = jnp.sqrt(jnp.mean(w.astype(jnp.float32) ** 2, axis=0,
+                               keepdims=True)) + 1e-12
+        wh = _quantize_one(w / cs, h, "glvq", qcfg, bits)
+        return (wh * cs).astype(w.dtype)
+    if method == "rtn":
+        return rtn_quantize(w, int(round(bits)), gs)
+    if method == "gptq":
+        hh = h if h is not None else jnp.eye(k)
+        return gptq_quantize(w, hh, int(round(bits)), gs)
+
+    # lattice family -----------------------------------------------------
+    cfg_l = qcfg
+    if method == "fixed-lattice":
+        cfg_l = dataclasses.replace(qcfg, learn_lattice=False,
+                                    use_companding=False)
+    if method == "gcd":
+        cfg_l = dataclasses.replace(qcfg, rounding="gcd")
+    n_groups = k // gs
+    if method == "glvq-u" or method == "fixed-lattice" or method == "gcd" \
+            or float(bits).is_integer():
+        bpg = np.full(n_groups, int(round(bits)), np.int32)
+    else:
+        s = np.asarray(group_salience(w, h, gs))
+        v = np.var(np.asarray(w).reshape(n_groups, -1), axis=1)
+        bpg = fractional_bits(s, v, bits)
+    if method == "glvq" and float(bits).is_integer() and cfg_l.bit_allocation:
+        bpg = sdba_fn(w, h, gs, int(round(bits)))
+    q = quantize_layer(w, h, cfg_l, jnp.asarray(bpg))
+    return dequantize_layer(q, cfg_l)

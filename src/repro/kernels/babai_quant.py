@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: blocked Babai rounding (quantization time).
+
+    codes[K, N] = clip(round(G^{-1} F_mu(W / scale)))
+
+Grid = (K/group_size, N/Nb). Each step loads one [gs, Nb] weight tile,
+compands it, and runs the (gs*Nb/d, d) @ (d, d) coordinate matmul on the MXU
+before round+clip. Throughput-critical when quantizing multi-billion-param
+models (every Alg. 1 iteration re-rounds the whole layer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, ginv_ref, mu_ref, scale_ref, out_ref, *,
+            bits: int, d: int, group_size: int, n_block: int):
+    w = w_ref[0].astype(jnp.float32)          # [gs, Nb]
+    mu = mu_ref[0]
+    scale = scale_ref[0]
+    wn = w / scale
+    y = jnp.sign(wn) * jnp.log1p(mu * jnp.abs(wn)) / jnp.log1p(mu)
+    v = y.reshape(group_size * n_block // d, d)
+    ginv = ginv_ref[0]                        # [d, d]
+    coords = jax.lax.dot_general(v, ginv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    lo = -(2 ** (bits - 1)) if bits > 1 else -1
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 0
+    z = jnp.clip(jnp.round(coords), lo, hi).astype(jnp.int32)
+    out_ref[0] = z.reshape(group_size, n_block)
+
+
+def babai_quantize_pallas(w, g_inv, mu, scale, *, bits: int, d: int,
+                          group_size: int = 128, n_block: int = 512,
+                          interpret: bool = True):
+    """Raw pallas_call; use kernels.ops.babai_quantize for padding."""
+    k, n = w.shape
+    n_groups = k // group_size
+    assert n % n_block == 0 and n_block % d == 0 and k % group_size == 0
+
+    grid = (n_groups, n // n_block)
+    kernel = functools.partial(_kernel, bits=bits, d=d, group_size=group_size,
+                               n_block=n_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group_size, n_block), lambda kg, j: (kg, 0, j)),
+            pl.BlockSpec((1, d, d), lambda kg, j: (kg, 0, 0)),
+            pl.BlockSpec((1,), lambda kg, j: (kg,)),
+            pl.BlockSpec((1,), lambda kg, j: (kg,)),
+        ],
+        out_specs=pl.BlockSpec((1, group_size, n_block), lambda kg, j: (kg, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group_size, n), jnp.int32),
+        interpret=interpret,
+    )(w.reshape(n_groups, group_size, n), g_inv, mu, scale).reshape(k, n)

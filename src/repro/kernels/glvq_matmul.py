@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused GLVQ decode + GEMM.
+
+    y[M, N] = x[M, K] @ dequant(packed codes)
+
+The weight never materializes in HBM: each grid step streams one packed-code
+tile (b/16 of the bf16 bytes) into VMEM, unpacks b-bit fields with broadcasted
+shifts (VPU), decodes the lattice with a (128*Nb/d, d) @ (d, d) matmul (MXU),
+applies the inverse mu-law + scale, and accumulates the [Mb, Nb] GEMM tile.
+
+Grid = (M/Mb, Npad/Nb, K/group_size); the K axis is innermost so the f32
+accumulator lives in the output VMEM block across the reduction.
+
+Block-size rules (enforced by ops.glvq_matmul):
+  * Nb % lcm(per_word, d) == 0  (whole uint32 words + whole lattice vectors)
+  * group_size == 128 (paper default; one group per K-step)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import per_word as _per_word
+
+
+def _kernel(x_ref, packed_ref, g_ref, mu_ref, scale_ref, out_ref, *,
+            bits: int, d: int, group_size: int, n_block: int):
+    pw = _per_word(bits)
+    kg = pl.program_id(2)
+
+    @pl.when(kg == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    words = packed_ref[0]                                  # [gs, Nb/pw] uint32
+    shifts = (jnp.arange(pw, dtype=jnp.uint32) * bits)[None, None, :]
+    fields = (words[:, :, None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    f = fields.reshape(group_size, n_block).astype(jnp.int32)
+    z = f - 2 * (f & (1 << (bits - 1)))                    # sign extend
+    zf = z.astype(jnp.float32).reshape(group_size * n_block // d, d)
+
+    g = g_ref[0]                                           # [d, d]
+    y = jax.lax.dot_general(zf, g, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y.reshape(group_size, n_block)
+
+    mu = mu_ref[0]
+    scale = scale_ref[0]
+    w = jnp.sign(y) * jnp.expm1(jnp.abs(y) * jnp.log1p(mu)) / mu
+    w = w * scale                                          # [gs, Nb] f32
+
+    x = x_ref[...].astype(jnp.float32)                     # [Mb, gs]
+    out_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def glvq_matmul_pallas(x, packed, g, mu, scale, *, bits: int, d: int,
+                       group_size: int = 128, m_block: int = 128,
+                       n_block: int = 512, interpret: bool = True):
+    """Raw pallas_call; use kernels.ops.glvq_matmul for padding/validation."""
+    m, k = x.shape
+    n_words = packed.shape[1]
+    pw = _per_word(bits)
+    n_pad = n_words * pw
+    n_groups = k // group_size
+    assert n_block % pw == 0 and n_block % d == 0 and n_pad % n_block == 0
+    assert m % m_block == 0 and k % group_size == 0
+    wb = n_block // pw
+
+    grid = (m // m_block, n_pad // n_block, n_groups)
+    kernel = functools.partial(_kernel, bits=bits, d=d, group_size=group_size,
+                               n_block=n_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_block, group_size), lambda i, j, kg: (i, kg)),
+            pl.BlockSpec((1, group_size, wb),
+                         lambda i, j, kg: (kg, 0, j)),
+            pl.BlockSpec((1, d, d), lambda i, j, kg: (kg, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j, kg: (kg,)),
+            pl.BlockSpec((1,), lambda i, j, kg: (kg,)),
+        ],
+        out_specs=pl.BlockSpec((m_block, n_block), lambda i, j, kg: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_pad), jnp.float32),
+        interpret=interpret,
+    )(x, packed.reshape(n_groups, group_size, n_words), g, mu, scale)

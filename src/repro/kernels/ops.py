@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handles block-size selection, padding to block multiples, and backend
+selection: on CPU (this container) the kernels run in interpret mode to
+validate the kernel bodies; on TPU set interpret=False for compiled Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import per_word
+from repro.kernels.babai_quant import babai_quantize_pallas
+from repro.kernels.glvq_matmul import glvq_matmul_pallas
+
+__all__ = ["glvq_matmul", "babai_quantize", "pick_n_block"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_n_block(n_pad: int, bits: int, d: int, target: int = 512) -> int:
+    """Largest Nb <= target with Nb % (per_word*d) == 0 and Nb | n_pad."""
+    unit = per_word(bits) * d // math.gcd(per_word(bits), d)
+    best = unit
+    nb = unit
+    while nb <= min(target, n_pad):
+        if n_pad % nb == 0:
+            best = nb
+        nb += unit
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "group_size",
+                                             "n", "interpret"))
+def glvq_matmul(x, packed, g, mu, scale, *, bits: int, d: int, n: int,
+                group_size: int = 128, interpret: bool | None = None):
+    """y = x @ dequant(codes);  x [M, K], packed [K, n_words] -> y [M, n]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, k = x.shape
+    pw = per_word(bits)
+    n_pad = packed.shape[1] * pw
+    m_block = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+    mb_pad = -m % m_block
+    if mb_pad:
+        x = jnp.pad(x, ((0, mb_pad), (0, 0)))
+    n_block = pick_n_block(n_pad, bits, d)
+    out = glvq_matmul_pallas(x, packed, g, mu, scale, bits=bits, d=d,
+                             group_size=group_size, m_block=m_block,
+                             n_block=n_block, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "d", "group_size",
+                                             "interpret"))
+def babai_quantize(w, g_inv, mu, scale, *, bits: int, d: int,
+                   group_size: int = 128, interpret: bool | None = None):
+    """codes[K, N] = clip(round(G^{-1} F_mu(W / scale)))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    k, n = w.shape
+    n_block = pick_n_block(n, 8, d, target=512)  # only needs d | Nb | N
+    if n % n_block:
+        n_block = d
+    return babai_quantize_pallas(w, g_inv, mu, scale, bits=bits, d=d,
+                                 group_size=group_size, n_block=n_block,
+                                 interpret=interpret)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import companding, packing
+
+__all__ = ["glvq_matmul_ref", "glvq_dequant_ref", "babai_quantize_ref"]
+
+
+def glvq_dequant_ref(packed, g, mu, scale, *, bits: int, d: int, n: int,
+                     group_size: int = 128) -> jax.Array:
+    """uint32 [K, n_words] payload -> f32 W [K, N]."""
+    codes = packing.unpack_codes(packed, bits, n)           # [K, N] int32
+    k = codes.shape[0]
+    n_g = k // group_size
+    z = codes.reshape(n_g, group_size, n // d, d).astype(jnp.float32)
+    y = jnp.einsum("gsvd,ged->gsve", z, g)                  # w_vec = G z
+    y = y.reshape(n_g, group_size, n)
+    w = companding.expand(y, mu[:, None, None]) * scale[:, None, None]
+    return w.reshape(k, n)
+
+
+def glvq_matmul_ref(x, packed, g, mu, scale, *, bits: int, d: int, n: int,
+                    group_size: int = 128, out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(W);  x [M, K]."""
+    w = glvq_dequant_ref(packed, g, mu, scale, bits=bits, d=d, n=n,
+                         group_size=group_size)
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def babai_quantize_ref(w, g_inv, mu, scale, *, bits: int, d: int,
+                       group_size: int = 128) -> jax.Array:
+    """f32 W [K, N] -> int32 codes [K, N] (Babai rounding w/ companding)."""
+    k, n = w.shape
+    n_g = k // group_size
+    wn = w.reshape(n_g, group_size, n) / scale[:, None, None]
+    y = companding.compand(wn, mu[:, None, None])
+    v = y.reshape(n_g, group_size, n // d, d)
+    coords = jnp.einsum("gsvd,ged->gsve", v, g_inv)
+    lo = -(2 ** (bits - 1)) if bits > 1 else -1
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 0
+    z = jnp.clip(jnp.round(coords), lo, hi).astype(jnp.int32)
+    return z.reshape(k, n)

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit SPMD
+partitioning must succeed for the 16x16 single-pod mesh and the 2x16x16
+multi-pod mesh, for every assigned architecture and input shape. Emits
+memory_analysis / cost_analysis / collective-byte summaries consumed by the
+roofline report (EXPERIMENTS.md).
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first backend init) — which is why this module must not be imported by
+tests or benchmarks (they want the real 1-CPU backend).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, ASSIGNED, get_config
+from repro.configs.base import SHAPES
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import registry
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the optimized HLO."""
+    stats = {op: dict(count=0, bytes=0.0) for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        op = op.rstrip(".0123456789")
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start" or op == c + "-done":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += _shape_bytes(shape_str)
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _analyses(lowered, compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals",
+                             "bytes accessed output", "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        out["cost"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        out["memory"] = {k: int(getattr(ma, k)) for k in keys
+                         if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    out["collectives"] = collective_stats(hlo)
+    out["hlo_lines"] = hlo.count("\n")
+    return out
+
+
+def roofline_terms(analysis: dict, n_chips: int) -> dict:
+    """Three roofline terms (seconds) from the per-device compiled program.
+
+    ``memory_s`` uses XLA's per-device "bytes accessed" — on the CPU dry-run
+    backend this is inflated by unfused bf16<->f32 ``convert``/``copy`` ops
+    that are free on TPU (MXU-native bf16, aggressive fusion).
+    ``memory_floor_s`` is the fusion-ideal bound: every per-device input read
+    once + every output written once (argument+output size). The achievable
+    TPU number lies between the two; we report both.
+    """
+    cost = analysis.get("cost", {})
+    flops = cost.get("flops", 0.0)              # per-device
+    bytes_acc = cost.get("bytes accessed", 0.0)  # per-device
+    coll = analysis.get("collectives", {}).get("total_bytes", 0.0)
+    mem = analysis.get("memory", {})
+    floor_bytes = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0))
+    return dict(
+        compute_s=flops / HW["peak_flops_bf16"],
+        memory_s=bytes_acc / HW["hbm_bw"],
+        memory_floor_s=floor_bytes / HW["hbm_bw"],
+        collective_s=coll / HW["ici_bw"],
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        floor_bytes_per_device=floor_bytes,
+        collective_bytes_per_device=coll,
+        n_chips=n_chips,
+    )
+
+
+def _lower_one(cfg, shape, mesh, *, unroll, quant_bits, quant_d, zero, remat,
+               grad_compression):
+    from repro.launch import serve as serve_lib
+    from repro.launch import train as train_lib
+    if shape.kind == "train":
+        batch_sds = registry.input_specs(cfg, shape)
+        return train_lib.lower_train(cfg, mesh, batch_sds, zero=zero,
+                                     remat=remat, unroll=unroll,
+                                     grad_compression=grad_compression)
+    if shape.kind == "prefill":
+        batch_sds = registry.input_specs(cfg, shape)
+        return serve_lib.lower_prefill(cfg, mesh, batch_sds,
+                                       quant_bits=quant_bits,
+                                       quant_d=quant_d, unroll=unroll)
+    return serve_lib.lower_decode(cfg, mesh, shape, quant_bits=quant_bits,
+                                  quant_d=quant_d, unroll=unroll)
+
+
+def _delta_correct(a1: dict, a2: dict, repeats: int) -> dict:
+    """Scan bodies are costed ONCE by XLA's cost analysis regardless of trip
+    count (verified on this backend). Compiling at scan-unroll factors 1 and 2
+    isolates the per-repeat body cost: total = c1 + (R - 1) * max(c2 - c1, 0).
+    """
+    out = dict(a1)
+    cost = {}
+    for k in set(a1.get("cost", {})) | set(a2.get("cost", {})):
+        v1 = a1["cost"].get(k, 0.0)
+        v2 = a2["cost"].get(k, 0.0)
+        if isinstance(v1, str) or isinstance(v2, str):
+            continue
+        cost[k] = v1 + (repeats - 1) * max(v2 - v1, 0.0)
+    out["cost"] = cost
+    c1 = a1.get("collectives", {})
+    c2 = a2.get("collectives", {})
+    coll = {}
+    for op in _COLLECTIVES:
+        b1 = c1.get(op, {}).get("bytes", 0.0)
+        b2 = c2.get(op, {}).get("bytes", 0.0)
+        n1 = c1.get(op, {}).get("count", 0)
+        n2 = c2.get(op, {}).get("count", 0)
+        coll[op] = dict(
+            count=n1 + (repeats - 1) * max(n2 - n1, 0),
+            bytes=b1 + (repeats - 1) * max(b2 - b1, 0.0))
+    coll["total_bytes"] = sum(v["bytes"] for v in coll.values()
+                              if isinstance(v, dict))
+    out["collectives"] = coll
+    out["scan_correction"] = dict(repeats=repeats,
+                                  raw_flops=a1.get("cost", {}).get("flops"),
+                                  unroll2_flops=a2.get("cost", {}).get("flops"))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant_bits: int = 0, zero: bool = True, remat: bool = True,
+             grad_compression: bool = False, quant_d: int = 16) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return analysis dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = registry.supports_shape(cfg, shape)
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               quant_bits=quant_bits, zero=zero, remat=remat,
+               grad_compression=grad_compression)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+    kw = dict(quant_bits=quant_bits, quant_d=quant_d, zero=zero, remat=remat,
+              grad_compression=grad_compression)
+    try:
+        lowered = _lower_one(cfg, shape, mesh, unroll=1, **kw)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        a1 = _analyses(lowered, compiled)
+        # second compile at unroll=2 to expose the per-scan-repeat cost
+        lowered2 = _lower_one(cfg, shape, mesh, unroll=2, **kw)
+        a2 = _analyses(lowered2, lowered2.compile())
+        analysis = _delta_correct(a1, a2, cfg.n_repeats)
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), **analysis)
+        rec["roofline"] = roofline_terms(analysis, n_chips)
+        rec["model_flops_6nd"] = model_flops(cfg, shape)
+        r = rec["roofline"]
+        total_flops = r["flops_per_device"] * n_chips
+        rec["useful_flops_ratio"] = (rec["model_flops_6nd"] / total_flops
+                                     if total_flops else None)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.enc_layers:
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // cfg.frontend_stride)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all' (assigned 10), or comma list")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--quant-d", type=int, default=16)
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = list(ASSIGNED) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}" \
+                    + (f"_q{args.quant_bits}" if args.quant_bits else "") \
+                    + ("_nozero" if args.no_zero else "") \
+                    + ("_gc" if args.grad_compression else "")
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               quant_bits=args.quant_bits,
+                               quant_d=args.quant_d,
+                               zero=not args.no_zero,
+                               remat=not args.no_remat,
+                               grad_compression=args.grad_compression)
+                (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f"comp {r['compute_s']:.2e}s mem {r['memory_s']:.2e}s "
+                             f"coll {r['collective_s']:.2e}s "
+                             f"[{rec['compile_s']:.0f}s compile]")
+                elif st == "error":
+                    extra = rec["error"][:160]
+                print(f"[dryrun] {tag:55s} {st:7s} {extra}", flush=True)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production mesh definitions (TPU v5e pods; 256 chips/pod).
+
+Functions, not module constants: importing this module never touches jax
+device state (required for the dry-run's forced host-device count).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+# TPU v5e hardware constants used by the roofline analysis
+HW = dict(
+    peak_flops_bf16=197e12,     # per chip
+    hbm_bw=819e9,               # bytes/s per chip
+    ici_bw=50e9,                # bytes/s per link
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small CPU mesh for tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,108 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HW
+
+ARCH_ORDER = ["minicpm-2b", "nemotron-4-15b", "deepseek-7b", "qwen3-1.7b",
+              "qwen2-vl-7b", "olmoe-1b-7b", "dbrx-132b", "whisper-large-v3",
+              "recurrentgemma-9b", "mamba2-1.3b", "llama2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir: Path):
+    recs = []
+    for f in sorted(outdir.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    key = lambda r: (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
+                     else 99,
+                     SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER
+                     else 99)
+    return sorted(recs, key=key)
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1), ("ms", 1e-3), ("µs", 1e-6), ("ns", 1e-9)):
+        if abs(x) >= scale:
+            return f"{x / scale:.2f} {unit}"
+    return f"{x:.1e} s"
+
+
+def dominant(r):
+    terms = dict(compute=r["compute_s"], memory=r["memory_s"],
+                 collective=r["collective_s"])
+    return max(terms, key=terms.get)
+
+
+def roofline_fraction(rec):
+    """compute_term / max(all terms): 1.0 == perfectly compute-bound."""
+    r = rec["roofline"]
+    top = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if top <= 0:
+        return 0.0
+    return r["compute_s"] / top
+
+
+def table(recs, *, mesh="16x16", quant=0):
+    rows = ["| arch | shape | compute | memory (HLO) | memory (floor) | "
+            "collective | bound | useful-FLOPs | roofline frac |",
+            "|---" * 9 + "|"]
+    for rec in recs:
+        if rec.get("mesh") != mesh or rec.get("quant_bits", 0) != quant:
+            continue
+        if rec["status"] == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                        f"skipped (long-context rule) | — | — |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | ERROR "
+                        f"{rec.get('error', '')[:60]} | | | | | | |")
+            continue
+        r = rec["roofline"]
+        ur = rec.get("useful_flops_ratio")
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r.get('memory_floor_s'))} | "
+            f"{fmt_s(r['collective_s'])} | {dominant(r)} | "
+            f"{ur:.2f} | {roofline_fraction(rec):.4f} |"
+            if ur is not None else
+            f"| {rec['arch']} | {rec['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r.get('memory_floor_s'))} | "
+            f"{fmt_s(r['collective_s'])} | {dominant(r)} | — | "
+            f"{roofline_fraction(rec):.4f} |")
+    return "\n".join(rows)
+
+
+def insert_tables(md_path: Path, outdir: Path):
+    recs = load(outdir)
+    md = md_path.read_text()
+    md = md.replace("<!-- ROOFLINE_TABLE_SINGLE -->", table(recs, mesh="16x16"))
+    md = md.replace("<!-- ROOFLINE_TABLE_MULTI -->", table(recs, mesh="2x16x16"))
+    md_path.write_text(md)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun_opt")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--quant", type=int, default=0)
+    ap.add_argument("--insert", default="",
+                    help="path to EXPERIMENTS.md: replace placeholders")
+    args = ap.parse_args(argv)
+    if args.insert:
+        insert_tables(Path(args.insert), Path(args.dir))
+        print(f"tables inserted into {args.insert}")
+        return
+    recs = load(Path(args.dir))
+    print(table(recs, mesh=args.mesh, quant=args.quant))
+
+
+if __name__ == "__main__":
+    main()

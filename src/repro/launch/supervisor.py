@@ -1,0 +1,75 @@
+"""Training supervisor: restart-on-failure around the train loop.
+
+At cluster scale the scheduler restarts failed jobs; this module is the
+in-process equivalent used by the launcher and by the fault-tolerance tests:
+it resumes from the latest committed checkpoint after any exception, bounded
+by ``max_restarts``, with optional deterministic failure injection for tests.
+Combined with CheckpointManager's atomic commits this gives exactly-once
+training semantics per step (bit-exact resume is covered in
+tests/test_substrate.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import make_batch, markov_tokens
+from repro.launch.train import make_train_step, opt_init
+from repro.models import registry
+from repro.optim import AdamWConfig
+
+__all__ = ["SimulatedFailure", "supervised_train"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected crash (tests / chaos drills)."""
+
+
+def supervised_train(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                     steps: int, batch: int, seq: int, ckpt_dir: str,
+                     ckpt_every: int = 10, max_restarts: int = 5,
+                     fail_at: Optional[Iterable[int]] = None,
+                     seed: int = 0, dtype=jnp.float32):
+    """Run training to completion, restarting from checkpoints on failure.
+
+    ``fail_at``: steps at which to raise SimulatedFailure ONCE each (the
+    retry will pass them). Returns (params, opt_state, n_restarts, losses).
+    """
+    fail_pending = set(fail_at or ())
+    mgr = CheckpointManager(ckpt_dir, keep=3)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False, dtype=dtype))
+    stream = markov_tokens(cfg.vocab, max(batch * seq * 4, 65_536), seed)
+    restarts = 0
+    losses = {}
+
+    while True:
+        params = registry.init_params(jax.random.PRNGKey(seed), cfg)
+        opt_state = opt_init(params)
+        start = -1
+        latest = mgr.latest_step()
+        if latest is not None:
+            params, opt_state = mgr.restore(latest, (params, opt_state))
+            start = latest
+        try:
+            for step in range(start + 1, steps):
+                if step in fail_pending:
+                    fail_pending.discard(step)
+                    raise SimulatedFailure(f"injected at step {step}")
+                b = make_batch(cfg, batch, seq, seed * 100_003 + step, stream)
+                params, opt_state, m = step_fn(params, opt_state, b)
+                losses[step] = float(m["loss"])
+                if step % ckpt_every == 0 or step == steps - 1:
+                    mgr.save(step, (params, opt_state))
+            mgr.wait()
+            return params, opt_state, restarts, losses
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            # fall through: reload from the latest committed checkpoint

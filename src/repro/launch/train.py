@@ -1,0 +1,150 @@
+"""Distributed training driver: step builder + checkpointed CLI loop."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_round
+from repro.parallel import sharding
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, dtype=jnp.bfloat16,
+                    grad_compression: bool = False, unroll: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(p, batch, cfg, dtype=dtype, remat=remat,
+                                       unroll=unroll)
+        )(params)
+        if grad_compression:
+            # int8 error-feedback compression of the gradient stream
+            new_res = {}
+            comp = {}
+            flat, tree = jax.tree_util.tree_flatten_with_path(grads)
+            res_flat = jax.tree_util.tree_leaves(opt_state["ef_residual"])
+            outs = [ef_round(g, r) for (_, g), r in zip(flat, res_flat)]
+            grads = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+            opt_state = dict(opt_state, ef_residual=jax.tree_util.tree_unflatten(
+                tree, [o[1] for o in outs]))
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, {k: opt_state[k] for k in ("m", "v", "step")})
+        if grad_compression:
+            new_opt = dict(new_opt, ef_residual=opt_state["ef_residual"])
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def opt_init(params, *, grad_compression: bool = False):
+    state = adamw_init(params)
+    if grad_compression:
+        state["ef_residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def shardings_for_train(cfg: ModelConfig, mesh: Mesh, params_sds, batch_sds,
+                        *, zero: bool = True, grad_compression: bool = False):
+    """(in_shardings, out_shardings) pytrees for jit(train_step)."""
+    p_specs = sharding.param_specs(params_sds, mesh)
+    o_inner = {k: (sharding.zero_shard_specs(p_specs, params_sds, mesh)
+                   if zero else p_specs) for k in ("m", "v")}
+    o_specs = dict(o_inner, step=P())
+    if grad_compression:
+        o_specs["ef_residual"] = o_inner["m"]
+    b_specs = sharding.batch_specs(batch_sds, mesh)
+    metric_specs = dict(lr=P(), grad_norm=P(), loss=P())
+    return (p_specs, o_specs, b_specs), (p_specs, o_specs, metric_specs)
+
+
+def lower_train(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
+                zero: bool = True, remat: bool = True,
+                grad_compression: bool = False, opt_cfg=None,
+                unroll: int = 1):
+    """AOT-lower the train step for ShapeDtypeStruct inputs (dry-run path)."""
+    opt_cfg = opt_cfg or AdamWConfig(schedule=cfg.lr_schedule
+                                     if cfg.lr_schedule != "wsd" else "wsd")
+    params_sds = registry.param_shapes(cfg)
+    opt_sds = jax.eval_shape(
+        functools.partial(opt_init, grad_compression=grad_compression),
+        params_sds)
+    step = make_train_step(cfg, opt_cfg, remat=remat,
+                           grad_compression=grad_compression, unroll=unroll)
+    in_sh, out_sh = shardings_for_train(cfg, mesh, params_sds, batch_sds,
+                                        zero=zero,
+                                        grad_compression=grad_compression)
+    jitted = jax.jit(step,
+                     in_shardings=sharding.named(in_sh, mesh),
+                     out_shardings=sharding.named(out_sh, mesh),
+                     donate_argnums=(0, 1))
+    with mesh:
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# CLI: real (small-scale) training with checkpoint/restart
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    from repro.ckpt.manager import CheckpointManager
+    from repro.data.synthetic import token_batches
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1),
+                          schedule="wsd" if cfg.lr_schedule == "wsd" else "cosine")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_init(params)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start = mgr.latest_step()
+    if start is not None:
+        params, opt_state = mgr.restore(start, (params, opt_state))
+        print(f"[train] resumed from step {start}")
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False,
+                                      dtype=jnp.float32))
+    t0 = time.time()
+    for step, batch in enumerate(token_batches(cfg, args.batch, args.seq,
+                                               args.steps, seed=0)):
+        if start is not None and step <= start:
+            continue
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0):.1f}s)")
+        if step and step % args.ckpt_every == 0:
+            mgr.save(step, (params, opt_state))
+    mgr.save(args.steps - 1, (params, opt_state))
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: unified LM (dense/moe/vlm/hybrid/ssm) + whisper enc-dec."""
+from repro.models import registry

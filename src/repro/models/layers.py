@@ -1,0 +1,387 @@
+"""Shared neural net layers (functional, pytree params, no framework deps).
+
+All linear weights are stored [in, out] (y = x @ W) so GLVQ's input-channel
+grouping applies directly. Initializers return pytrees of f32 arrays; forward
+functions accept a ``dtype`` for compute casting (bf16 on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (default + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_cos_sin(pos, hd: int, theta: float, dtype):
+    """pos [...], returns cos/sin [..., hd//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, pos, theta: float):
+    """x [B, S, H, hd], pos [B, S] -> rotated x."""
+    hd = x.shape[-1]
+    cos, sin = _rope_cos_sin(pos, hd, theta, x.dtype)   # [B, S, hd/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def apply_mrope(x, pos3, sections: Tuple[int, int, int], theta: float):
+    """Qwen2-VL multimodal RoPE. pos3 [3, B, S]; sections sum to hd//2."""
+    hd = x.shape[-1]
+    cs = [_rope_cos_sin(pos3[i], hd, theta, x.dtype) for i in range(3)]
+    # select section of the hd/2 frequency axis per position stream
+    cos = jnp.concatenate([cs[i][0][..., sum(sections[:i]):sum(sections[:i + 1])]
+                           for i in range(3)], axis=-1)
+    sin = jnp.concatenate([cs[i][1][..., sum(sections[:i]):sum(sections[:i + 1])]
+                           for i in range(3)], axis=-1)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = dict(
+        ln=jnp.ones((d,), jnp.float32),
+        wq=dense_init(ks[0], d, cfg.n_heads * hd),
+        wk=dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        wv=dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        wo=dense_init(ks[3], cfg.n_heads * hd, d),
+    )
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, pos, *, cross_kv=None):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    src = cross_kv if cross_kv is not None else x
+    sk = src.shape[1]
+    k = (src @ p["wk"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = (src @ p["wv"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cross_kv is None and cfg.rope_kind == "default":
+        q, k = apply_rope(q, pos, cfg.rope_theta), apply_rope(k, pos, cfg.rope_theta)
+    elif cross_kv is None and cfg.rope_kind == "mrope":
+        q = apply_mrope(q, pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q [B,S,H,hd]; k/v [B,Sk,KV,hd]; mask broadcastable to [B,H,S,Sk]."""
+    b, s, h, hd = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    q = q.reshape(b, s, kv, n_rep, hd)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, dtype=jnp.bool_):
+    return jnp.tril(jnp.ones((s, s), dtype))[None, None, None]  # [1,1,1,S,S]
+
+
+def attention(p, x, cfg: ModelConfig, pos, *, causal: bool = True,
+              cross_kv=None):
+    """Full (global) attention; causal for decoders."""
+    b, s, d = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, x, cfg, pos, cross_kv=cross_kv)
+    mask = None
+    if causal and cross_kv is None:
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))[None, None, None]
+    out = _sdpa(q, k, v, mask, n_rep)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def local_attention(p, x, cfg: ModelConfig, pos):
+    """Sliding-window causal attention, blocked so cost is O(S * 2W).
+
+    Queries in block i attend to keys in blocks i-1 and i within the window.
+    """
+    b, s, d = x.shape
+    w = cfg.window
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, x, cfg, pos)
+    pad = -s % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nb = sp // w
+    qb = q.reshape(b, nb, w, cfg.n_heads, cfg.hd)
+    kb = k.reshape(b, nb, w, cfg.n_kv_heads, cfg.hd)
+    vb = v.reshape(b, nb, w, cfg.n_kv_heads, cfg.hd)
+    # keys: previous block ++ own block  -> [b, nb, 2w, kv, hd]
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    # mask: query t (in-block), key u in [0, 2w): absolute distance
+    t = jnp.arange(w)[:, None]
+    u = jnp.arange(2 * w)[None, :]
+    dist = (t + w) - u
+    base = (dist >= 0) & (dist < w)              # causal: self + (w-1) back
+    first_block = jnp.arange(nb)[:, None, None] > 0
+    valid_prev = (u < w)[None]
+    mask = base[None] & (first_block | ~valid_prev)  # block 0 has no prev keys
+    mask = mask[None, :, None, None]                 # [1, nb, 1, 1, w, 2w]
+
+    qb2 = qb.reshape(b, nb, w, cfg.n_kv_heads, n_rep, cfg.hd)
+    scores = jnp.einsum("bnsgrd,bntgd->bngrst", qb2, k2).astype(jnp.float32)
+    scores = scores * (cfg.hd ** -0.5)
+    mask_b = jnp.broadcast_to(mask, (1, nb, 1, 1, w, 2 * w))
+    scores = jnp.where(mask_b[:, :, :, :, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v2.dtype)
+    out = jnp.einsum("bngrst,bntgd->bnsgrd", probs, v2)
+    out = out.reshape(b, sp, cfg.n_heads * cfg.hd)[:, :s]
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
+    """One-token decode. x [B, 1, D]; cache dict(k, v) [B, S_cache, KV, hd];
+    pos [B] current absolute position. Window > 0 => ring buffer cache."""
+    b = x.shape[0]
+    hd = cfg.hd
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos_b = pos[:, None] if pos.ndim else jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.rope_kind == "default":
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        pos3 = jnp.broadcast_to(pos_b[None], (3, b, 1))
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    s_cache = cache["k"].shape[1]
+    if pos.ndim == 0:
+        # uniform decode position: one in-place dynamic_update_slice on the
+        # whole batch (avoids the per-row scatter the vmapped form lowers to)
+        slot = (pos % window) if window else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        idx = jnp.arange(s_cache)[None, :]
+        if window:
+            valid = jnp.broadcast_to(idx < jnp.minimum(pos + 1, s_cache),
+                                     (k.shape[0], s_cache))
+        else:
+            valid = jnp.broadcast_to(idx <= pos, (k.shape[0], s_cache))
+    else:
+        slot = (pos % window) if window else pos
+        ck = jax.vmap(lambda c, i, u: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+            cache["k"], slot, k)
+        cv = jax.vmap(lambda c, i, u: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+            cache["v"], slot, v)
+        idx = jnp.arange(s_cache)[None, :]
+        if window:
+            valid = idx < jnp.minimum(pos + 1, s_cache)[:, None]
+        else:
+            valid = idx <= pos[:, None]
+    scores = jnp.einsum("bsgrd,btgd->bgrst",
+                        q.reshape(b, 1, cfg.n_kv_heads, n_rep, hd),
+                        ck).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
+    return out @ p["wo"].astype(x.dtype), dict(k=ck, v=cv)
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype):
+    return dict(
+        k=jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+        v=jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense + MoE)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = dict(ln=jnp.ones((d,), jnp.float32),
+             w1=dense_init(ks[0], d, f),
+             w2=dense_init(ks[1], f, d))
+    if cfg.act == "swiglu":
+        p["w3"] = dense_init(ks[2], d, f)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"].astype(x.dtype)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    init = lambda k, i, o: jax.random.normal(k, (e, i, o), jnp.float32) * (i ** -0.5)
+    p = dict(ln=jnp.ones((d,), jnp.float32),
+             router=dense_init(ks[0], d, e),
+             w1=init(ks[1], d, f),
+             w2=init(ks[2], f, d))
+    if cfg.act == "swiglu":
+        p["w3"] = init(ks[3], d, f)
+    return p
+
+
+def _constrain(x, *specs):
+    """Apply the first sharding constraint whose axes exist; no-op without a
+    mesh context (unit tests, single device)."""
+    from jax.sharding import PartitionSpec as P
+    for spec in specs:
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except Exception:
+            continue
+    return x
+
+
+_DP = (("pod", "data"),)   # batch-like dims: shard over all DP axes
+_DP1 = ("data",)
+
+
+def moe(p, x, cfg: ModelConfig, *, chunks: int = 0):
+    """Top-k MoE: CHUNKED sort-based capacity dispatch with explicit
+    shardings (chunks over the data axes, experts over the model axis).
+
+    Routing (top-k, sort, bucket indices) is chunk-local, so the only
+    cross-device traffic is the expert-parallel all-to-all moving bucketed
+    activations between the data and expert shardings — the sharding
+    constraints below pin that plan down for GSPMD (without them it
+    all-gathers the bucket arrays over the data axis: 60x more bytes).
+    Capacity is enforced per chunk (standard practice).
+    """
+    b, s, d = x.shape
+    t_all = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    if chunks <= 0:
+        chunks = min(32, t_all) if t_all >= 64 else 1
+    while t_all % chunks:
+        chunks -= 1
+    g = chunks
+    tc = t_all // g
+    cap = max(4, min(int(cfg.capacity_factor * tc * k / e), tc))
+
+    xc = _constrain(x.reshape(g, tc, d), (_DP[0], None, None),
+                    (_DP1[0], None, None), ())
+    gates = jax.nn.softmax(jnp.einsum(
+        "gtd,de->gte", xc, p["router"].astype(x.dtype)).astype(jnp.float32))
+    topv, topi = jax.lax.top_k(gates, k)                     # [g, tc, k]
+    topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+
+    n = tc * k
+    flat_e = topi.reshape(g, n)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(tc), k)[None], (g, n))
+    flat_w = topv.reshape(g, n)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    # GATHER-ONLY dispatch: expert e's bucket slots are the contiguous run
+    # [starts[e], starts[e]+cap) of the sorted order — no scatter anywhere
+    # (GSPMD partitions batched gathers along g cleanly; scatters it doesn't).
+    eids = jnp.arange(e)
+    starts = jax.vmap(lambda a: jnp.searchsorted(a, eids, side="left"))(se)
+    ends = jax.vmap(lambda a: jnp.searchsorted(a, eids, side="right"))(se)
+    src = starts[:, :, None] + jnp.arange(cap)[None, None, :]   # [g, e, cap]
+    valid = src < ends[:, :, None]
+    src_c = jnp.minimum(src, n - 1).reshape(g, e * cap)
+    tok = jnp.take_along_axis(st, src_c, axis=-1)               # [g, e*cap]
+    xb = jnp.take_along_axis(xc, tok[..., None], axis=1)
+    xb = xb.reshape(g, e, cap, d) * valid[..., None].astype(x.dtype)
+    # expert-parallel segment: chunks stay on data axes, experts on model
+    xb = _constrain(xb, (_DP[0], "model", None, None),
+                    (_DP1[0], "model", None, None), ())
+    h = jnp.einsum("gecd,edf->gecf", xb, p["w1"].astype(x.dtype))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xb,
+                                        p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    yb = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(x.dtype))
+    yb = yb * valid[..., None].astype(x.dtype)
+    # keep ybuf EXPERT-SHARDED: the combine gather then lowers to a masked
+    # partial gather + all-reduce of [g, tc*k, d] (tokens) instead of an
+    # all-gather of the full [g, e*cap, d] bucket array (1.25x larger and
+    # replicated to every model shard).
+    ybuf = yb.reshape(g, e * cap, d)
+    ybuf = _constrain(ybuf, (_DP[0], "model", None),
+                      (_DP1[0], "model", None), ())
+    # combine: unsort (argsort of a permutation = its inverse), then gather
+    # each token's k bucket slots — again no scatter.
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    pos_in_e = jnp.arange(n)[None] - first
+    keep = pos_in_e < cap
+    slot = jnp.minimum(se * cap + pos_in_e, e * cap - 1)        # [g, n] sorted
+    inv = jnp.argsort(order, axis=-1)
+    slot_tj = jnp.take_along_axis(slot, inv, axis=-1)           # [g, n] token order
+    keep_tj = jnp.take_along_axis(keep, inv, axis=-1)
+    contrib = jnp.take_along_axis(ybuf, slot_tj[..., None], axis=1)  # [g, n, d]
+    contrib = contrib * (flat_w * keep_tj).astype(x.dtype)[..., None]
+    out = contrib.reshape(g, tc, k, d).sum(axis=2)
+    return out.reshape(b, s, d)

@@ -1,0 +1,234 @@
+"""Unified decoder-only LM covering dense / moe / vlm / hybrid / ssm families.
+
+The layer stack is (scan_unit x n_repeats) + scan_tail; homogeneous params are
+stacked on a leading repeat axis and executed with jax.lax.scan (keeps the HLO
+small — essential for 512-way SPMD compiles) with optional remat.
+
+Block kinds: "attn" (global attention + MLP), "attn_local" (sliding-window
+attention + MLP), "attn_moe" (attention + MoE), "rglru" (RG-LRU + MLP),
+"mamba" (Mamba-2 SSD, no separate MLP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quantized
+from repro.models import layers, rglru, ssm
+from repro.models.layers import rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# block init / apply / decode
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind in ("attn", "attn_local"):
+        return dict(attn=layers.attn_init(k1, cfg), mlp=layers.mlp_init(k2, cfg))
+    if kind == "attn_moe":
+        return dict(attn=layers.attn_init(k1, cfg), moe=layers.moe_init(k2, cfg))
+    if kind == "rglru":
+        return dict(rec=rglru.rglru_init(k1, cfg), mlp=layers.mlp_init(k2, cfg))
+    if kind == "mamba":
+        return dict(m=ssm.mamba_init(k1, cfg))
+    raise ValueError(kind)
+
+
+def block_apply(p: Params, x, cfg: ModelConfig, kind: str, pos):
+    if kind in ("attn", "attn_local", "attn_moe"):
+        h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        if kind == "attn_local" and cfg.window:
+            x = x + layers.local_attention(p["attn"], h, cfg, pos)
+        else:
+            x = x + layers.attention(p["attn"], h, cfg, pos, causal=True)
+        if kind == "attn_moe":
+            h = rms_norm(x, p["moe"]["ln"], cfg.norm_eps)
+            return x + layers.moe(p["moe"], h, cfg)
+        h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, cfg)
+    if kind == "rglru":
+        x = x + rglru.rglru_forward(p["rec"], x, cfg)
+        h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, cfg)
+    if kind == "mamba":
+        return x + ssm.mamba_forward(p["m"], x, cfg)
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int, dtype):
+    if kind == "attn_local":
+        return layers.attn_cache_init(cfg, batch, min(cfg.window, s_cache), dtype)
+    if kind in ("attn", "attn_moe"):
+        return layers.attn_cache_init(cfg, batch, s_cache, dtype)
+    if kind == "rglru":
+        return rglru.rglru_cache_init(cfg, batch, dtype)
+    if kind == "mamba":
+        return ssm.mamba_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos):
+    if kind in ("attn", "attn_local", "attn_moe"):
+        h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        win = min(cfg.window, cache["k"].shape[1]) if kind == "attn_local" else 0
+        out, cache = layers.attention_decode(p["attn"], h, cfg, cache, pos,
+                                             window=win)
+        x = x + out
+        if kind == "attn_moe":
+            h = rms_norm(x, p["moe"]["ln"], cfg.norm_eps)
+            return x + layers.moe(p["moe"], h, cfg), cache
+        h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, cfg), cache
+    if kind == "rglru":
+        out, cache = rglru.rglru_decode(p["rec"], x, cfg, cache)
+        x = x + out
+        h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, cfg), cache
+    if kind == "mamba":
+        out, cache = ssm.mamba_decode(p["m"], x, cfg, cache)
+        return x + out, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model init / forward
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 4)
+    r = cfg.n_repeats
+    blocks = []
+    for i, kind in enumerate(cfg.scan_unit):
+        ks = jax.random.split(jax.random.fold_in(keys[0], i), r)
+        blocks.append(jax.vmap(lambda k: block_init(k, cfg, kind))(ks))
+    tail = [block_init(jax.random.fold_in(keys[1], i), cfg, kind)
+            for i, kind in enumerate(cfg.scan_tail)]
+    p = dict(
+        embed=jax.random.normal(keys[2], (cfg.vocab, cfg.d_model), jnp.float32)
+        * cfg.d_model ** -0.5,
+        final_ln=jnp.ones((cfg.d_model,), jnp.float32),
+        blocks=tuple(blocks),
+        tail=tail,
+    )
+    if not cfg.tie_embeddings:
+        p["head"] = layers.dense_init(keys[3], cfg.d_model, cfg.vocab)
+    return p
+
+
+def _backbone(params: Params, x, cfg: ModelConfig, pos, *, remat: bool = False,
+              qmeta=None, unroll: int = 1):
+    def unit_apply(x, unit_params):
+        if qmeta:
+            # streaming decode: dequantize only this repeat's weights (Sec 3.4)
+            unit_params = quantized.materialize_tree(unit_params, qmeta, x.dtype)
+        for kind, p in zip(cfg.scan_unit, unit_params):
+            x = block_apply(p, x, cfg, kind, pos)
+        return x
+
+    fn = jax.checkpoint(unit_apply) if remat else unit_apply
+
+    def body(x, unit_params):
+        return fn(x, unit_params), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
+    tail = params["tail"]
+    if qmeta:
+        tail = quantized.materialize_tree(tail, qmeta, x.dtype)
+    for kind, p in zip(cfg.scan_tail, tail):
+        x = block_apply(p, x, cfg, kind, pos)
+    return x
+
+
+def embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+                 dtype):
+    """tokens (+ vlm vision stub) -> x [B, S, D], pos."""
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.family == "vlm" and "vision" in batch:
+        x = jnp.concatenate([batch["vision"].astype(dtype), x], axis=1)
+    s = x.shape[1]
+    if cfg.rope_kind == "mrope":
+        pos = batch.get("pos3")
+        if pos is None:
+            p1 = jnp.broadcast_to(jnp.arange(s)[None], (x.shape[0], s))
+            pos = jnp.stack([p1, p1, p1])
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (x.shape[0], s))
+    return x, pos
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, dtype=jnp.bfloat16, remat: bool = False, qmeta=None,
+            unroll: int = 1):
+    """logits [B, S, V] (f32)."""
+    x, pos = embed_inputs(params, batch, cfg, dtype)
+    x = _backbone(params, x, cfg, pos, remat=remat, qmeta=qmeta, unroll=unroll)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head.astype(dtype)).astype(jnp.float32)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, dtype=jnp.bfloat16, remat: bool = True, unroll: int = 1):
+    logits = forward(params, batch, cfg, dtype=dtype, remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "vision" in batch:
+        # vision positions carry no LM loss
+        nvis = batch["vision"].shape[1]
+        logits = logits[:, nvis:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Params:
+    blocks = []
+    for kind in cfg.scan_unit:
+        one = block_cache_init(cfg, kind, batch, s_cache, dtype)
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape), one))
+    tail = [block_cache_init(cfg, kind, batch, s_cache, dtype)
+            for kind in cfg.scan_tail]
+    return dict(blocks=tuple(blocks), tail=tail)
+
+
+def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
+                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1):
+    """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache)."""
+    x = params["embed"].astype(dtype)[token][:, None, :]    # [B,1,D]
+
+    def body(x, inp):
+        unit_params, unit_cache = inp
+        if qmeta:
+            unit_params = quantized.materialize_tree(unit_params, qmeta, dtype)
+        new_caches = []
+        for kind, p, c in zip(cfg.scan_unit, unit_params, unit_cache):
+            x, nc = block_decode(p, x, cfg, kind, c, pos)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]),
+                                 unroll=unroll)
+    new_tail = []
+    tail = params["tail"]
+    if qmeta:
+        tail = quantized.materialize_tree(tail, qmeta, dtype)
+    for kind, p, c in zip(cfg.scan_tail, tail, cache["tail"]):
+        x, nc = block_decode(p, x, cfg, kind, c, pos)
+        new_tail.append(nc)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x[:, 0] @ head.astype(dtype)).astype(jnp.float32)
+    return logits, dict(blocks=new_blocks, tail=new_tail)

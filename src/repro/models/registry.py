@@ -1,0 +1,108 @@
+"""Model registry: uniform init / loss / decode API over all families,
+plus ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm, whisper
+
+Params = Dict[str, Any]
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.enc_layers > 0
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    if is_encdec(cfg):
+        return whisper.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    if is_encdec(cfg):
+        return whisper.loss_fn(params, batch, cfg, **kw)
+    return lm.loss_fn(params, batch, cfg, **kw)
+
+
+def forward(params, batch, cfg: ModelConfig, **kw):
+    if is_encdec(cfg):
+        return whisper.forward(params, batch, cfg, **kw)
+    return lm.forward(params, batch, cfg, **kw)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, **kw):
+    if is_encdec(cfg):
+        return whisper.decode_step(params, cache, token, pos, cfg, **kw)
+    return lm.decode_step(params, cache, token, pos, cfg, **kw)
+
+
+def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16):
+    if is_encdec(cfg):
+        return whisper.cache_init(cfg, batch, s_cache,
+                                  max(s_cache // cfg.frontend_stride, 8), dtype)
+    return lm.cache_init(cfg, batch, s_cache, dtype)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(cache_init, cfg, batch, s_cache, dtype))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for the given (arch x shape) cell, per the shape's kind."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        if is_encdec(cfg):
+            s_text = max(s // cfg.frontend_stride, 8)
+            spec = dict(frames=_sds((b, s, cfg.d_model), dtype),
+                        tokens=_sds((b, s_text), i32))
+            if kind == "train":
+                spec["labels"] = _sds((b, s_text), i32)
+            return spec
+        if cfg.family == "vlm":
+            nv = cfg.n_vision_tokens
+            spec = dict(tokens=_sds((b, s - nv), i32),
+                        vision=_sds((b, nv, cfg.d_model), dtype),
+                        pos3=_sds((3, b, s), i32))
+            if kind == "train":
+                spec["labels"] = _sds((b, s - nv), i32)
+            return spec
+        spec = dict(tokens=_sds((b, s), i32))
+        if kind == "train":
+            spec["labels"] = _sds((b, s), i32)
+        return spec
+    if kind == "decode":
+        # uniform decode position (scalar) => one in-place cache update;
+        # per-request positions remain supported by the model code itself.
+        return dict(token=_sds((b,), i32), pos=_sds((), i32))
+    raise ValueError(kind)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k only runs for sub-quadratic decode (SSM / hybrid)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("skip: pure full-attention decode at 524k context has "
+                       "no sub-quadratic mechanism (see DESIGN.md)")
+    return True, ""

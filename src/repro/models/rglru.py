@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: u -> (gate branch: GeLU(W_g u)) * (recurrent branch: RG-LRU(conv1d(W_x u)))
+       -> W_o.
+RG-LRU:  r_t = sigmoid(W_r v_t); i_t = sigmoid(W_i v_t)
+         log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * v_t)
+Training uses an associative scan over time; decode is the one-step update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    r = d  # lru width == d_model (RecurrentGemma-9B)
+    ks = jax.random.split(key, 6)
+    return dict(
+        ln=jnp.ones((d,), jnp.float32),
+        wx=dense_init(ks[0], d, r),
+        wg=dense_init(ks[1], d, r),
+        conv=jax.random.normal(ks[2], (cfg.conv_width, r), jnp.float32) * 0.1,
+        conv_bias=jnp.zeros((r,), jnp.float32),
+        wr=dense_init(ks[3], r, r),
+        wi=dense_init(ks[4], r, r),
+        lam=jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, r).astype(jnp.float32) * _C) / _C + 1e-8),
+        wo=dense_init(ks[5], r, d),
+    )
+
+
+def _conv1d(u, w, bias):
+    width = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + bias[None, None, :]
+
+
+def _gates(p, v):
+    r = jax.nn.sigmoid((v @ p["wr"].astype(v.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((v @ p["wi"].astype(v.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * v.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(p, x, cfg: ModelConfig):
+    """x [B,L,D] -> [B,L,D] via associative scan (parallel over time)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["wg"].astype(x.dtype))
+    v = _conv1d(h @ p["wx"].astype(x.dtype),
+                p["conv"].astype(x.dtype), p["conv_bias"].astype(x.dtype))
+    a, b = _gates(p, v)                                   # [B,L,R] f32
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    return y
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype):
+    r = cfg.d_model
+    return dict(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+        state=jnp.zeros((batch, r), jnp.float32),
+    )
+
+
+def rglru_decode(p, x, cfg: ModelConfig, cache):
+    """One-step decode. x [B,1,D]."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["wg"].astype(x.dtype))[:, 0]
+    u = (h @ p["wx"].astype(x.dtype))[:, 0]               # [B,R]
+    conv_in = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
+    w = p["conv"].astype(x.dtype)
+    v = jnp.sum(conv_in * w[None], axis=1) + p["conv_bias"][None].astype(x.dtype)
+    a, b = _gates(p, v)                                   # [B,R]
+    state = a * cache["state"] + b
+    y = (state.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    return y[:, None], dict(conv=conv_in[:, 1:], state=state)

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked training scan + O(1) decode.
+
+Implements the minimal SSD algorithm (Dao & Gu 2024): intra-chunk quadratic
+term + inter-chunk state recurrence, with ngroups=1 (B/C shared across heads),
+causal conv1d frontend and gated RMSNorm output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_headdim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, nh, ns = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * ns
+    return dict(
+        ln=jnp.ones((d,), jnp.float32),
+        # in_proj -> [z (gate), x, B, C, dt]
+        in_proj=dense_init(ks[0], d, 2 * d_in + 2 * ns + nh),
+        conv=jax.random.normal(ks[1], (cfg.conv_width, conv_ch), jnp.float32) * 0.1,
+        conv_bias=jnp.zeros((conv_ch,), jnp.float32),
+        a_log=jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        d_skip=jnp.ones((nh,), jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        out_norm=jnp.ones((d_in,), jnp.float32),
+        out_proj=dense_init(ks[3], d_in, d),
+    )
+
+
+def _segsum(a):
+    """a [..., T] -> [..., T, T]: sum_{k=j+1..i} a_k for j <= i else -inf."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int):
+    """Chunked SSD. x [B,L,H,P], dt [B,L,H], a [H] (negative), b/c [B,L,N].
+
+    Returns y [B,L,H,P] (no skip/gate). L must be a multiple of ``chunk``.
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    nc = l // chunk
+    da = dt * a[None, None, :]                                # [B,L,H]
+    xd = x * dt[..., None]
+    # chunk
+    xc = xd.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # [B,H,C,Q]
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+    a_cum = jnp.cumsum(dac, axis=-1)                           # [B,H,C,Q]
+
+    # 1) intra-chunk (quadratic) term
+    lmat = jnp.exp(_segsum(dac))                               # [B,H,C,Q,Q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cc, bc, lmat, xc)
+
+    # 2) per-chunk right states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # [B,H,C,Q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                      # [B,H,C]
+
+    def step(carry, inp):
+        st, dec = inp                                          # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit PREVIOUS
+
+    init = jnp.zeros((bsz, h, p, n), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [B,C,H,P,N]
+
+    # 4) chunk-input contribution
+    state_decay_out = jnp.exp(a_cum)                           # [B,H,C,Q]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, state_decay_out)
+    return (y_diag + y_off).reshape(bsz, l, h, p)
+
+
+def _conv1d(u, w, bias):
+    """Causal depthwise conv. u [B,L,C], w [W,C]."""
+    width = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + bias[None, None, :]
+
+
+def mamba_forward(p, x, cfg: ModelConfig):
+    """Training/prefill forward. x [B,L,D] -> [B,L,D]."""
+    bsz, l, d = x.shape
+    d_in, nh, ns = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(x.dtype)
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
+    xbc = _conv1d(jnp.concatenate([xs, b, c], axis=-1),
+                  p["conv"].astype(x.dtype), p["conv_bias"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(bsz, l, nh, cfg.ssm_headdim)
+    pad = -l % cfg.ssm_chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan(xh.astype(jnp.float32), dt, a,
+                 b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk)
+    y = y[:, :l].astype(x.dtype)
+    y = y + xh[:, :l] * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, l, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d_in, nh, ns = ssm_dims(cfg)
+    conv_ch = d_in + 2 * ns
+    return dict(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, nh, cfg.ssm_headdim, ns), jnp.float32),
+    )
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache):
+    """One-token decode: O(1) in context length. x [B,1,D]."""
+    bsz = x.shape[0]
+    d_in, nh, ns = ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = (h @ p["in_proj"].astype(x.dtype))[:, 0]
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
+    xbc_new = jnp.concatenate([xs, b, c], axis=-1)             # [B, C]
+    conv_in = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    w = p["conv"].astype(x.dtype)
+    xbc = jnp.sum(conv_in * w[None], axis=1) + p["conv_bias"][None].astype(x.dtype)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None])                                 # [B,H]
+    xh = xs.reshape(bsz, nh, cfg.ssm_headdim).astype(jnp.float32)
+    state = cache["state"] * da[..., None, None] + \
+        (dt[..., None] * xh)[..., None] * b[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p["out_norm"], cfg.norm_eps)
+    new_cache = dict(conv=conv_in[:, 1:], state=state)
+    return y @ p["out_proj"].astype(x.dtype), new_cache

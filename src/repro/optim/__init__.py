@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_at_step, clip_by_global_norm
+from repro.optim import compression

@@ -1,0 +1,79 @@
+"""Functional AdamW + LR schedules (cosine, WSD) + grad clipping.
+
+No optax dependency — states are plain pytrees so the parallel layer can
+attach ZeRO shardings to them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "lr_at_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"        # cosine | wsd | const
+    wsd_decay_frac: float = 0.1     # MiniCPM: final decay phase fraction
+    min_lr_frac: float = 0.1
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return dict(m=zeros, v=jax.tree.map(jnp.zeros_like, params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def lr_at_step(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        base = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # warmup -> stable -> linear decay in the last wsd_decay_frac of steps
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        frac = jnp.clip((t - decay_start) / cfg.wsd_decay_frac, 0.0, 1.0)
+        base = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:
+        base = jnp.ones(())
+    return cfg.lr * warm * base
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * factor, grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at_step(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, mi, vi):
+        mhat = mi / bc1
+        vhat = vi / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, dict(m=m, v=v, step=step), dict(lr=lr, grad_norm=gnorm)

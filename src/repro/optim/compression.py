@@ -1,0 +1,63 @@
+"""Gradient compression for the cross-pod (DCN) axis.
+
+int8 quantization with error feedback (EF-SGD style): the residual from each
+round is carried in optimizer-side state and added back before the next
+compression, so the bias vanishes over steps.
+
+``compressed_pod_psum`` realizes the compressed all-reduce physically with
+shard_map over the "pod" mesh axis: int8 payloads are all-gathered (4x fewer
+DCN bytes than an f32 all-reduce ring) and summed locally in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ef_compress", "ef_decompress", "ef_round", "compressed_pod_psum"]
+
+
+def ef_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """g -> (int8 payload, f32 scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_round(g: jax.Array, residual: jax.Array):
+    """One error-feedback round. Returns (compressed-view grad, new residual)."""
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = ef_compress(corrected)
+    deq = ef_decompress(q, scale)
+    return deq.astype(g.dtype), corrected - deq
+
+
+def compressed_pod_psum(grads, mesh, *, axis: str = "pod"):
+    """Physically-compressed gradient reduction over the pod axis.
+
+    Inside shard_map each pod holds its local gradient shard; we int8-quantize,
+    all_gather over ``axis`` (int8 on the wire), then dequantize and sum.
+    """
+    if axis not in mesh.axis_names:
+        return grads
+
+    def reduce_leaf(g):
+        q, scale = ef_compress(g)
+        qs = jax.lax.all_gather(q, axis)              # [n_pod, ...] int8
+        ss = jax.lax.all_gather(scale, axis)          # [n_pod]
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
+        return jnp.sum(deq, axis=0).astype(g.dtype)
+
+    specs = jax.tree.map(lambda _: P(), grads)
+    fn = jax.shard_map(
+        lambda t: jax.tree.map(reduce_leaf, t),
+        mesh=mesh, in_specs=(specs,), out_specs=specs, check_vma=False)
+    return fn(grads)

@@ -1,0 +1,193 @@
+"""Param / batch / cache -> PartitionSpec rules.
+
+Tensor parallelism over the "model" axis (Megatron column->row pairs), data
+parallelism over ("pod", "data"). Dims are sharded only when divisible by the
+axis size — GSPMD padding is avoided on purpose so shard shapes stay exact.
+Scanned parameter stacks have a leading repeat dim which is never sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs_tree", "ShardingRules",
+           "named", "zero_shard_specs", "dp_axes", "dp_size", "logits_spec"]
+
+# logical (unstacked) rank per trailing param name
+_COL_PARALLEL = {"wq", "wk", "wv", "w1", "w3", "wx", "wg", "wr", "wi",
+                 "in_proj", "router"}       # [D, F] -> shard F
+_ROW_PARALLEL = {"wo", "w2", "out_proj"}    # [F, D] -> shard F (contracting)
+_REPLICATED_1D = {"ln", "final_ln", "enc_ln", "dec_ln", "q_norm", "k_norm",
+                  "out_norm", "conv_bias", "a_log", "d_skip", "dt_bias",
+                  "lam", "scale", "mu", "bits", "g"}
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in dp_axes(mesh)])))
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def _leaf_spec(name: str, shape: Tuple[int, ...], tp: int) -> P:
+    nd = len(shape)
+    if name in _REPLICATED_1D:
+        return P(*([None] * nd))
+    if name == "embed":                      # [V, D]
+        if _div(shape[1], tp):
+            return P(None, "model")
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    if name == "head":                       # [D, V]
+        if _div(shape[1], tp):
+            return P(None, "model")
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    if name == "packed":                     # [lead..., K, n_words] uint32 codes
+        lead = [None] * (nd - 2)
+        out = "model" if _div(shape[-1], tp) else None
+        return P(*(lead + [None, out]))
+    if name == "conv":                       # [W, C] depthwise
+        lead = nd - 2
+        spec = ("model",) if _div(shape[-1], tp) else (None,)
+        return P(*([None] * (lead + 1) + list(spec)))
+    if name in _COL_PARALLEL or name in _ROW_PARALLEL:
+        lead = nd - 2
+        if nd >= 3 and name != "conv":
+            # stacked: [R, ...] or MoE experts [E, D, F]
+            # MoE expert dim is dim -3 when logical rank 3 (we mark via size)
+            pass
+        d_in, d_out = shape[-2], shape[-1]
+        if name in _COL_PARALLEL:
+            spec = (None, "model") if _div(d_out, tp) else \
+                (("model", None) if _div(d_in, tp) else (None, None))
+        else:
+            spec = ("model", None) if _div(d_in, tp) else (None, None)
+        lead_spec = [None] * (nd - 2)
+        # MoE experts: prefer expert-parallel over feature TP
+        return P(*(lead_spec + list(spec)))
+    # default: replicate
+    return P(*([None] * nd))
+
+
+def _moe_leaf_spec(name: str, shape: Tuple[int, ...], tp: int,
+                   expert_parallel: bool) -> Optional[P]:
+    """MoE weights [R, E, D, F]: shard the expert dim when divisible."""
+    if name in ("w1", "w2", "w3") and len(shape) >= 3:
+        e = shape[-3]
+        if expert_parallel and _div(e, tp):
+            lead = [None] * (len(shape) - 3)
+            return P(*(lead + ["model", None, None]))
+    return None
+
+
+def param_specs(params, mesh: Mesh, *, expert_parallel: bool = True,
+                moe_paths: bool = True):
+    """PartitionSpec pytree matching ``params``."""
+    tp = _tp(mesh)
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        in_moe = "moe" in names
+        if in_moe and moe_paths:
+            s = _moe_leaf_spec(name, leaf.shape, tp, expert_parallel)
+            if s is not None:
+                return s
+        return _leaf_spec(name, leaf.shape, tp)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def zero_shard_specs(specs, params, mesh: Mesh, axis: str = "data"):
+    """ZeRO-1: additionally shard optimizer moments over the data axis on the
+    first unsharded divisible dim."""
+    n = mesh.shape[axis]
+
+    def add(spec, leaf):
+        parts = list(spec)
+        parts += [None] * (leaf.ndim - len(parts))
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % n == 0 and dim >= n:
+                parts[i] = axis
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(add, specs, params)
+
+
+def batch_specs(batch, mesh: Mesh):
+    """Shard the batch dim over (pod, data) when divisible; else replicate."""
+    axes = dp_axes(mesh)
+    n = dp_size(mesh)
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        bdim = 1 if name == "pos3" else 0
+        parts = [None] * leaf.ndim
+        if leaf.shape[bdim] % n == 0:
+            parts[bdim] = axes if len(axes) > 1 else axes[0]
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs_tree(cache, mesh: Mesh, cfg=None):
+    """KV caches: batch over (pod,data); heads/channels over model if divisible."""
+    axes = dp_axes(mesh)
+    n = dp_size(mesh)
+    tp = _tp(mesh)
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        parts = [None] * leaf.ndim
+        # layouts: k/v [R?, B, S, KV, hd]; state [R?, B, H, P, N] | [R?, B, R];
+        # conv [R?, B, W, C]; whisper self_k [L, B, S, KV, hd]
+        bdim = 1 if leaf.ndim >= 3 else 0
+        if shape[bdim] % n == 0:
+            parts[bdim] = axes if len(axes) > 1 else axes[0]
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            if shape[-2] % tp == 0:
+                parts[-2] = "model"
+            elif shape[-3] % tp == 0:
+                # GQA kv-heads < TP: shard the SEQUENCE dim instead, so
+                # decode attention becomes flash-decoding-style sequence
+                # parallelism (GSPMD reduces the softmax stats, ~KB-scale
+                # collectives) rather than all-gathering the whole cache.
+                parts[-3] = "model"
+        elif name == "state" and leaf.ndim >= 4:
+            if shape[2] % tp == 0:
+                parts[2] = "model"
+        elif name in ("state", "conv"):
+            if shape[-1] % tp == 0:
+                parts[-1] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def logits_spec(vocab: int, mesh: Mesh, batch: int):
+    axes = dp_axes(mesh)
+    n = dp_size(mesh)
+    b = (axes if len(axes) > 1 else axes[0]) if batch % n == 0 else None
+    v = "model" if vocab % _tp(mesh) == 0 else None
+    return P(b, v)
+
+
+def named(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

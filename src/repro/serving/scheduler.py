@@ -1,0 +1,127 @@
+"""Continuous-batching serving scheduler.
+
+Decode-only continuous batching (Orca-style): a fixed number of batch slots
+advance one token per model step; finished requests retire and queued requests
+claim slots immediately — prompts are prefilled token-by-token through the
+same decode step, so a single compiled program serves the whole lifecycle
+(no prefill/decode program switch, no recompilation as load changes).
+
+Idle slots feed a pad token at their stale position; this is safe for
+attention caches because a newly-assigned slot restarts at position 0 and the
+causal validity mask hides anything beyond the current position. (Recurrent
+caches — mamba2 / rglru — would need per-slot state resets; the scheduler
+checks the family and refuses, documented limitation.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    tokens: List[int] = dataclasses.field(default_factory=list)  # generated
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                # next cache position to write
+    prompt_cursor: int = 0      # how many prompt tokens already consumed
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatcher:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 s_cache: int = 64, dtype=jnp.float32, qmeta=None,
+                 pad_token: int = 0, greedy: bool = True):
+        if cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "continuous batching needs per-slot recurrent-state resets "
+                "for ssm/hybrid families")
+        self.params = params
+        self.cfg = cfg
+        self.s_cache = s_cache
+        self.pad = pad_token
+        self.greedy = greedy
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        self.cache = registry.cache_init(cfg, slots, s_cache, dtype)
+        step = lambda p, c, t, pos: registry.decode_step(
+            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta) \
+            if not registry.is_encdec(cfg) else None
+        self._step = jax.jit(lambda p, c, t, pos: registry.decode_step(
+            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta))
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        steps = 0
+        while self.pending() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # -- one engine iteration --------------------------------------------------
+    def step(self):
+        self._assign_slots()
+        toks, poss = [], []
+        for s in self.slots:
+            if s.free:
+                toks.append(self.pad)
+                poss.append(max(s.pos - 1, 0))
+                continue
+            r = s.req
+            if s.prompt_cursor < len(r.prompt):
+                toks.append(r.prompt[s.prompt_cursor])
+            else:
+                toks.append(r.tokens[-1] if r.tokens else r.prompt[-1])
+            poss.append(s.pos)
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, -1)) if self.greedy else None
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            r = s.req
+            s.pos += 1
+            if s.prompt_cursor < len(r.prompt):
+                s.prompt_cursor += 1
+                if s.prompt_cursor == len(r.prompt):
+                    r.tokens.append(int(nxt[i]))   # first generated token
+            else:
+                r.tokens.append(int(nxt[i]))
+            if len(r.tokens) >= r.max_new or s.pos >= self.s_cache:
+                r.done = True
+                self.finished[r.rid] = r
+                self.slots[i] = _Slot()            # slot recycled at pos 0
+
+    def _assign_slots(self):
+        for i, s in enumerate(self.slots):
+            if s.free and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = _Slot(req=req, pos=0, prompt_cursor=0)

@@ -1,0 +1,205 @@
+"""Companding, packing, SDBA, GLVQ loop, baselines — the paper core."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GLVQConfig, companding, packing, quantize_layer, \
+    dequantize_layer, sdba as sdba_mod
+from repro.core.baselines import (e8_basis, gptq_quantize, rtn_quantize)
+from repro.core.sdba import allocate_bits, fractional_bits, group_salience
+
+
+# --- companding -------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(10.0, 255.0), st.integers(0, 10_000))
+def test_companding_inverse(mu, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=128), jnp.float32)
+    y = companding.compand(x, mu)
+    xr = companding.expand(y, mu)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), atol=2e-5)
+    assert float(jnp.max(jnp.abs(y))) <= 1.0 + 1e-6
+
+
+def test_companding_expands_small_values():
+    mu = 100.0
+    x = jnp.asarray([0.01, 0.5])
+    y = companding.compand(x, mu)
+    assert float(y[0]) / 0.01 > float(y[1]) / 0.5  # more resolution near 0
+
+
+def test_mu_init_range():
+    rng = np.random.default_rng(0)
+    heavy = jnp.asarray(rng.standard_t(2, size=4096), jnp.float32)
+    light = jnp.asarray(rng.uniform(-1, 1, size=4096), jnp.float32)
+    mu_h = companding.init_mu(heavy)
+    mu_l = companding.init_mu(light)
+    assert companding.MU_MIN <= float(mu_l) <= float(mu_h) <= companding.MU_MAX
+
+
+# --- packing ----------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 97), st.integers(0, 10_000))
+def test_pack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    lo = -(2 ** (bits - 1)) if bits > 1 else -1
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 0
+    codes = jnp.asarray(rng.integers(lo, hi + 1, size=(3, n)), jnp.int32)
+    packed = packing.pack_codes(codes, bits)
+    out = packing.unpack_codes(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_packing_density():
+    # 4-bit: exactly 8 codes per word
+    assert packing.packed_len(1024, 4) == 128
+    assert packing.packed_len(1024, 2) == 64
+    assert packing.packed_len(10, 3) == 1 and packing.packed_len(11, 3) == 2
+
+
+# --- SDBA ---------------------------------------------------------------------
+
+def test_sdba_constraints():
+    rng = np.random.default_rng(0)
+    s = rng.lognormal(0, 2.0, size=64)
+    v = rng.uniform(0.5, 2.0, size=64)
+    for n in (2, 3, 4):
+        bits = allocate_bits(s, v, n)
+        assert bits.mean() == n                       # exact rate
+        assert (bits == n + 1).sum() == (bits == n - 1).sum()  # balanced
+        assert set(np.unique(bits)) <= {n - 1, n, n + 1}
+
+
+def test_sdba_salience_ordering():
+    s = np.array([100.0, 1.0, 1.0, 0.001])
+    v = np.ones(4)
+    bits = allocate_bits(s, v, 2)
+    assert bits[0] == 3 and bits[3] == 1
+
+
+def test_fractional_bits_rate():
+    rng = np.random.default_rng(1)
+    s, v = rng.uniform(size=32), rng.uniform(size=32)
+    bits = fractional_bits(s, v, 1.5)
+    assert abs(bits.mean() - 1.5) < 1e-9
+
+
+def test_salience_uses_hessian_diag():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(256, 16)), jnp.float32)
+    h = jnp.diag(jnp.concatenate([jnp.full((128,), 100.0), jnp.ones((128,))]))
+    s = group_salience(w, h, 128)
+    assert float(s[0]) > float(s[1])
+
+
+# --- GLVQ loop -----------------------------------------------------------------
+
+def _setup(seed=0, k=128, n=32, nx=256):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_t(3, size=(k, n)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, nx)), jnp.float32)
+    return w, x @ x.T
+
+
+def _obj(w, w_hat, h):
+    d = w - w_hat
+    return float(jnp.sum((h @ d) * d))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_glvq_beats_rtn_and_gptq(bits):
+    w, h = _setup()
+    cfg = GLVQConfig(d=8, bits=bits, iters=40)
+    q = quantize_layer(w, h, cfg)
+    glvq_obj = _obj(w, dequantize_layer(q, cfg), h)
+    rtn_obj = _obj(w, rtn_quantize(w, bits), h)
+    gptq_obj = _obj(w, gptq_quantize(w, h, bits), h)
+    assert glvq_obj < rtn_obj
+    assert glvq_obj < gptq_obj * 1.05   # usually strictly better
+
+
+def test_glvq_learned_beats_fixed_lattice():
+    w, h = _setup(seed=3)
+    cfg = GLVQConfig(d=8, bits=2, iters=40)
+    fixed = dataclasses.replace(cfg, learn_lattice=False)
+    lobj = _obj(w, dequantize_layer(quantize_layer(w, h, cfg), cfg), h)
+    fobj = _obj(w, dequantize_layer(quantize_layer(w, h, fixed), fixed), h)
+    assert lobj <= fobj * 1.02
+
+
+def test_glvq_companding_helps_heavy_tails():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_t(2, size=(128, 32)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    h = x @ x.T
+    cfg = GLVQConfig(d=8, bits=2, iters=40)
+    off = dataclasses.replace(cfg, use_companding=False)
+    on_obj = _obj(w, dequantize_layer(quantize_layer(w, h, cfg), cfg), h)
+    off_obj = _obj(w, dequantize_layer(quantize_layer(w, h, off), off), h)
+    assert on_obj <= off_obj * 1.05
+
+
+def test_gcd_is_a_refinement_of_babai():
+    """Our GCD starts from Babai and greedily descends ||y - Gz||, so its
+    y-space error can never exceed Babai's for the same basis. (The paper's
+    Table 12 claim — Babai better END-TO-END — is exercised at the model
+    level in benchmarks/table12, where the alternating loop interacts with
+    the index assignment.)"""
+    from repro.core.glvq import _round_codes, _to_vectors
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_t(3, size=(8, 512)) * 0.5, jnp.float32)
+    g = jnp.asarray(rng.normal(size=(8, 8)) * 0.1 + np.eye(8) * 0.3,
+                    jnp.float32)
+    cfg_b = GLVQConfig(d=8, bits=3, rounding="babai")
+    cfg_g = GLVQConfig(d=8, bits=3, rounding="gcd", gcd_sweeps=2)
+    zb = _round_codes(g, w, jnp.asarray(3), cfg_b)
+    zg = _round_codes(g, w, jnp.asarray(3), cfg_g)
+    eb = float(jnp.sum((w - g @ zb) ** 2))
+    eg = float(jnp.sum((w - g @ zg) ** 2))
+    assert eg <= eb + 1e-5
+    # and GCD respects the clip range
+    assert float(zg.min()) >= -4 and float(zg.max()) <= 3
+
+
+def test_glvq_mixed_bits_respects_codes():
+    w, h = _setup(seed=6, k=256)
+    cfg = GLVQConfig(d=8, bits=2, iters=10)
+    bits = jnp.asarray([1, 3], jnp.int32)
+    q = quantize_layer(w, h, cfg, bits)
+    c0 = np.asarray(q["codes"][0])
+    c1 = np.asarray(q["codes"][1])
+    assert c0.min() >= -1 and c0.max() <= 0
+    assert c1.min() >= -4 and c1.max() <= 3
+
+
+def test_glvq_bits_budget_vs_error_monotone():
+    w, h = _setup(seed=7)
+    objs = []
+    for bits in (2, 3, 4):
+        cfg = GLVQConfig(d=8, bits=bits, iters=30)
+        objs.append(_obj(w, dequantize_layer(quantize_layer(w, h, cfg), cfg), h))
+    assert objs[0] > objs[1] > objs[2]
+
+
+# --- baselines ----------------------------------------------------------------
+
+def test_gptq_beats_rtn_on_correlated_inputs():
+    rng = np.random.default_rng(8)
+    k, n = 128, 16
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.float32)
+    base = rng.normal(size=(k, 8))
+    x = jnp.asarray(base @ rng.normal(size=(8, 512)) + 0.1 * rng.normal(size=(k, 512)),
+                    jnp.float32)
+    h = x @ x.T
+    assert _obj(w, gptq_quantize(w, h, 3), h) < _obj(w, rtn_quantize(w, 3), h)
+
+
+def test_e8_basis_full_rank():
+    g = e8_basis()
+    assert abs(np.linalg.det(g)) > 1e-6

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype/bits sweep."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing
+from repro.kernels import ops, ref
+
+
+def _payload(rng, k, n, bits, d):
+    n_g = k // 128
+    lo = -(2 ** (bits - 1)) if bits > 1 else -1
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 0
+    codes = rng.integers(lo, hi + 1, size=(k, n))
+    packed = packing.pack_codes(jnp.asarray(codes, jnp.int32), bits)
+    g = jnp.asarray(rng.normal(size=(n_g, d, d)) * 0.1 + np.eye(d) * 0.3,
+                    jnp.float32)
+    mu = jnp.asarray(rng.uniform(10, 250, size=(n_g,)), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.3, 3.0, size=(n_g,)), jnp.float32)
+    return packed, g, mu, scale
+
+
+@pytest.mark.parametrize("bits,d", [(1, 8), (2, 8), (3, 8), (4, 8),
+                                    (2, 16), (4, 16), (2, 32), (8, 16)])
+def test_glvq_matmul_matches_ref(bits, d):
+    rng = np.random.default_rng(bits * 100 + d)
+    k, n, m = 256, 640, 24
+    packed, g, mu, scale = _payload(rng, k, n, bits, d)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    y_ker = ops.glvq_matmul(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    assert y_ker.shape == (m, n)
+    # mu-law expand is exponential: f32 reduction-order noise in the decode
+    # matmul is amplified, so tolerance must scale with the output magnitude.
+    tol = 2e-6 * float(np.abs(np.asarray(y_ref)).max()) + 1e-5
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-4, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_glvq_matmul_dtypes(dtype):
+    rng = np.random.default_rng(11)
+    k, n, m, bits, d = 128, 320, 8, 4, 8
+    packed, g, mu, scale = _payload(rng, k, n, bits, d)
+    x = jnp.asarray(rng.normal(size=(m, k))).astype(dtype)
+    y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    y_ker = ops.glvq_matmul(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    np.testing.assert_allclose(np.asarray(y_ker, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_glvq_matmul_irregular_m():
+    rng = np.random.default_rng(12)
+    k, n, bits, d = 128, 160, 2, 8
+    packed, g, mu, scale = _payload(rng, k, n, bits, d)
+    for m in (1, 5, 13):
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+        y_ker = ops.glvq_matmul(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+        tol = 2e-6 * float(np.abs(np.asarray(y_ref)).max()) + 1e-5
+        np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                                   rtol=2e-4, atol=tol)
+
+
+@pytest.mark.parametrize("bits,d", [(2, 8), (3, 8), (4, 16), (2, 32), (5, 8)])
+def test_babai_quantize_matches_ref(bits, d):
+    rng = np.random.default_rng(bits * 10 + d)
+    k, n = 256, 512
+    n_g = k // 128
+    w = jnp.asarray(rng.standard_t(3, size=(k, n)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(n_g, d, d)) * 0.05 + np.eye(d) * 0.4,
+                    jnp.float32)
+    ginv = jnp.linalg.inv(g)
+    mu = jnp.asarray(rng.uniform(10, 250, size=(n_g,)), jnp.float32)
+    scale = jnp.max(jnp.abs(w.reshape(n_g, -1)), axis=1)
+    z_ref = ref.babai_quantize_ref(w, ginv, mu, scale, bits=bits, d=d)
+    z_ker = ops.babai_quantize(w, ginv, mu, scale, bits=bits, d=d)
+    mismatch = int(jnp.sum(z_ref != z_ker))
+    # rounding ties at .5 boundaries may flip; require < 0.01% disagreement
+    assert mismatch <= max(1, z_ref.size // 10_000)
+
+
+def test_kernel_quantize_then_matmul_consistency():
+    """End to end: kernel-quantized codes -> kernel matmul == oracle chain."""
+    rng = np.random.default_rng(13)
+    k, n, m, bits, d = 128, 320, 4, 3, 8
+    n_g = k // 128
+    w = jnp.asarray(rng.standard_t(3, size=(k, n)) * 0.05, jnp.float32)
+    g = jnp.asarray(np.eye(d)[None] * 0.2, jnp.float32)
+    ginv = jnp.linalg.inv(g)
+    mu = jnp.asarray([60.0], jnp.float32)
+    scale = jnp.max(jnp.abs(w))[None]
+    z = ops.babai_quantize(w, ginv, mu, scale, bits=bits, d=d)
+    packed = packing.pack_codes(z, bits)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y_ker = ops.glvq_matmul(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits, d=d, n=n)
+    tol = 2e-6 * float(np.abs(np.asarray(y_ref)).max()) + 1e-5
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-4, atol=tol)

@@ -1,0 +1,75 @@
+"""Lattice primitives: Babai rounding, error bound (Appendix A), LLL, init."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lattice
+
+
+def _rand_basis(rng, d, cond=3.0):
+    a = rng.normal(size=(d, d))
+    u, s, vt = np.linalg.svd(a)
+    s = np.linspace(1.0, cond, d)
+    return u @ np.diag(s) @ vt
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]))
+def test_babai_error_bound_holds(seed, d):
+    """Appendix A: ||x - G z|| <= bound(G) for UNCLIPPED Babai rounding."""
+    rng = np.random.default_rng(seed)
+    g = _rand_basis(rng, d)
+    x = rng.normal(size=(d, 16)) * 3.0
+    ginv = np.linalg.inv(g)
+    z = np.round(ginv @ x)                      # no clipping
+    err = np.linalg.norm(x - g @ z, axis=0)
+    bound = lattice.babai_error_bound(g)
+    assert np.all(err <= bound + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]))
+def test_babai_exact_on_lattice_points(seed, d):
+    """Lattice points round-trip exactly through encode/decode."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(_rand_basis(rng, d), jnp.float32)
+    z_true = jnp.asarray(rng.integers(-3, 4, size=(d, 32)), jnp.float32)
+    x = lattice.babai_decode(g, z_true)
+    z = lattice.babai_round(jnp.linalg.inv(g), x, bits=4)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_true), atol=1e-3)
+
+
+def test_babai_clipping_range():
+    g = jnp.eye(4)
+    x = jnp.full((4, 3), 100.0)
+    for bits in (1, 2, 3, 4):
+        z = lattice.babai_round(g, x, bits)
+        lo, hi = lattice.int_range(bits)
+        assert int(z.max()) <= hi and int(z.min()) >= lo
+
+
+def test_lll_tightens_babai_bound():
+    rng = np.random.default_rng(0)
+    # deliberately skewed basis
+    g = np.eye(4) + np.triu(rng.normal(size=(4, 4)) * 2.0, 1)
+    before = lattice.babai_error_bound(g)
+    after = lattice.babai_error_bound(lattice.lll_reduce(g))
+    assert after <= before * 1.0 + 1e-9
+
+
+def test_init_generation_matrix_coverage():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.standard_t(3, size=(8, 4096)), jnp.float32)
+    g0 = lattice.init_generation_matrix(v, bits=4)
+    coords = jnp.linalg.inv(g0) @ v
+    frac_in = float(jnp.mean(jnp.abs(coords) <= 8.0))
+    assert frac_in > 0.95   # most coords land inside the 4-bit range
+
+
+def test_spectral_clip():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+    gc = lattice.spectral_clip(g, 0.5, 1.5)
+    s = jnp.linalg.svd(gc, compute_uv=False)
+    assert float(s.max()) <= 1.5 + 1e-4 and float(s.min()) >= 0.5 - 1e-4

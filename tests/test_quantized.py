@@ -1,0 +1,117 @@
+"""Quantized-weight containers, packed decode paths, whole-model PTQ."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import GLVQConfig, quantize_layer, dequantize_layer
+from repro.core.quantized import (QuantLinearMeta, decode_xla, pack_layer,
+                                  quantize_param_tree, quantized_param_shapes,
+                                  materialize_tree, segment_layer,
+                                  decode_segments)
+from repro.core.sdba import sdba
+from repro.models import registry
+
+
+def _layer(seed=0, k=128, n=32):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_t(3, size=(k, n)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(k, 128)), jnp.float32)
+    return w, x @ x.T
+
+
+def test_packed_decode_equals_reference_dequant():
+    w, h = _layer()
+    cfg = GLVQConfig(d=8, bits=3, iters=10)
+    q = quantize_layer(w, h, cfg)
+    ref = dequantize_layer(q, cfg)
+    payload = pack_layer(q, cfg, 3)
+    meta = QuantLinearMeta(k=w.shape[0], n=w.shape[1], bits=3, d=8,
+                           group_size=128)
+    out = decode_xla(payload, meta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_segmented_mixed_bits_roundtrip():
+    w, h = _layer(seed=1, k=512)
+    cfg = GLVQConfig(d=8, bits=2, iters=5)
+    bits = jnp.asarray(sdba(w, h, 128, 2))
+    q = quantize_layer(w, h, cfg, bits)
+    segs = segment_layer(q, cfg)
+    assert abs(segs.avg_bits() - 2.0) < 1e-9
+    out = decode_segments(segs)
+    ref = dequantize_layer(q, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_payload_bytes_accounting():
+    meta = QuantLinearMeta(k=4096, n=4096, bits=2, d=16, group_size=128)
+    dense = 4096 * 4096 * 2                     # bf16
+    ratio = meta.payload_bytes() / dense
+    assert 0.12 < ratio < 0.14                  # ~2/16 + side info
+
+
+def test_quantize_param_tree_and_materialize():
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=8, group_size=32)
+    qparams, meta = quantize_param_tree(params, cfg=qcfg)
+    assert meta, "nothing was quantized"
+    dense = materialize_tree(qparams, meta, jnp.float32)
+    # same tree structure as original
+    jax.tree.map(lambda a, b: None, params, dense)
+    # decoded weights approximate the originals
+    err = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.mean((a - b) ** 2)) / (float(jnp.var(a)) + 1e-9),
+        params, dense))
+    assert err < 0.15
+
+
+def test_quantized_decode_step_runs_and_tracks_dense():
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=8, group_size=32)
+    qparams, meta = quantize_param_tree(params, cfg=qcfg)
+    cache = registry.cache_init(cfg, 2, 8, jnp.float32)
+    tok = jnp.zeros((2,), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    lg_q, _ = registry.decode_step(qparams, cache, tok, pos, cfg,
+                                   dtype=jnp.float32, qmeta=meta)
+    # fake-quant reference: dense weights decoded outside
+    dense = materialize_tree(qparams, meta, jnp.float32)
+    cache = registry.cache_init(cfg, 2, 8, jnp.float32)
+    lg_d, _ = registry.decode_step(dense, cache, tok, pos, cfg,
+                                   dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg_q), np.asarray(lg_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_shapes_sds_matches_real_payloads():
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=2, group_size=32)
+    qparams, meta_r = quantize_param_tree(params, cfg=qcfg)
+    sds = jax.eval_shape(lambda: params)
+    qsds, meta_s = quantized_param_shapes(sds, bits=4, d=8, group_size=32)
+    real_shapes = jax.tree.map(lambda a: a.shape, qparams)
+    sds_shapes = jax.tree.map(lambda a: a.shape, qsds)
+    assert real_shapes == sds_shapes
+    assert set(meta_r) == set(meta_s)
+
+
+def test_quantization_error_shrinks_with_bits_model_level():
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    errs = {}
+    for bits in (2, 4):
+        qcfg = GLVQConfig(d=8, bits=bits, iters=8, group_size=32)
+        qparams, meta = quantize_param_tree(params, cfg=qcfg)
+        dense = materialize_tree(qparams, meta, jnp.float32)
+        errs[bits] = jax.tree.reduce(lambda a, b: a + b, jax.tree.map(
+            lambda a, b: float(jnp.sum((a - b) ** 2)), params, dense))
+    assert errs[4] < errs[2]

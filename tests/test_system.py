@@ -1,0 +1,117 @@
+"""End-to-end behaviour: train a tiny LM, calibrate, quantize, evaluate.
+
+This is the repo's miniature of the paper's full pipeline (Tables 1-3):
+pretrained model -> calibration H -> GLVQ / baselines -> perplexity deltas.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.glvq import GLVQConfig
+from repro.data.calibration import collect_h, quantize_model
+from repro.data.synthetic import make_batch, markov_tokens, token_batches
+from repro.launch.train import make_train_step, opt_init
+from repro.models import registry
+from repro.optim import AdamWConfig
+
+
+@pytest.fixture(scope="module")
+def trained_tiny_lm():
+    cfg = reduced(get_config("llama2-7b"))
+    opt_cfg = AdamWConfig(lr=3e-3, total_steps=60, warmup_steps=5)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    opt = opt_init(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, remat=False,
+                                   dtype=jnp.float32))
+    losses = []
+    for batch in token_batches(cfg, 8, 32, 60, seed=0):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    return cfg, params, losses
+
+
+def _ppl(params, cfg, seed=99, n=4):
+    tot, cnt = 0.0, 0
+    for i in range(n):
+        batch = make_batch(cfg, 8, 32, seed + i,
+                           stream=markov_tokens(cfg.vocab, 40_000, 0))
+        loss = registry.loss_fn(params, batch, cfg, dtype=jnp.float32,
+                                remat=False)
+        tot += float(loss)
+        cnt += 1
+    return float(np.exp(tot / cnt))
+
+
+def test_training_reduces_loss(trained_tiny_lm):
+    _, _, losses = trained_tiny_lm
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_full_ptq_pipeline_quality_ordering(trained_tiny_lm):
+    """GLVQ ppl <= RTN ppl at 3 bits; 4-bit <= 2-bit; all finite."""
+    cfg, params, _ = trained_tiny_lm
+    calib = [make_batch(cfg, 4, 32, 1000 + i,
+                        stream=markov_tokens(cfg.vocab, 40_000, 0))
+             for i in range(2)]
+    h_acc = collect_h(params, calib, cfg)
+    base_ppl = _ppl(params, cfg)
+    qcfg = GLVQConfig(d=8, bits=3, iters=100, group_size=32)
+
+    glvq3, _ = quantize_model(params, cfg, method="glvq", qcfg=qcfg,
+                              h_acc=h_acc)
+    rtn3, _ = quantize_model(params, cfg, method="rtn", qcfg=qcfg)
+    glvq3_ppl = _ppl(glvq3, cfg)
+    rtn3_ppl = _ppl(rtn3, cfg)
+    assert np.isfinite(glvq3_ppl) and np.isfinite(rtn3_ppl)
+    # On this 64-dim near-Gaussian tiny model RTN's per-column scales are
+    # already near-optimal; GLVQ must stay within noise of it (the paper's
+    # decisive wins appear on heavy-tailed full-scale weights — see the
+    # synthetic-weight tests in test_core.py and EXPERIMENTS.md).
+    assert glvq3_ppl <= rtn3_ppl * 1.05, (glvq3_ppl, rtn3_ppl, base_ppl)
+    # the paper's core mechanism claim: learned group lattices crush a fixed
+    # shared lattice (Table 7)
+    fixed3, _ = quantize_model(params, cfg, method="fixed-lattice", qcfg=qcfg,
+                               h_acc=h_acc)
+    assert glvq3_ppl < _ppl(fixed3, cfg) * 0.85
+
+    q2, _ = quantize_model(params, cfg, method="glvq",
+                           qcfg=dataclasses.replace(qcfg, bits=2), h_acc=h_acc)
+    q4, _ = quantize_model(params, cfg, method="glvq",
+                           qcfg=dataclasses.replace(qcfg, bits=4), h_acc=h_acc)
+    assert _ppl(q4, cfg) <= _ppl(q2, cfg) * 1.02
+    # 4-bit should be near-lossless on this scale
+    assert _ppl(q4, cfg) <= base_ppl * 1.35
+
+
+def test_fractional_rate_between_integer_neighbours(trained_tiny_lm):
+    cfg, params, _ = trained_tiny_lm
+    qcfg = GLVQConfig(d=8, bits=2, iters=60, group_size=32)
+    q15, rep = quantize_model(params, cfg, method="glvq", qcfg=qcfg, bits=1.5)
+    assert rep.bits == 1.5
+    p15 = _ppl(q15, cfg)
+    p1 = _ppl(quantize_model(params, cfg, method="glvq", qcfg=qcfg, bits=1.0)[0], cfg)
+    p2 = _ppl(quantize_model(params, cfg, method="glvq", qcfg=qcfg, bits=2.0)[0], cfg)
+    assert p2 <= p15 * 1.05 and p15 <= p1 * 1.05, (p1, p15, p2)
+
+
+def test_quantized_serving_matches_fake_quant(trained_tiny_lm):
+    """Packed streaming decode == fake-quant dense decode (same codes)."""
+    from repro.core.quantized import quantize_param_tree, materialize_tree
+    cfg, params, _ = trained_tiny_lm
+    qcfg = GLVQConfig(d=8, bits=4, iters=8, group_size=32)
+    qparams, meta = quantize_param_tree(params, cfg=qcfg)
+    dense = materialize_tree(qparams, meta, jnp.float32)
+    cache_q = registry.cache_init(cfg, 2, 8, jnp.float32)
+    cache_d = registry.cache_init(cfg, 2, 8, jnp.float32)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    lq, _ = registry.decode_step(qparams, cache_q, tok, pos, cfg,
+                                 dtype=jnp.float32, qmeta=meta)
+    ld, _ = registry.decode_step(dense, cache_d, tok, pos, cfg,
+                                 dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(ld),
+                               rtol=1e-4, atol=1e-4)
