@@ -1,0 +1,129 @@
+"""Backend-comparison benchmark for the quantized-execution engine.
+
+Times ``kernels.ops.quant_matmul`` per backend over the linear-layer shapes
+of a small LM config, plus one whole-model quantized decode step, and emits
+``BENCH_engine.json`` (tokens/s and analytic bytes-moved per backend) so the
+perf trajectory of the engine is recorded per PR.
+
+Run:  PYTHONPATH=src python -m benchmarks.engine [--out BENCH_engine.json]
+
+Note on CPU numbers: ``pallas_fused`` runs in interpret mode off-TPU, so its
+absolute timings are meaningless there — the JSON records the platform so
+trajectories only compare like with like.  ``bytes_moved`` is analytic
+(payload vs dense-materialization traffic) and platform-independent.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.glvq import GLVQConfig
+from repro.core.testing import synthetic_payload
+from repro.core.quantized import QuantLinearMeta, quantize_param_tree
+from repro.kernels import ops
+from repro.models import registry
+
+BACKENDS = ("xla_decode", "pallas_fused")
+
+
+_payload = synthetic_payload
+
+
+def _time(fn, *args, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _bytes_moved(meta: QuantLinearMeta, m: int, backend: str) -> int:
+    """Analytic weight traffic per matmul: the fused path streams the packed
+    payload once; the decode path additionally writes + reads dense bf16 W."""
+    act = 4 * m * (meta.k + meta.n)
+    payload = meta.payload_bytes()
+    if backend == "pallas_fused":
+        return payload + act
+    dense = 2 * meta.k * meta.n
+    return payload + 2 * dense + act
+
+
+def bench_layers(m: int = 8, bits_list=(2, 3, 4), d: int = 8):
+    """Per-layer quant_matmul across backends on LM-ish projection shapes."""
+    rng = np.random.default_rng(0)
+    shapes = [(256, 1024), (1024, 256), (256, 256)]   # w1 / w2 / attn proj
+    rows = []
+    for (k, n) in shapes:
+        for bits in bits_list:
+            meta = QuantLinearMeta(k=k, n=n, bits=bits, d=d, group_size=128)
+            payload = _payload(rng, k, n, bits, d)
+            x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+            for backend in BACKENDS:
+                fn = jax.jit(lambda x, p: ops.quant_matmul(
+                    x, p, meta, backend=backend, out_dtype=jnp.float32))
+                sec = _time(fn, x, payload)
+                rows.append(dict(
+                    kind="layer", k=k, n=n, bits=bits, m=m, backend=backend,
+                    us_per_call=sec * 1e6,
+                    tokens_per_s=m / sec,
+                    bytes_moved=_bytes_moved(meta, m, backend),
+                ))
+                print(f"[engine] {k}x{n} b{bits} {backend:>12}: "
+                      f"{sec * 1e6:9.1f} us  {m / sec:10.1f} tok/s")
+    return rows
+
+
+def bench_model(batch: int = 4, steps: int = 8):
+    """Whole-model quantized decode step on the default platform backend."""
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=4, group_size=32)
+    qparams, qmeta = quantize_param_tree(params, cfg=qcfg)
+    cache = registry.cache_init(cfg, batch, 32, jnp.float32)
+    backend = ops.resolve_backend()
+    step = jax.jit(lambda p, c, t, pos: registry.decode_step(
+        p, c, t, pos, cfg, dtype=jnp.float32, qmeta=qmeta, backend=backend))
+    tok = jnp.zeros((batch,), jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+    logits, cache = step(qparams, cache, tok, pos)          # compile
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        pos = jnp.full((batch,), i, jnp.int32)
+        logits, cache = step(qparams, cache, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    sec = (time.perf_counter() - t0) / steps
+    row = dict(kind="model", arch="llama2-7b(reduced)", bits=4, batch=batch,
+               backend=backend, us_per_step=sec * 1e6,
+               tokens_per_s=batch / sec)
+    print(f"[engine] decode_step {backend}: {batch / sec:.1f} tok/s")
+    return [row]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(Path(__file__).parent
+                                         / "BENCH_engine.json"))
+    ap.add_argument("--m", type=int, default=8)
+    args = ap.parse_args(argv)
+    result = dict(
+        platform=jax.default_backend(),
+        default_backend=ops.resolve_backend(),
+        rows=bench_layers(m=args.m) + bench_model(),
+    )
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    print(f"[engine] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

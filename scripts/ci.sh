@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify entrypoint: the one command CI and humans run.
+#   ./scripts/ci.sh            -> tier-1 (fail-fast, mirrors ROADMAP.md)
+#   ./scripts/ci.sh tests/foo  -> forward extra pytest args
+#
+# Note: with -x the run stops at the first failure; in containers where
+# tests/test_sharding.py::test_compressed_pod_psum_subprocess fails
+# (pre-existing, needs jax.shard_map), the later test files are skipped.
+# For full coverage run:
+#   ./scripts/ci.sh --deselect tests/test_sharding.py::test_compressed_pod_psum_subprocess
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -2,9 +2,12 @@
 from repro.core.glvq import GLVQConfig, quantize_group, quantize_layer, dequantize_layer
 from repro.core.sdba import sdba, allocate_bits, group_salience, fractional_bits
 from repro.core import lattice, companding, packing, baselines, quantized
+from repro.core import qtensor
+from repro.core.qtensor import QuantTensor
 
 __all__ = [
     "GLVQConfig", "quantize_group", "quantize_layer", "dequantize_layer",
     "sdba", "allocate_bits", "group_salience", "fractional_bits",
     "lattice", "companding", "packing", "baselines", "quantized",
+    "qtensor", "QuantTensor",
 ]

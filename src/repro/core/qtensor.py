@@ -1,0 +1,243 @@
+"""QuantTensor: a first-class quantized weight with backend-dispatched matmul.
+
+A ``QuantTensor`` bundles one or more uniform-bit packed payloads with their
+``QuantLinearMeta`` (mixed-bit SDBA layers carry one segment per bit-width
+plus the group permutation) and exposes the two operations the rest of the
+system needs:
+
+  * ``qt.matmul(x)`` / ``x @ qt`` — y = x @ dequant(W), dispatched through
+    the backend registry in ``repro.kernels.ops`` (``pallas_fused`` on TPU
+    never materializes W in HBM; ``xla_decode`` on CPU; ``reference`` oracle).
+  * ``qt.dense(dtype)`` — explicit materialization, the opt-in for CPU
+    dry-runs and fake-quant evaluation.
+
+``QuantTensor`` is a registered jax pytree: payload arrays are children (so
+``jax.lax.scan`` slices a stacked [R, ...] weight into per-layer tensors,
+``jax.jit`` traces through it, and shardings apply), while metas / group
+indices / dispatch hints are static aux data.
+
+Layout convention (matches ``core.quantized``):
+  packed  uint32 [lead..., K, n_words]   b-bit codes packed along N
+  g       f32    [lead..., n_groups, d, d]
+  mu      f32    [lead..., n_groups]
+  scale   f32    [lead..., n_groups]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantized import (QuantLinearMeta, QuantSegments,
+                                  _PAYLOAD_KEYS, _meta_key)
+
+__all__ = ["QuantTensor", "wrap_tree", "dense_tree"]
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantTensor:
+    """Quantized [lead..., K, N] weight = segments of packed payloads + meta."""
+
+    def __init__(self, payloads: Tuple[Dict[str, Any], ...],
+                 metas: Tuple[QuantLinearMeta, ...],
+                 group_index: Optional[Tuple[Tuple[int, ...], ...]],
+                 k: int, n: int, group_size: int,
+                 out_dtype=None, backend: Optional[str] = None):
+        self.payloads = tuple(payloads)
+        self.metas = tuple(metas)
+        self.group_index = group_index
+        self.k = k
+        self.n = n
+        self.group_size = group_size
+        self.out_dtype = out_dtype
+        self.backend = backend
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_payload(cls, payload: Dict[str, Any], meta: QuantLinearMeta, *,
+                     backend: Optional[str] = None,
+                     out_dtype=None) -> "QuantTensor":
+        """Uniform-bit layer (possibly with leading stack dims)."""
+        return cls(payloads=(dict(payload),), metas=(meta,), group_index=None,
+                   k=meta.k, n=meta.n, group_size=meta.group_size,
+                   out_dtype=out_dtype, backend=backend)
+
+    @classmethod
+    def from_segments(cls, segs: QuantSegments, *,
+                      backend: Optional[str] = None,
+                      out_dtype=None) -> "QuantTensor":
+        """Mixed-bit (SDBA) layer: one segment per bit-width."""
+        metas = tuple(m for m, _, _ in segs.segments)
+        payloads = tuple(dict(p) for _, p, _ in segs.segments)
+        gidx = tuple(tuple(int(i) for i in np.asarray(idx))
+                     for _, _, idx in segs.segments)
+        return cls(payloads=payloads, metas=metas, group_index=gidx,
+                   k=segs.k, n=segs.n, group_size=segs.group_size,
+                   out_dtype=out_dtype, backend=backend)
+
+    # -- pytree --------------------------------------------------------------
+
+    def tree_flatten(self):
+        aux = (self.metas, self.group_index, self.k, self.n, self.group_size,
+               self.out_dtype, self.backend)
+        return (self.payloads,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        metas, gidx, k, n, gs, out_dtype, backend = aux
+        return cls(payloads=children[0], metas=metas, group_index=gidx,
+                   k=k, n=n, group_size=gs, out_dtype=out_dtype,
+                   backend=backend)
+
+    # -- properties ----------------------------------------------------------
+
+    @property
+    def is_mixed(self) -> bool:
+        return len(self.payloads) > 1 or self.group_index is not None
+
+    @property
+    def lead_shape(self) -> Tuple[int, ...]:
+        return tuple(self.payloads[0]["packed"].shape[:-2])
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.lead_shape + (self.k, self.n)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def avg_bits(self) -> float:
+        tot = sum(m.bits * (m.k // m.group_size) for m in self.metas)
+        cnt = sum(m.k // m.group_size for m in self.metas)
+        return tot / cnt
+
+    def payload_bytes(self) -> int:
+        n_stack = int(np.prod(self.lead_shape)) if self.lead_shape else 1
+        return n_stack * sum(m.payload_bytes() for m in self.metas)
+
+    def __repr__(self):
+        kind = "mixed" if self.is_mixed else f"{self.metas[0].bits}b"
+        return (f"QuantTensor({kind}, shape={self.shape}, "
+                f"d={self.metas[0].d}, gs={self.group_size})")
+
+    # -- dispatch ------------------------------------------------------------
+
+    def astype(self, dtype) -> "QuantTensor":
+        """Record the compute dtype for subsequent matmuls (keeps the
+        ``x @ w.astype(x.dtype)`` idiom working unchanged on quantized trees)."""
+        return QuantTensor(self.payloads, self.metas, self.group_index,
+                           self.k, self.n, self.group_size,
+                           out_dtype=jnp.dtype(dtype), backend=self.backend)
+
+    def with_backend(self, backend: Optional[str]) -> "QuantTensor":
+        return QuantTensor(self.payloads, self.metas, self.group_index,
+                           self.k, self.n, self.group_size,
+                           out_dtype=self.out_dtype, backend=backend)
+
+    def matmul(self, x, *, backend: Optional[str] = None, out_dtype=None,
+               zipped: Optional[bool] = None):
+        """y[..., N] = x[..., K] @ dequant(self), backend-dispatched.
+
+        Stacked tensors ([lead..., K, N]): ``zipped=True`` pairs x's leading
+        dims with the stack dims (slice i of x hits slice i of W — MoE
+        experts); ``zipped=False`` broadcasts x against every slice.
+        ``zipped=None`` auto-detects (zipped iff x's leading dims equal the
+        stack dims) — pass it explicitly when x could legitimately carry
+        batch dims that coincide with the stack shape.
+        """
+        from repro.kernels import ops
+        backend = backend if backend is not None else self.backend
+        out_dtype = out_dtype or self.out_dtype or x.dtype
+        lead = self.lead_shape
+        if not lead:
+            if not self.is_mixed:
+                return ops.quant_matmul(x, self.payloads[0], self.metas[0],
+                                        backend=backend, out_dtype=out_dtype)
+            return ops.quant_matmul_segments(
+                x, list(zip(self.metas, self.payloads, self.group_index)),
+                self.group_size, self.n, backend=backend, out_dtype=out_dtype)
+        if self.is_mixed:
+            raise NotImplementedError(
+                "stacked mixed-bit QuantTensor matmul is not supported; "
+                "segment layers are stored unstacked")
+        nlead = len(lead)
+        auto_zip = x.ndim >= nlead + 2 and x.shape[:nlead] == lead
+        if zipped is None:
+            zipped = auto_zip
+        if zipped == auto_zip and ops.resolve_backend(backend) == "xla_decode":
+            # one batched decode + one (broadcasting) matmul: keeps the HLO
+            # size constant in the number of stacked slices (MoE experts);
+            # jnp.matmul's broadcasting matches the requested zip semantics
+            # exactly when zipped == auto_zip
+            w = ops.quant_decode(self.payloads[0], self.metas[0],
+                                 dtype=x.dtype)
+            return jnp.matmul(x, w).astype(out_dtype)
+        size = int(np.prod(lead))
+        payload = {key: v.reshape((size,) + v.shape[nlead:])
+                   for key, v in self.payloads[0].items()}
+        if zipped:
+            xf = x.reshape((size,) + x.shape[nlead:])
+        outs = []
+        for i in range(size):
+            pl_i = {key: v[i] for key, v in payload.items()}
+            xi = xf[i] if zipped else x
+            outs.append(ops.quant_matmul(xi, pl_i, self.metas[0],
+                                         backend=backend,
+                                         out_dtype=out_dtype))
+        return jnp.stack(outs).reshape(lead + outs[0].shape)
+
+    def __rmatmul__(self, x):
+        return self.matmul(x)
+
+    def dense(self, dtype=jnp.float32):
+        """Materialize the dense weight [lead..., K, N] — explicit opt-in."""
+        from repro.kernels import ops
+        if not self.is_mixed:
+            return ops.quant_decode(self.payloads[0], self.metas[0],
+                                    dtype=dtype)
+        gs = self.group_size
+        w = jnp.zeros((self.k // gs, gs, self.n), jnp.float32)
+        for meta, payload, idx in zip(self.metas, self.payloads,
+                                      self.group_index):
+            seg = ops.quant_decode(payload, meta, dtype=jnp.float32)
+            w = w.at[jnp.asarray(idx)].set(seg.reshape(len(idx), gs, self.n))
+        return w.reshape(self.k, self.n).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree wrapping (the model / serving entry point)
+# ---------------------------------------------------------------------------
+
+def wrap_tree(tree, meta_by_key: Dict, *, backend: Optional[str] = None):
+    """Replace packed-payload dicts with QuantTensor nodes.
+
+    Walks the param tree exactly like ``core.quantized`` does when packing:
+    a dict with keys {packed, g, mu, scale} whose (block-kind, weight-name)
+    suffix appears in ``meta_by_key`` becomes one QuantTensor.  Works on the
+    full tree or any subtree; on concrete arrays, tracers, or SDS stand-ins.
+    """
+    def rebuild(node, names=()):
+        if isinstance(node, dict) and set(node) == set(_PAYLOAD_KEYS) \
+                and _meta_key(names) in meta_by_key:
+            return QuantTensor.from_payload(node, meta_by_key[_meta_key(names)],
+                                            backend=backend)
+        if isinstance(node, dict):
+            return {k: rebuild(v, names + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rebuild(v, names) for v in node)
+        return node
+
+    return rebuild(tree)
+
+
+def dense_tree(tree, meta_by_key: Dict, dtype=jnp.bfloat16):
+    """Materialize every quantized weight in the tree (explicit opt-in for
+    CPU dry-runs / fake-quant eval; the serving path uses wrap_tree)."""
+    wrapped = wrap_tree(tree, meta_by_key)
+    return jax.tree_util.tree_map(
+        lambda n: n.dense(dtype) if isinstance(n, QuantTensor) else n,
+        wrapped, is_leaf=lambda n: isinstance(n, QuantTensor))

@@ -8,12 +8,12 @@
 plus static metadata (bits, d, group_size, K, N). Mixed-bit layers (SDBA)
 are stored as up-to-three uniform-bit segments with a group permutation.
 
-Two decode paths:
-  * ``decode_xla``  — pure-jnp unpack + blocked G·Z + inverse companding.
-    Used on CPU and in the multi-pod dry-run (Pallas CPU lowering is
-    interpret-only); XLA fuses the unpack arithmetic but materializes W.
-  * kernels.ops.glvq_matmul — Pallas TPU fused decode+GEMM (see repro.kernels)
-    which never materializes W in HBM; selected with use_pallas=True.
+Runtime execution lives in the quantized-execution engine: payload dicts are
+wrapped into ``repro.core.qtensor.QuantTensor`` nodes whose ``matmul`` /
+``dense`` dispatch through the backend registry in ``repro.kernels.ops``
+(``pallas_fused`` fused decode+GEMM on TPU, ``xla_decode`` elsewhere,
+``reference`` oracle).  ``decode_xla`` below is the canonical unpack +
+blocked G·Z + inverse-companding decode the ``xla_decode`` backend calls.
 """
 from __future__ import annotations
 
@@ -27,8 +27,9 @@ import numpy as np
 from repro.core import companding, packing
 from repro.core.glvq import GLVQConfig, GroupQuant
 
-__all__ = ["QuantLinearMeta", "pack_layer", "decode_xla", "quant_matmul_xla",
-           "segment_layer", "QuantSegments"]
+__all__ = ["QuantLinearMeta", "pack_layer", "decode_xla",
+           "segment_layer", "QuantSegments", "materialize_tree",
+           "decode_segments", "quantize_param_tree", "quantized_param_shapes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,13 +73,6 @@ def decode_xla(payload: Dict[str, jax.Array], meta: QuantLinearMeta) -> jax.Arra
     w = companding.expand(y, payload["mu"][:, None, None])
     w = w * payload["scale"][:, None, None]
     return w.reshape(meta.k, meta.n)
-
-
-def quant_matmul_xla(x: jax.Array, payload: Dict[str, jax.Array],
-                     meta: QuantLinearMeta, dtype=jnp.bfloat16) -> jax.Array:
-    """y = x @ dequant(W) via the XLA path."""
-    w = decode_xla(payload, meta).astype(dtype)
-    return x @ w
 
 
 # ---------------------------------------------------------------------------
@@ -203,40 +197,17 @@ def quantize_param_tree(params, *, cfg: GLVQConfig, bits: Optional[int] = None,
     return new, meta
 
 
-def _decode_any(payload: Dict[str, jax.Array], m: QuantLinearMeta, dtype):
-    """Decode a payload with arbitrary leading stack dims."""
-    packed = payload["packed"]
-    lead = packed.shape[:-2]
-    if not lead:
-        return decode_xla(payload, m).astype(dtype)
-    flat = {k: v.reshape((-1,) + v.shape[len(lead):]) for k, v in payload.items()}
-    w = jax.vmap(lambda p: decode_xla(p, m))(flat)
-    return w.reshape(lead + (m.k, m.n)).astype(dtype)
-
-
 def materialize_tree(qparams, meta_by_key, dtype=jnp.bfloat16):
-    """Inside-jit decode: payload dicts -> dense weights (original shapes).
+    """Materialize every payload in the tree to a dense weight.
 
-    Works on the full tree or on any subtree (e.g. a per-layer slice inside
-    jax.lax.scan — the streaming-decode path)."""
-
-    def rebuild(node, names=()):
-        if isinstance(node, dict) and set(node) == _PAYLOAD_KEYS \
-                and _meta_key(names) in meta_by_key:
-            return _decode_any(node, meta_by_key[_meta_key(names)], dtype)
-        if isinstance(node, dict):
-            return {k: rebuild(v, names + (k,)) for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            return type(node)(rebuild(v, names) for v in node)
-        return node
-
-    return rebuild(qparams)
+    Back-compat alias for :func:`repro.core.qtensor.dense_tree` — explicit
+    materialization is the opt-in path (CPU dry-runs, fake-quant eval); the
+    model hot path wraps payloads into QuantTensor and dispatches matmuls."""
+    from repro.core import qtensor
+    return qtensor.dense_tree(qparams, meta_by_key, dtype)
 
 
 def decode_segments(qs: QuantSegments) -> jax.Array:
     """Reassemble the full [K, N] weight from mixed-bit segments."""
-    w = jnp.zeros((qs.k // qs.group_size, qs.group_size, qs.n), jnp.float32)
-    for meta, payload, idx in qs.segments:
-        wseg = decode_xla(payload, meta).reshape(len(idx), qs.group_size, qs.n)
-        w = w.at[jnp.asarray(idx)].set(wseg)
-    return w.reshape(qs.k, qs.n)
+    from repro.core import qtensor
+    return qtensor.QuantTensor.from_segments(qs).dense(jnp.float32)

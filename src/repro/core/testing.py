@@ -1,0 +1,31 @@
+"""Shared synthetic fixtures for tests and benchmarks.
+
+Keeps the random packed-payload generator in one place so the backend-parity
+tests and the engine benchmark exercise the same payload distribution.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+__all__ = ["synthetic_payload"]
+
+
+def synthetic_payload(rng: np.random.Generator, k: int, n: int, bits: int,
+                      d: int, group_size: int = 128) -> Dict[str, jax.Array]:
+    """Random uniform-bit packed payload (codes + G + mu + scale) [K, N]."""
+    n_g = k // group_size
+    lo = -(2 ** (bits - 1)) if bits > 1 else -1
+    hi = 2 ** (bits - 1) - 1 if bits > 1 else 0
+    codes = rng.integers(lo, hi + 1, size=(k, n))
+    return dict(
+        packed=packing.pack_codes(jnp.asarray(codes, jnp.int32), bits),
+        g=jnp.asarray(rng.normal(size=(n_g, d, d)) * 0.1 + np.eye(d) * 0.3,
+                      jnp.float32),
+        mu=jnp.asarray(rng.uniform(10, 250, size=(n_g,)), jnp.float32),
+        scale=jnp.asarray(rng.uniform(0.3, 3.0, size=(n_g,)), jnp.float32))

@@ -1,22 +1,40 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""Quantized-execution engine: backend registry + jit'd Pallas wrappers.
 
-Handles block-size selection, padding to block multiples, and backend
-selection: on CPU (this container) the kernels run in interpret mode to
-validate the kernel bodies; on TPU set interpret=False for compiled Mosaic.
+This module is the single dispatch point for "a matmul against quantized
+weights".  Every consumer (models, serving, launch, benchmarks) goes through
+``quant_matmul`` / ``quant_matmul_segments`` / ``quant_decode`` — or, one
+level up, through ``repro.core.qtensor.QuantTensor`` which bundles payload +
+meta and calls down into this registry.
+
+Backends
+--------
+  * ``pallas_fused`` — Pallas TPU fused decode+GEMM (kernels.glvq_matmul);
+    the weight never materializes in HBM.  Interpret-mode on CPU.
+  * ``xla_decode``   — pure-jnp unpack + blocked G·Z + inverse companding,
+    then a dense GEMM; XLA fuses the unpack arithmetic but materializes W.
+  * ``reference``    — the jnp oracle in kernels.ref (ground truth, slow).
+
+Selection: explicit ``backend=`` argument > ``REPRO_QUANT_BACKEND`` env var >
+platform default (``pallas_fused`` on TPU, ``xla_decode`` elsewhere).
 """
 from __future__ import annotations
 
 import functools
 import math
+import os
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.packing import per_word
 from repro.kernels.babai_quant import babai_quantize_pallas
 from repro.kernels.glvq_matmul import glvq_matmul_pallas
 
-__all__ = ["glvq_matmul", "babai_quantize", "pick_n_block"]
+__all__ = ["glvq_matmul", "babai_quantize", "pick_n_block",
+           "register_matmul_backend", "matmul_backends", "resolve_backend",
+           "quant_matmul", "quant_matmul_segments", "quant_decode"]
 
 
 def _on_tpu() -> bool:
@@ -44,11 +62,19 @@ def glvq_matmul(x, packed, g, mu, scale, *, bits: int, d: int, n: int,
         interpret = not _on_tpu()
     m, k = x.shape
     pw = per_word(bits)
-    n_pad = packed.shape[1] * pw
     m_block = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
     mb_pad = -m % m_block
     if mb_pad:
         x = jnp.pad(x, ((0, mb_pad), (0, 0)))
+    # pad n_words so n_pad is a whole number of (per_word, d)-aligned units
+    # (bits=3 payloads with small N otherwise have no valid block size)
+    unit = pw * d // math.gcd(pw, d)
+    w_words = packed.shape[1]
+    while (w_words * pw) % unit:
+        w_words += 1
+    if w_words != packed.shape[1]:
+        packed = jnp.pad(packed, ((0, 0), (0, w_words - packed.shape[1])))
+    n_pad = w_words * pw
     n_block = pick_n_block(n_pad, bits, d)
     out = glvq_matmul_pallas(x, packed, g, mu, scale, bits=bits, d=d,
                              group_size=group_size, m_block=m_block,
@@ -70,3 +96,115 @@ def babai_quantize(w, g_inv, mu, scale, *, bits: int, d: int,
     return babai_quantize_pallas(w, g_inv, mu, scale, bits=bits, d=d,
                                  group_size=group_size, n_block=n_block,
                                  interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry (the quantized-matmul engine)
+# ---------------------------------------------------------------------------
+
+# name -> fn(x2 [M, K], payload dict, QuantLinearMeta) -> y [M, n]
+_MATMUL_BACKENDS: Dict[str, Callable] = {}
+
+_ENV_BACKEND = "REPRO_QUANT_BACKEND"
+
+
+def register_matmul_backend(name: str):
+    """Decorator: register ``fn(x [M, K], payload, meta) -> y [M, n]``."""
+    def deco(fn):
+        _MATMUL_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def matmul_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_MATMUL_BACKENDS))
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """explicit arg > REPRO_QUANT_BACKEND env > platform default."""
+    if backend is None:
+        backend = os.environ.get(_ENV_BACKEND, "").strip() or None
+    if backend is None:
+        return "pallas_fused" if _on_tpu() else "xla_decode"
+    if backend not in _MATMUL_BACKENDS:
+        raise ValueError(f"unknown quant backend {backend!r}; "
+                         f"available: {matmul_backends()}")
+    return backend
+
+
+@register_matmul_backend("pallas_fused")
+def _backend_pallas_fused(x, payload, meta):
+    return glvq_matmul(x, payload["packed"], payload["g"], payload["mu"],
+                       payload["scale"], bits=meta.bits, d=meta.d, n=meta.n,
+                       group_size=meta.group_size)
+
+
+@register_matmul_backend("xla_decode")
+def _backend_xla_decode(x, payload, meta):
+    from repro.core import quantized
+    w = quantized.decode_xla(payload, meta).astype(x.dtype)
+    return x @ w
+
+
+@register_matmul_backend("reference")
+def _backend_reference(x, payload, meta):
+    from repro.kernels import ref
+    return ref.glvq_matmul_ref(x, payload["packed"], payload["g"],
+                               payload["mu"], payload["scale"],
+                               bits=meta.bits, d=meta.d, n=meta.n,
+                               group_size=meta.group_size)
+
+
+def quant_matmul(x, payload, meta, *, backend: Optional[str] = None,
+                 out_dtype=None):
+    """y = x @ dequant(payload).  x [..., K] (leading dims flattened to M),
+    unstacked payload.  The one entry point every call site dispatches through."""
+    name = resolve_backend(backend)
+    out_dtype = out_dtype or x.dtype
+    batch = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = _MATMUL_BACKENDS[name](x2, payload, meta)
+    return y.reshape(batch + (meta.n,)).astype(out_dtype)
+
+
+def quant_matmul_segments(x, segments: Sequence, group_size: int, n: int, *,
+                          backend: Optional[str] = None, out_dtype=None):
+    """Mixed-bit (SDBA) fused matmul: loop uniform-bit segments through the
+    backend and sum partial products.
+
+    ``segments`` is a sequence of ``(meta, payload, group_idx)`` where
+    ``group_idx`` gives each segment row-group's position in the original
+    [K, N] weight.  Because SDBA splits along K (input groups), the fix-up is
+    an input-side gather: segment s contracts x's columns at its groups, and
+    every segment emits a full-N partial product — no output permutation
+    remains after the sum.
+    """
+    name = resolve_backend(backend)
+    out_dtype = out_dtype or x.dtype
+    batch = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = None
+    for meta, payload, gidx in segments:
+        idx = np.asarray(gidx, np.int64)
+        cols = (idx[:, None] * group_size
+                + np.arange(group_size)[None, :]).reshape(-1)
+        xs = jnp.take(x2, jnp.asarray(cols), axis=1)
+        ys = _MATMUL_BACKENDS[name](xs, payload, meta)
+        y = ys if y is None else y + ys
+    return y.reshape(batch + (n,)).astype(out_dtype)
+
+
+def quant_decode(payload, meta, *, dtype=jnp.float32):
+    """Materialize dense W [lead..., K, N] from a (possibly stacked) payload.
+
+    Explicit opt-in (CPU dry-runs, debugging, fake-quant eval) — the serving
+    hot path never calls this; it dispatches ``quant_matmul`` instead."""
+    from repro.core import quantized
+    packed = payload["packed"]
+    lead = packed.shape[:-2]
+    if not lead:
+        return quantized.decode_xla(payload, meta).astype(dtype)
+    flat = {k: v.reshape((-1,) + v.shape[len(lead):])
+            for k, v in payload.items()}
+    w = jax.vmap(lambda p: quantized.decode_xla(p, meta))(flat)
+    return w.reshape(lead + (meta.k, meta.n)).astype(dtype)

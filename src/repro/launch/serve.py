@@ -32,26 +32,28 @@ def serve_param_shapes(cfg: ModelConfig, *, quant_bits: int = 0,
 
 
 def make_decode_step(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                     unroll: int = 1):
+                     unroll: int = 1, backend: Optional[str] = None):
+    """One-token decode closure; quantized weights dispatch through the
+    QuantTensor engine (``backend`` from kernels.ops.matmul_backends())."""
     def decode_step(params, cache, token, pos):
-        kw = dict(dtype=dtype, unroll=unroll)
-        if not registry.is_encdec(cfg):
-            kw["qmeta"] = qmeta
-        return registry.decode_step(params, cache, token, pos, cfg, **kw)
+        return registry.decode_step(params, cache, token, pos, cfg,
+                                    dtype=dtype, unroll=unroll, qmeta=qmeta,
+                                    backend=backend)
     return decode_step
 
 
 def make_prefill(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                 unroll: int = 1):
+                 unroll: int = 1, backend: Optional[str] = None):
     def prefill(params, batch):
         return registry.forward(params, batch, cfg, dtype=dtype, qmeta=qmeta,
-                                unroll=unroll)
+                                unroll=unroll, backend=backend)
     return prefill
 
 
 def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
                  quant_bits: int = 0, quant_d: int = 16,
-                 dtype=jnp.bfloat16, unroll: int = 1):
+                 dtype=jnp.bfloat16, unroll: int = 1,
+                 backend: Optional[str] = None):
     """AOT-lower one decode step against a seq_len-deep cache."""
     b, s = shape.global_batch, shape.seq_len
     params_sds, qmeta = serve_param_shapes(cfg, quant_bits=quant_bits,
@@ -66,7 +68,7 @@ def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
         if b % sharding.dp_size(mesh) == 0 else P()
     logits_s = sharding.logits_spec(cfg.vocab, mesh, b)
 
-    step = make_decode_step(cfg, qmeta, dtype, unroll)
+    step = make_decode_step(cfg, qmeta, dtype, unroll, backend)
     jitted = jax.jit(
         step,
         in_shardings=sharding.named((p_specs, c_specs, bspec, P()), mesh),
@@ -79,12 +81,13 @@ def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
 
 def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
                   quant_bits: int = 0, quant_d: int = 16,
-                  dtype=jnp.bfloat16, batch: int = 0, unroll: int = 1):
+                  dtype=jnp.bfloat16, batch: int = 0, unroll: int = 1,
+                  backend: Optional[str] = None):
     params_sds, qmeta = serve_param_shapes(cfg, quant_bits=quant_bits,
                                            quant_d=quant_d, dtype=dtype)
     p_specs = sharding.param_specs(params_sds, mesh)
     b_specs = sharding.batch_specs(batch_sds, mesh)
-    fn = make_prefill(cfg, qmeta, dtype, unroll)
+    fn = make_prefill(cfg, qmeta, dtype, unroll, backend)
     jitted = jax.jit(fn,
                      in_shardings=sharding.named((p_specs, b_specs), mesh),
                      out_shardings=None)
@@ -103,6 +106,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    help="quantized-matmul backend "
+                         "(pallas_fused | xla_decode | reference)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -114,7 +120,8 @@ def main(argv=None):
         params, qmeta = quantized.quantize_param_tree(params, cfg=qcfg)
         print(f"[serve] quantized weights to {args.quant_bits} bits")
     cache = registry.cache_init(cfg, args.batch, 64, jnp.float32)
-    step = jax.jit(make_decode_step(cfg, qmeta, jnp.float32))
+    step = jax.jit(make_decode_step(cfg, qmeta, jnp.float32,
+                                    backend=args.backend))
     tok = jnp.zeros((args.batch,), jnp.int32)
     t0 = time.time()
     for i in range(args.steps):

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.qtensor import QuantTensor
 
 Params = Dict[str, Any]
 
@@ -25,6 +26,37 @@ Params = Dict[str, Any]
 def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
     scale = scale if scale is not None else d_in ** -0.5
     return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# quantized-execution dispatch
+# ---------------------------------------------------------------------------
+
+def linear(x, w, dtype=None):
+    """y = x @ w for a dense [K, N] weight or a QuantTensor.
+
+    The single matmul call site for the model stack: quantized weights
+    dispatch through the backend engine (fused decode+GEMM on TPU — the
+    dense weight never materializes); dense weights take the plain GEMM.
+    """
+    dt = dtype or x.dtype
+    if isinstance(w, QuantTensor):
+        return w.matmul(x, out_dtype=dt)
+    return x @ w.astype(dt)
+
+
+def expert_linear(xb, w, dtype=None):
+    """Per-expert matmul: xb [g, e, cap, d] x w [e, d, f] -> [g, e, cap, f].
+
+    QuantTensor experts run the zipped stacked path (one engine dispatch per
+    expert slice); dense experts keep the einsum XLA already fuses well."""
+    dt = dtype or xb.dtype
+    if isinstance(w, QuantTensor):
+        g, e, cap, d = xb.shape
+        xt = xb.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+        y = w.matmul(xt, out_dtype=dt, zipped=True)
+        return y.reshape(e, g, cap, -1).transpose(1, 0, 2, 3)
+    return jnp.einsum("gecd,edf->gecf", xb, w.astype(dt))
 
 
 # ---------------------------------------------------------------------------
@@ -98,11 +130,11 @@ def attn_init(key, cfg: ModelConfig) -> Params:
 def _qkv(p, x, cfg: ModelConfig, pos, *, cross_kv=None):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
     src = cross_kv if cross_kv is not None else x
     sk = src.shape[1]
-    k = (src @ p["wk"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
-    v = (src @ p["wv"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    k = linear(src, p["wk"], x.dtype).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = linear(src, p["wv"], x.dtype).reshape(b, sk, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -143,7 +175,7 @@ def attention(p, x, cfg: ModelConfig, pos, *, causal: bool = True,
     if causal and cross_kv is None:
         mask = jnp.tril(jnp.ones((s, s), jnp.bool_))[None, None, None]
     out = _sdpa(q, k, v, mask, n_rep)
-    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+    return linear(out.reshape(b, s, -1), p["wo"], x.dtype)
 
 
 def local_attention(p, x, cfg: ModelConfig, pos):
@@ -188,7 +220,7 @@ def local_attention(p, x, cfg: ModelConfig, pos):
     probs = jax.nn.softmax(scores, axis=-1).astype(v2.dtype)
     out = jnp.einsum("bngrst,bntgd->bnsgrd", probs, v2)
     out = out.reshape(b, sp, cfg.n_heads * cfg.hd)[:, :s]
-    return out @ p["wo"].astype(x.dtype)
+    return linear(out, p["wo"], x.dtype)
 
 
 def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
@@ -197,9 +229,9 @@ def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
     b = x.shape[0]
     hd = cfg.hd
     n_rep = cfg.n_heads // cfg.n_kv_heads
-    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd)
-    k = (x @ p["wk"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
-    v = (x @ p["wv"].astype(x.dtype)).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = linear(x, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k = linear(x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = linear(x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -241,7 +273,7 @@ def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
     scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     out = jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
-    return out @ p["wo"].astype(x.dtype), dict(k=ck, v=cv)
+    return linear(out, p["wo"], x.dtype), dict(k=ck, v=cv)
 
 
 def attn_cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype):
@@ -267,14 +299,14 @@ def mlp_init(key, cfg: ModelConfig) -> Params:
 
 
 def mlp(p, x, cfg: ModelConfig):
-    h = x @ p["w1"].astype(x.dtype)
+    h = linear(x, p["w1"])
     if cfg.act == "swiglu":
-        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+        h = jax.nn.silu(h) * linear(x, p["w3"])
     elif cfg.act == "sq_relu":
         h = jnp.square(jax.nn.relu(h))
     else:
         h = jax.nn.gelu(h)
-    return h @ p["w2"].astype(x.dtype)
+    return linear(h, p["w2"], x.dtype)
 
 
 def moe_init(key, cfg: ModelConfig) -> Params:
@@ -330,8 +362,7 @@ def moe(p, x, cfg: ModelConfig, *, chunks: int = 0):
 
     xc = _constrain(x.reshape(g, tc, d), (_DP[0], None, None),
                     (_DP1[0], None, None), ())
-    gates = jax.nn.softmax(jnp.einsum(
-        "gtd,de->gte", xc, p["router"].astype(x.dtype)).astype(jnp.float32))
+    gates = jax.nn.softmax(linear(xc, p["router"], x.dtype).astype(jnp.float32))
     topv, topi = jax.lax.top_k(gates, k)                     # [g, tc, k]
     topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
 
@@ -357,13 +388,12 @@ def moe(p, x, cfg: ModelConfig, *, chunks: int = 0):
     # expert-parallel segment: chunks stay on data axes, experts on model
     xb = _constrain(xb, (_DP[0], "model", None, None),
                     (_DP1[0], "model", None, None), ())
-    h = jnp.einsum("gecd,edf->gecf", xb, p["w1"].astype(x.dtype))
+    h = expert_linear(xb, p["w1"], x.dtype)
     if cfg.act == "swiglu":
-        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xb,
-                                        p["w3"].astype(x.dtype))
+        h = jax.nn.silu(h) * expert_linear(xb, p["w3"], x.dtype)
     else:
         h = jax.nn.gelu(h)
-    yb = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(x.dtype))
+    yb = expert_linear(h, p["w2"], x.dtype)
     yb = yb * valid[..., None].astype(x.dtype)
     # keep ybuf EXPERT-SHARDED: the combine gather then lowers to a masked
     # partial gather + all-reduce of [g, tc*k, d] (tokens) instead of an

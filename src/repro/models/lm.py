@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import quantized
+from repro.core import qtensor
 from repro.models import layers, rglru, ssm
 from repro.models.layers import rms_norm
 
@@ -122,12 +122,19 @@ def init_params(key, cfg: ModelConfig) -> Params:
     return p
 
 
+def _quantized_view(params: Params, qmeta, backend) -> Params:
+    """Wrap packed payload dicts into QuantTensor nodes (the engine entry).
+
+    The scan over ``blocks`` then slices each QuantTensor's payload arrays to
+    the current repeat — the paper's streaming decode (Sec 3.4) — and every
+    matmul inside the blocks dispatches through the backend registry instead
+    of materializing the dense weight in HBM."""
+    return qtensor.wrap_tree(params, qmeta, backend=backend)
+
+
 def _backbone(params: Params, x, cfg: ModelConfig, pos, *, remat: bool = False,
-              qmeta=None, unroll: int = 1):
+              unroll: int = 1):
     def unit_apply(x, unit_params):
-        if qmeta:
-            # streaming decode: dequantize only this repeat's weights (Sec 3.4)
-            unit_params = quantized.materialize_tree(unit_params, qmeta, x.dtype)
         for kind, p in zip(cfg.scan_unit, unit_params):
             x = block_apply(p, x, cfg, kind, pos)
         return x
@@ -138,10 +145,7 @@ def _backbone(params: Params, x, cfg: ModelConfig, pos, *, remat: bool = False,
         return fn(x, unit_params), None
 
     x, _ = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
-    tail = params["tail"]
-    if qmeta:
-        tail = quantized.materialize_tree(tail, qmeta, x.dtype)
-    for kind, p in zip(cfg.scan_tail, tail):
+    for kind, p in zip(cfg.scan_tail, params["tail"]):
         x = block_apply(p, x, cfg, kind, pos)
     return x
 
@@ -166,10 +170,12 @@ def embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             *, dtype=jnp.bfloat16, remat: bool = False, qmeta=None,
-            unroll: int = 1):
+            unroll: int = 1, backend=None):
     """logits [B, S, V] (f32)."""
+    if qmeta:
+        params = _quantized_view(params, qmeta, backend)
     x, pos = embed_inputs(params, batch, cfg, dtype)
-    x = _backbone(params, x, cfg, pos, remat=remat, qmeta=qmeta, unroll=unroll)
+    x = _backbone(params, x, cfg, pos, remat=remat, unroll=unroll)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     return (x @ head.astype(dtype)).astype(jnp.float32)
@@ -205,14 +211,19 @@ def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Params:
 
 
 def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
-                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1):
-    """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache)."""
+                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
+                backend=None):
+    """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache).
+
+    With ``qmeta``, every matmul against a quantized weight dispatches through
+    ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
+    the dense weight never materializes on the fused backend."""
+    if qmeta:
+        params = _quantized_view(params, qmeta, backend)
     x = params["embed"].astype(dtype)[token][:, None, :]    # [B,1,D]
 
     def body(x, inp):
         unit_params, unit_cache = inp
-        if qmeta:
-            unit_params = quantized.materialize_tree(unit_params, qmeta, dtype)
         new_caches = []
         for kind, p, c in zip(cfg.scan_unit, unit_params, unit_cache):
             x, nc = block_decode(p, x, cfg, kind, c, pos)
@@ -222,10 +233,7 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
     x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]),
                                  unroll=unroll)
     new_tail = []
-    tail = params["tail"]
-    if qmeta:
-        tail = quantized.materialize_tree(tail, qmeta, dtype)
-    for kind, p, c in zip(cfg.scan_tail, tail, cache["tail"]):
+    for kind, p, c in zip(cfg.scan_tail, params["tail"], cache["tail"]):
         x, nc = block_decode(p, x, cfg, kind, c, pos)
         new_tail.append(nc)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)

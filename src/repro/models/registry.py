@@ -1,5 +1,12 @@
 """Model registry: uniform init / loss / decode API over all families,
-plus ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run."""
+plus ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run.
+
+Quantized execution: ``forward`` / ``decode_step`` accept ``qmeta`` (packed-
+payload metadata from ``core.quantized``) and ``backend`` (a name from
+``kernels.ops.matmul_backends()``); the LM wraps payloads into QuantTensor
+nodes and dispatches every matmul through the engine.  The encoder-decoder
+family is not quantized yet, so those kwargs are stripped here rather than
+at every call site."""
 from __future__ import annotations
 
 import functools
@@ -29,21 +36,29 @@ def param_shapes(cfg: ModelConfig):
                           jax.ShapeDtypeStruct((2,), jnp.uint32))
 
 
+def _strip_quant_kwargs(kw: Dict[str, Any]) -> Dict[str, Any]:
+    kw = dict(kw)
+    kw.pop("qmeta", None)
+    kw.pop("backend", None)
+    return kw
+
+
 def loss_fn(params, batch, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
-        return whisper.loss_fn(params, batch, cfg, **kw)
+        return whisper.loss_fn(params, batch, cfg, **_strip_quant_kwargs(kw))
     return lm.loss_fn(params, batch, cfg, **kw)
 
 
 def forward(params, batch, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
-        return whisper.forward(params, batch, cfg, **kw)
+        return whisper.forward(params, batch, cfg, **_strip_quant_kwargs(kw))
     return lm.forward(params, batch, cfg, **kw)
 
 
 def decode_step(params, cache, token, pos, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
-        return whisper.decode_step(params, cache, token, pos, cfg, **kw)
+        return whisper.decode_step(params, cache, token, pos, cfg,
+                                   **_strip_quant_kwargs(kw))
     return lm.decode_step(params, cache, token, pos, cfg, **kw)
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import dense_init, linear, rms_norm
 
 Params = Dict[str, Any]
 _C = 8.0
@@ -48,8 +48,8 @@ def _conv1d(u, w, bias):
 
 
 def _gates(p, v):
-    r = jax.nn.sigmoid((v @ p["wr"].astype(v.dtype)).astype(jnp.float32))
-    i = jax.nn.sigmoid((v @ p["wi"].astype(v.dtype)).astype(jnp.float32))
+    r = jax.nn.sigmoid(linear(v, p["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(v, p["wi"]).astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"])[None] * r
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * v.astype(jnp.float32)
@@ -59,8 +59,8 @@ def _gates(p, v):
 def rglru_forward(p, x, cfg: ModelConfig):
     """x [B,L,D] -> [B,L,D] via associative scan (parallel over time)."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    gate = jax.nn.gelu(h @ p["wg"].astype(x.dtype))
-    v = _conv1d(h @ p["wx"].astype(x.dtype),
+    gate = jax.nn.gelu(linear(h, p["wg"], x.dtype))
+    v = _conv1d(linear(h, p["wx"], x.dtype),
                 p["conv"].astype(x.dtype), p["conv_bias"].astype(x.dtype))
     a, b = _gates(p, v)                                   # [B,L,R] f32
 
@@ -70,7 +70,7 @@ def rglru_forward(p, x, cfg: ModelConfig):
         return a1 * a2, b1 * a2 + b2
 
     _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
-    y = (hseq.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    y = linear(hseq.astype(x.dtype) * gate, p["wo"], x.dtype)
     return y
 
 
@@ -85,12 +85,12 @@ def rglru_cache_init(cfg: ModelConfig, batch: int, dtype):
 def rglru_decode(p, x, cfg: ModelConfig, cache):
     """One-step decode. x [B,1,D]."""
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    gate = jax.nn.gelu(h @ p["wg"].astype(x.dtype))[:, 0]
-    u = (h @ p["wx"].astype(x.dtype))[:, 0]               # [B,R]
+    gate = jax.nn.gelu(linear(h, p["wg"], x.dtype))[:, 0]
+    u = linear(h, p["wx"], x.dtype)[:, 0]                 # [B,R]
     conv_in = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
     w = p["conv"].astype(x.dtype)
     v = jnp.sum(conv_in * w[None], axis=1) + p["conv_bias"][None].astype(x.dtype)
     a, b = _gates(p, v)                                   # [B,R]
     state = a * cache["state"] + b
-    y = (state.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    y = linear(state.astype(x.dtype) * gate, p["wo"], x.dtype)
     return y[:, None], dict(conv=conv_in[:, 1:], state=state)

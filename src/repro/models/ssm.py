@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import dense_init, linear, rms_norm
 
 Params = Dict[str, Any]
 
@@ -110,7 +110,7 @@ def mamba_forward(p, x, cfg: ModelConfig):
     bsz, l, d = x.shape
     d_in, nh, ns = ssm_dims(cfg)
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    zxbcdt = h @ p["in_proj"].astype(x.dtype)
+    zxbcdt = linear(h, p["in_proj"], x.dtype)
     z, xs, b, c, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
     xbc = _conv1d(jnp.concatenate([xs, b, c], axis=-1),
@@ -132,7 +132,7 @@ def mamba_forward(p, x, cfg: ModelConfig):
     y = y + xh[:, :l] * p["d_skip"][None, None, :, None].astype(x.dtype)
     y = y.reshape(bsz, l, d_in)
     y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
-    return y @ p["out_proj"].astype(x.dtype)
+    return linear(y, p["out_proj"], x.dtype)
 
 
 def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
@@ -149,7 +149,7 @@ def mamba_decode(p, x, cfg: ModelConfig, cache):
     bsz = x.shape[0]
     d_in, nh, ns = ssm_dims(cfg)
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    zxbcdt = (h @ p["in_proj"].astype(x.dtype))[:, 0]
+    zxbcdt = linear(h, p["in_proj"], x.dtype)[:, 0]
     z, xs, b, c, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
     xbc_new = jnp.concatenate([xs, b, c], axis=-1)             # [B, C]
@@ -169,4 +169,4 @@ def mamba_decode(p, x, cfg: ModelConfig, cache):
     y = y.reshape(bsz, 1, d_in)
     y = rms_norm(y * jax.nn.silu(z[:, None]), p["out_norm"], cfg.norm_eps)
     new_cache = dict(conv=conv_in[:, 1:], state=state)
-    return y @ p["out_proj"].astype(x.dtype), new_cache
+    return linear(y, p["out_proj"], x.dtype), new_cache

@@ -99,9 +99,7 @@ def decode_train(params: Params, tokens, enc_out, cfg: ModelConfig,
 
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
-            *, dtype=jnp.bfloat16, remat: bool = False, unroll: int = 1,
-            qmeta=None):
-    del qmeta  # enc-dec serving keeps dense bf16 weights in this repo
+            *, dtype=jnp.bfloat16, remat: bool = False, unroll: int = 1):
     enc_out = encode(params, batch["frames"].astype(dtype), cfg, remat=remat,
                      unroll=unroll)
     return decode_train(params, batch["tokens"], enc_out, cfg, remat=remat,

@@ -51,7 +51,11 @@ class _Slot:
 class ContinuousBatcher:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  s_cache: int = 64, dtype=jnp.float32, qmeta=None,
-                 pad_token: int = 0, greedy: bool = True):
+                 backend: Optional[str] = None, pad_token: int = 0,
+                 greedy: bool = True):
+        """``qmeta`` + ``backend`` route every weight matmul in the compiled
+        decode step through the quantized-execution engine (QuantTensor
+        dispatch); ``backend=None`` uses the platform default."""
         if cfg.family in ("ssm", "hybrid"):
             raise NotImplementedError(
                 "continuous batching needs per-slot recurrent-state resets "
@@ -65,11 +69,8 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
         self.cache = registry.cache_init(cfg, slots, s_cache, dtype)
-        step = lambda p, c, t, pos: registry.decode_step(
-            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta) \
-            if not registry.is_encdec(cfg) else None
         self._step = jax.jit(lambda p, c, t, pos: registry.decode_step(
-            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta))
+            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta, backend=backend))
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):

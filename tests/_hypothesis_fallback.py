@@ -1,0 +1,59 @@
+"""Property-test shim: use hypothesis when installed, else a tiny
+deterministic sampler so the suite still collects and runs.
+
+The fallback implements just the surface these tests use — ``@given`` with
+positional strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``floats`` / ``integers`` / ``sampled_from`` strategies — drawing samples
+from a fixed-seed numpy generator so failures reproduce.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+
+    import types
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = types.SimpleNamespace(floats=_floats, integers=_integers,
+                               sampled_from=_sampled_from)
+
+    def given(*strats):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not mistake the sampled
+            # parameters for fixtures (hypothesis strips them the same way)
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(*(s.sample(rng) for s in strats))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = 20
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+        return deco

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import GLVQConfig, companding, packing, quantize_layer, \
     dequantize_layer, sdba as sdba_mod
