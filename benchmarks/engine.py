@@ -57,10 +57,11 @@ def _bytes_moved(meta: QuantLinearMeta, m: int, backend: str) -> int:
     return payload + 2 * dense + act
 
 
-def bench_layers(m: int = 8, bits_list=(2, 3, 4), d: int = 8):
-    """Per-layer quant_matmul across backends on LM-ish projection shapes."""
+def bench_layers(m: int = 8, bits_list=(2, 3, 4), d: int = 8,
+                 shapes=((256, 1024), (1024, 256), (256, 256))):
+    """Per-layer quant_matmul across backends on LM-ish projection shapes
+    (w1 / w2 / attn proj)."""
     rng = np.random.default_rng(0)
-    shapes = [(256, 1024), (1024, 256), (256, 256)]   # w1 / w2 / attn proj
     rows = []
     for (k, n) in shapes:
         for bits in bits_list:
@@ -115,11 +116,19 @@ def main(argv=None):
     ap.add_argument("--out", default=str(Path(__file__).parent
                                          / "BENCH_engine.json"))
     ap.add_argument("--m", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one shape / one bit-width / few steps (CI smoke)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        rows = bench_layers(m=args.m, bits_list=(4,), shapes=((256, 256),)) \
+            + bench_model(batch=2, steps=2)
+    else:
+        rows = bench_layers(m=args.m) + bench_model()
     result = dict(
         platform=jax.default_backend(),
         default_backend=ops.resolve_backend(),
-        rows=bench_layers(m=args.m) + bench_model(),
+        smoke=args.smoke,
+        rows=rows,
     )
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[engine] wrote {args.out}")

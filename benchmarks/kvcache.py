@@ -1,0 +1,111 @@
+"""Paged/quantized KV-cache benchmark — emits ``BENCH_kvcache.json``.
+
+Two parts:
+
+  * **Analytic capacity** (platform-independent; ``serving.kvcache`` byte
+    accounting on the full-size llama2-7b shapes): resident cache bytes per
+    stored token and max resident slots at a fixed HBM budget, per cache
+    kind, at several sequence lengths.  Both caches hold the same sequences
+    — "equal sequence length" — the difference is that dense reserves every
+    slot's worst-case ``s_cache`` up front while the paged kinds hold only
+    the blocks a sequence has touched (plus int8+f16-scale storage for the
+    ``paged_q8*`` kinds).
+  * **Measured throughput**: tokens/s through ``ContinuousBatcher`` on the
+    reduced config per cache kind.  Off-TPU the paged kernels run via the
+    XLA fallback (or Pallas interpret mode), so absolute numbers only
+    compare like with like — the JSON records the platform.
+
+Run:  PYTHONPATH=src python -m benchmarks.kvcache [--smoke] [--out ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import registry
+from repro.serving import kvcache
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+HBM_BUDGET = 16 * 1024 ** 3          # fixed cache budget for slot counts
+S_CACHE_FULL = 4096                  # serving max length for the analytic part
+BLOCK_SIZE_FULL = 16
+
+
+def bench_capacity(arch: str = "llama2-7b"):
+    """Analytic bytes/token + max resident slots on the real model shapes."""
+    cfg = get_config(arch)
+    rows = []
+    for seq_len in (S_CACHE_FULL // 4, S_CACHE_FULL // 2, S_CACHE_FULL):
+        for kind in kvcache.CACHE_KINDS:
+            bpt = kvcache.bytes_per_token(cfg, kind, seq_len, S_CACHE_FULL,
+                                          BLOCK_SIZE_FULL)
+            slots = kvcache.max_resident_slots(cfg, kind, HBM_BUDGET,
+                                               seq_len, S_CACHE_FULL,
+                                               BLOCK_SIZE_FULL)
+            rows.append(dict(kind="capacity", arch=arch, cache=kind,
+                             seq_len=seq_len, s_cache=S_CACHE_FULL,
+                             bytes_per_token=bpt, max_resident_slots=slots))
+            print(f"[kvcache] {arch} s={seq_len:5d} {kind:9s}: "
+                  f"{bpt / 1024:8.1f} KiB/token, {slots:6d} slots @ 16 GiB")
+    return rows
+
+
+def bench_throughput(smoke: bool = False):
+    """Measured ContinuousBatcher tokens/s per cache kind (tiny model)."""
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n_req, max_new = (4, 4) if smoke else (12, 12)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, 4)))
+               for _ in range(n_req)]
+    rows = []
+    for kind in kvcache.CACHE_KINDS:
+        cb = ContinuousBatcher(params, cfg, slots=4, s_cache=32,
+                               dtype=jnp.float32, cache_kind=kind,
+                               block_size=8)
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, prompt=p, max_new=max_new))
+        cb.step()                                    # compile outside timing
+        t0 = time.perf_counter()
+        done = cb.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in done.values())
+        rows.append(dict(kind="throughput", arch="llama2-7b(reduced)",
+                         cache=kind, tokens=toks, tokens_per_s=toks / dt))
+        print(f"[kvcache] batcher {kind:9s}: {toks / dt:8.1f} tok/s "
+              f"({toks} tokens)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(Path(__file__).parent
+                                         / "BENCH_kvcache.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few steps (CI smoke)")
+    args = ap.parse_args(argv)
+    cap = bench_capacity()
+    mid = {r["cache"]: r["bytes_per_token"] for r in cap
+           if r["seq_len"] == S_CACHE_FULL // 2}
+    ratio = mid["paged_q8"] / mid["dense"]
+    print(f"[kvcache] paged_q8 / dense bytes-per-token at "
+          f"s={S_CACHE_FULL // 2}: {ratio:.3f}")
+    result = dict(
+        platform=jax.default_backend(),
+        hbm_budget_bytes=HBM_BUDGET,
+        paged_q8_over_dense_bytes_per_token=ratio,
+        rows=cap + bench_throughput(smoke=args.smoke),
+    )
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    print(f"[kvcache] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

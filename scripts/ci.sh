@@ -3,11 +3,18 @@
 #   ./scripts/ci.sh            -> tier-1 (fail-fast, mirrors ROADMAP.md)
 #   ./scripts/ci.sh tests/foo  -> forward extra pytest args
 #
-# Note: with -x the run stops at the first failure; in containers where
-# tests/test_sharding.py::test_compressed_pod_psum_subprocess fails
-# (pre-existing, needs jax.shard_map), the later test files are skipped.
-# For full coverage run:
-#   ./scripts/ci.sh --deselect tests/test_sharding.py::test_compressed_pod_psum_subprocess
+# After the test suite, both benchmark drivers run one smoke invocation
+# (tiny shapes, interpret-mode kernels off-TPU) so they can't silently rot;
+# smoke JSON goes to a scratch dir and never overwrites the tracked
+# BENCH_*.json perf-trajectory files.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
+    --smoke --out "$SMOKE_DIR/BENCH_engine.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kvcache \
+    --smoke --out "$SMOKE_DIR/BENCH_kvcache.json"
+echo "[ci] benchmark smoke OK"

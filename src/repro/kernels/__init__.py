@@ -1,2 +1,2 @@
 """Pallas TPU kernels for GLVQ hot spots (+ jnp oracles in ref.py)."""
-from repro.kernels import ops, ref
+from repro.kernels import kv_cache, ops, ref

@@ -1,0 +1,309 @@
+"""Paged KV-cache kernels: per-token quantized append + blockwise gather.
+
+The serving cache is a pool of fixed-size blocks ([num_blocks, block_size,
+KV, hd] per attention layer); a per-slot block table maps logical positions
+to pool blocks (``serving.kvcache`` owns the allocator / table bookkeeping).
+This module owns the two device operations on that layout:
+
+  * ``append``  — write one token's K/V (quantized per cache mode) into each
+    slot's current block at its current offset.
+  * ``gather``  — read a slot's blocks back in logical order and dequantize
+    them into dense [B, S, KV, hd] history for attention.
+
+Cache modes (``MODES``):
+  * ``paged``     — blocks store the raw compute dtype (paging only).
+  * ``paged_q8``  — int8 codes + per-token-per-head f16 max-abs scale.
+  * ``paged_q8c`` — int8 after mu-law companding (``core.companding`` with a
+    fixed mu, ``KV_MU``): the code grid concentrates near zero where K/V mass
+    lives, trading headroom at the tails — the paper's GLVQ companding applied
+    to the serving cache.
+
+Backends mirror the ``kernels.ops`` matmul registry: ``pallas`` (scalar-
+prefetch block scatter/gather, fused dequant in VMEM; interpret-mode off-TPU)
+and ``xla`` (pure-jnp scatter/take fallback).  Selection: explicit arg >
+``REPRO_KV_BACKEND`` env > platform default (pallas on TPU, xla elsewhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import companding
+
+__all__ = ["MODES", "KV_MU", "PageLayout", "kv_quantize", "kv_dequantize",
+           "register_kv_backend", "kv_backends", "resolve_kv_backend",
+           "pool_init", "append", "gather"]
+
+MODES = ("paged", "paged_q8", "paged_q8c")
+
+# Fixed companding strength for the paged_q8c mode. K/V activations are far
+# less heavy-tailed than weights, so a mild mu suffices; per-block learned mu
+# would double the side-information for little gain at 8 bits.
+KV_MU = 15.0
+
+_ENV_BACKEND = "REPRO_KV_BACKEND"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Static pool/table geometry shared by every consumer of the paged
+    cache — the single place the sizing rule lives (``models.lm`` builds
+    pools from it, ``serving.kvcache`` allocates against it)."""
+    block_size: int
+    blocks_per_slot: int          # table width: ceil(s_cache / block_size)
+    num_blocks: int               # pool depth, incl. the scratch block 0
+
+    @classmethod
+    def plan(cls, s_cache: int, slots: int, block_size: int = 16,
+             num_blocks: Optional[int] = None) -> "PageLayout":
+        bps = -(-s_cache // block_size)
+        if num_blocks is None:
+            num_blocks = 1 + slots * bps        # worst case: every slot full
+        if num_blocks < 2:
+            raise ValueError("paged cache needs >= 2 blocks "
+                             "(block 0 is reserved scratch)")
+        return cls(block_size=block_size, blocks_per_slot=bps,
+                   num_blocks=num_blocks)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize (shared by both backends)
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x, mode: str) -> Tuple[jax.Array, jax.Array]:
+    """x [..., KV, hd] -> (int8 codes [..., KV, hd], f16 amax [..., KV])."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-6)
+    u = x / amax[..., None]
+    if mode == "paged_q8c":
+        u = companding.compand(u.astype(jnp.float32), KV_MU)
+    codes = jnp.clip(jnp.round(u.astype(jnp.float32) * 127.0), -127, 127)
+    return codes.astype(jnp.int8), amax.astype(jnp.float16)
+
+
+def kv_dequantize(codes, amax, mode: str, dtype) -> jax.Array:
+    """(int8 codes [..., KV, hd], f16 amax [..., KV]) -> values [..., KV, hd]."""
+    u = codes.astype(jnp.float32) / 127.0
+    if mode == "paged_q8c":
+        u = companding.expand(u, KV_MU)
+    return (u * amax.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def pool_init(num_blocks: int, block_size: int, n_kv: int, hd: int, dtype,
+              mode: str) -> Dict[str, jax.Array]:
+    """Per-layer pool leaves.  ``kp``/``vp`` are the K/V blocks; quantized
+    modes add per-token-per-head scales ``ksc``/``vsc``."""
+    if mode not in MODES:
+        raise ValueError(f"unknown cache mode {mode!r}; available: {MODES}")
+    store = dtype if mode == "paged" else jnp.int8
+    pools = dict(
+        kp=jnp.zeros((num_blocks, block_size, n_kv, hd), store),
+        vp=jnp.zeros((num_blocks, block_size, n_kv, hd), store),
+    )
+    if mode != "paged":
+        pools["ksc"] = jnp.zeros((num_blocks, block_size, n_kv), jnp.float16)
+        pools["vsc"] = jnp.zeros((num_blocks, block_size, n_kv), jnp.float16)
+    return pools
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_KV_BACKENDS: Dict[str, type] = {}
+
+
+def register_kv_backend(name: str):
+    """Decorator: register a namespace with ``append``/``gather`` staticmethods."""
+    def deco(obj):
+        _KV_BACKENDS[name] = obj
+        return obj
+    return deco
+
+
+def kv_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_KV_BACKENDS))
+
+
+def resolve_kv_backend(backend: Optional[str] = None) -> str:
+    """explicit arg > REPRO_KV_BACKEND env > platform default."""
+    if backend is None:
+        backend = os.environ.get(_ENV_BACKEND, "").strip() or None
+    if backend is None:
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in _KV_BACKENDS:
+        raise ValueError(f"unknown kv backend {backend!r}; "
+                         f"available: {kv_backends()}")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# XLA fallback backend
+# ---------------------------------------------------------------------------
+
+@register_kv_backend("xla")
+class _XlaKV:
+    @staticmethod
+    def append(cache, kq, vq, ks, vs, bids, offs):
+        new = dict(cache)
+        new["kp"] = cache["kp"].at[bids, offs].set(kq)
+        new["vp"] = cache["vp"].at[bids, offs].set(vq)
+        if ks is not None:
+            new["ksc"] = cache["ksc"].at[bids, offs].set(ks)
+            new["vsc"] = cache["vsc"].at[bids, offs].set(vs)
+        return new
+
+    @staticmethod
+    def gather(cache, table, mode, out_dtype):
+        b, nb = table.shape
+        bs = cache["kp"].shape[1]
+        flat = table.reshape(-1)
+
+        def pull(pool):
+            g = jnp.take(pool, flat, axis=0)          # [B*nb, bs, KV, hd]
+            return g.reshape((b, nb * bs) + pool.shape[2:])
+
+        kg, vg = pull(cache["kp"]), pull(cache["vp"])
+        if mode == "paged":
+            return kg.astype(out_dtype), vg.astype(out_dtype)
+        ksc, vsc = pull(cache["ksc"]), pull(cache["vsc"])
+        return (kv_dequantize(kg, ksc, mode, out_dtype),
+                kv_dequantize(vg, vsc, mode, out_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend
+# ---------------------------------------------------------------------------
+
+def _append_kernel(bids_ref, offs_ref, *refs, quant: bool):
+    """Grid (B,): read-modify-write slot b's current block, one token row."""
+    b = pl.program_id(0)
+    o = offs_ref[b]
+    n_arr = 4 if quant else 2
+    news, ins, outs = refs[:n_arr], refs[n_arr:2 * n_arr], refs[2 * n_arr:]
+    for new_ref, in_ref, out_ref in zip(news, ins, outs):
+        out_ref[...] = in_ref[...]
+        out_ref[0, o] = new_ref[0]
+
+
+def _gather_kernel(tbl_ref, *refs, mode: str, out_dtype):
+    """Grid (B, nb): dequantize pool block table[b, j] into out[b, j]."""
+    if mode == "paged":
+        kp, vp, gk, gv = refs
+        gk[0, 0] = kp[0].astype(out_dtype)
+        gv[0, 0] = vp[0].astype(out_dtype)
+        return
+    kp, ksc, vp, vsc, gk, gv = refs
+    gk[0, 0] = kv_dequantize(kp[0], ksc[0], mode, out_dtype)
+    gv[0, 0] = kv_dequantize(vp[0], vsc[0], mode, out_dtype)
+
+
+@register_kv_backend("pallas")
+class _PallasKV:
+    @staticmethod
+    def append(cache, kq, vq, ks, vs, bids, offs):
+        quant = ks is not None
+        news = (kq, vq, ks, vs) if quant else (kq, vq)
+        pools = ("kp", "vp", "ksc", "vsc") if quant else ("kp", "vp")
+        ins = tuple(cache[p] for p in pools)
+        b = kq.shape[0]
+        bs = cache["kp"].shape[1]
+
+        def tok_spec(arr):
+            nd = arr.ndim - 1
+            return pl.BlockSpec((1,) + arr.shape[1:],
+                                lambda i, bids, offs, _nd=nd: (i,) + (0,) * _nd)
+
+        def blk_spec(arr):
+            nd = arr.ndim - 1
+            return pl.BlockSpec((1,) + arr.shape[1:],
+                                lambda i, bids, offs, _nd=nd:
+                                (bids[i],) + (0,) * _nd)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b,),
+            in_specs=[tok_spec(a) for a in news] + [blk_spec(a) for a in ins],
+            out_specs=tuple(blk_spec(a) for a in ins),
+        )
+        # alias each pool input onto its output: in-place block update
+        aliases = {2 + len(news) + i: i for i in range(len(ins))}
+        outs = pl.pallas_call(
+            functools.partial(_append_kernel, quant=quant),
+            grid_spec=grid_spec,
+            out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ins),
+            input_output_aliases=aliases,
+            interpret=not _on_tpu(),
+        )(bids, offs, *news, *ins)
+        new = dict(cache)
+        new.update(dict(zip(pools, outs)))
+        return new
+
+    @staticmethod
+    def gather(cache, table, mode, out_dtype):
+        b, nb = table.shape
+        bs, kv, hd = cache["kp"].shape[1:]
+        quant = mode != "paged"
+        pools = (("kp", "ksc", "vp", "vsc") if quant else ("kp", "vp"))
+        ins = tuple(cache[p] for p in pools)
+
+        def pool_spec(arr):
+            nd = arr.ndim - 1
+            return pl.BlockSpec(
+                (1,) + arr.shape[1:],
+                lambda i, j, tbl, _nd=nd:
+                (tbl[i * nb + j],) + (0,) * _nd)
+
+        out_spec = pl.BlockSpec((1, 1, bs, kv, hd),
+                                lambda i, j, tbl: (i, j, 0, 0, 0))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nb),
+            in_specs=[pool_spec(a) for a in ins],
+            out_specs=(out_spec, out_spec),
+        )
+        out_sds = jax.ShapeDtypeStruct((b, nb, bs, kv, hd), out_dtype)
+        gk, gv = pl.pallas_call(
+            functools.partial(_gather_kernel, mode=mode, out_dtype=out_dtype),
+            grid_spec=grid_spec,
+            out_shape=(out_sds, out_sds),
+            interpret=not _on_tpu(),
+        )(table.reshape(-1), *ins)
+        return gk.reshape(b, nb * bs, kv, hd), gv.reshape(b, nb * bs, kv, hd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (mode-aware, backend-dispatched)
+# ---------------------------------------------------------------------------
+
+def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
+           mode: str, backend: Optional[str] = None) -> Dict[str, jax.Array]:
+    """Write one token per slot.  k_new/v_new [B, KV, hd]; bids/offs [B] int32
+    (the slot's current block id / in-block offset).  Returns the new cache."""
+    be = _KV_BACKENDS[resolve_kv_backend(backend)]
+    if mode == "paged":
+        store = cache["kp"].dtype
+        return be.append(cache, k_new.astype(store), v_new.astype(store),
+                         None, None, bids, offs)
+    kq, ks = kv_quantize(k_new, mode)
+    vq, vs = kv_quantize(v_new, mode)
+    return be.append(cache, kq, vq, ks, vs, bids, offs)
+
+
+def gather(cache: Dict[str, jax.Array], table, *, mode: str,
+           backend: Optional[str] = None,
+           out_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Read blocks ``table`` [B, nb] back as dense dequantized history:
+    (k, v) each [B, nb * block_size, KV, hd] in logical token order."""
+    be = _KV_BACKENDS[resolve_kv_backend(backend)]
+    return be.gather(cache, table, mode, out_dtype)

@@ -32,13 +32,20 @@ def serve_param_shapes(cfg: ModelConfig, *, quant_bits: int = 0,
 
 
 def make_decode_step(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                     unroll: int = 1, backend: Optional[str] = None):
+                     unroll: int = 1, backend: Optional[str] = None,
+                     cache_kind: str = "dense",
+                     kv_backend: Optional[str] = None,
+                     s_cache: Optional[int] = None):
     """One-token decode closure; quantized weights dispatch through the
-    QuantTensor engine (``backend`` from kernels.ops.matmul_backends())."""
+    QuantTensor engine (``backend`` from kernels.ops.matmul_backends()),
+    and a paged ``cache_kind`` routes attention history through the KV-cache
+    engine (``kv_backend`` from kernels.kv_cache.kv_backends(); ``s_cache``
+    pins the sliding-window ring length to the dense oracle's)."""
     def decode_step(params, cache, token, pos):
         return registry.decode_step(params, cache, token, pos, cfg,
                                     dtype=dtype, unroll=unroll, qmeta=qmeta,
-                                    backend=backend)
+                                    backend=backend, cache_kind=cache_kind,
+                                    kv_backend=kv_backend, s_cache=s_cache)
     return decode_step
 
 
@@ -101,6 +108,8 @@ def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
 # ---------------------------------------------------------------------------
 
 def main(argv=None):
+    from repro.serving import kvcache
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
     ap.add_argument("--batch", type=int, default=4)
@@ -109,6 +118,13 @@ def main(argv=None):
     ap.add_argument("--backend", default=None,
                     help="quantized-matmul backend "
                          "(pallas_fused | xla_decode | reference)")
+    ap.add_argument("--cache", default="dense", choices=kvcache.CACHE_KINDS,
+                    help="attention-cache mode: dense per-slot buffers, or "
+                         "paged block pools (paged_q8[c] = int8-quantized "
+                         "blocks, c = mu-law companded)")
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--kv-backend", default=None,
+                    help="paged-cache kernel backend (pallas | xla)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -119,9 +135,24 @@ def main(argv=None):
         qcfg = GLVQConfig(d=8, bits=args.quant_bits, iters=8, group_size=32)
         params, qmeta = quantized.quantize_param_tree(params, cfg=qcfg)
         print(f"[serve] quantized weights to {args.quant_bits} bits")
-    cache = registry.cache_init(cfg, args.batch, 64, jnp.float32)
+    s_cache = 64
+    cache = registry.cache_init(cfg, args.batch, s_cache, jnp.float32,
+                                cache_kind=args.cache,
+                                block_size=args.kv_block_size)
+    if args.cache != "dense":
+        # plain batched loop (no request churn): each row statically owns a
+        # contiguous run of blocks; the scheduler path allocates lazily
+        layout = kvcache.PageLayout.plan(s_cache, args.batch,
+                                         args.kv_block_size)
+        cache["table"] = kvcache.static_table(args.batch,
+                                              layout.blocks_per_slot)
+        print(f"[serve] cache={args.cache} block_size={args.kv_block_size} "
+              f"({layout.blocks_per_slot} blocks/slot)")
     step = jax.jit(make_decode_step(cfg, qmeta, jnp.float32,
-                                    backend=args.backend))
+                                    backend=args.backend,
+                                    cache_kind=args.cache,
+                                    kv_backend=args.kv_backend,
+                                    s_cache=s_cache))
     tok = jnp.zeros((args.batch,), jnp.int32)
     t0 = time.time()
     for i in range(args.steps):

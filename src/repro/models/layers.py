@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.qtensor import QuantTensor
+from repro.kernels import kv_cache
 
 Params = Dict[str, Any]
 
@@ -223,12 +224,11 @@ def local_attention(p, x, cfg: ModelConfig, pos):
     return linear(out, p["wo"], x.dtype)
 
 
-def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
-    """One-token decode. x [B, 1, D]; cache dict(k, v) [B, S_cache, KV, hd];
-    pos [B] current absolute position. Window > 0 => ring buffer cache."""
+def _decode_qkv(p, x, cfg: ModelConfig, pos):
+    """Shared one-token q/k/v projection + qk-norm + RoPE for decode paths.
+    x [B, 1, D]; pos [B] (or scalar) absolute position."""
     b = x.shape[0]
     hd = cfg.hd
-    n_rep = cfg.n_heads // cfg.n_kv_heads
     q = linear(x, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
     k = linear(x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
     v = linear(x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
@@ -243,6 +243,27 @@ def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
         pos3 = jnp.broadcast_to(pos_b[None], (3, b, 1))
         q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
         k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def _decode_attend(q, ck, cv, valid, cfg: ModelConfig):
+    """Masked single-query attention over gathered history.
+    q [B,1,H,hd]; ck/cv [B,S,KV,hd]; valid [B,S] bool -> out [B,1,H*hd]."""
+    b = q.shape[0]
+    hd = cfg.hd
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scores = jnp.einsum("bsgrd,btgd->bgrst",
+                        q.reshape(b, 1, cfg.n_kv_heads, n_rep, hd),
+                        ck).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    return jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
+    """One-token decode. x [B, 1, D]; cache dict(k, v) [B, S_cache, KV, hd];
+    pos [B] current absolute position. Window > 0 => ring buffer cache."""
+    q, k, v = _decode_qkv(p, x, cfg, pos)
     s_cache = cache["k"].shape[1]
     if pos.ndim == 0:
         # uniform decode position: one in-place dynamic_update_slice on the
@@ -267,12 +288,7 @@ def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
             valid = idx < jnp.minimum(pos + 1, s_cache)[:, None]
         else:
             valid = idx <= pos[:, None]
-    scores = jnp.einsum("bsgrd,btgd->bgrst",
-                        q.reshape(b, 1, cfg.n_kv_heads, n_rep, hd),
-                        ck).astype(jnp.float32) * (hd ** -0.5)
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
-    out = jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
+    out = _decode_attend(q, ck, cv, valid, cfg)
     return linear(out, p["wo"], x.dtype), dict(k=ck, v=cv)
 
 
@@ -281,6 +297,49 @@ def attn_cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype):
         k=jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
         v=jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.hd), dtype),
     )
+
+
+# ---------------------------------------------------------------------------
+# paged attention cache (block pools + shared table; see serving.kvcache)
+# ---------------------------------------------------------------------------
+
+def paged_attn_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
+                          dtype, kind: str):
+    """Per-layer block pools for the paged cache modes.  All attention layers
+    (global and sliding-window) share one block geometry so the per-slot
+    table in ``cache["table"]`` indexes every layer's pool uniformly."""
+    return kv_cache.pool_init(num_blocks, block_size, cfg.n_kv_heads, cfg.hd,
+                              dtype, kind)
+
+
+def paged_attention_decode(p, x, cfg: ModelConfig, cache, table, pos, *,
+                           window: int = 0, kind: str = "paged",
+                           kv_backend=None):
+    """One-token decode against the paged cache.  cache holds this layer's
+    pools (``kp``/``vp`` + scales); table [B, blocks_per_slot] maps the
+    slot's logical blocks to pool blocks.  Window > 0 writes ring-style at
+    ``pos % window`` — touching only the slot's first ceil(window/bs) table
+    entries — exactly mirroring the dense ring buffer."""
+    b = x.shape[0]
+    q, k, v = _decode_qkv(p, x, cfg, pos)
+    bs = cache["kp"].shape[1]
+    pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
+    p_eff = (pos_v % window) if window else pos_v
+    j = p_eff // bs
+    bids = jnp.take_along_axis(table, j[:, None], axis=1)[:, 0]
+    cache = kv_cache.append(cache, k[:, 0], v[:, 0], bids,
+                            (p_eff % bs).astype(jnp.int32),
+                            mode=kind, backend=kv_backend)
+    nb_l = -(-window // bs) if window else table.shape[1]
+    ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
+                             backend=kv_backend, out_dtype=x.dtype)
+    idx = jnp.arange(nb_l * bs)[None, :]
+    if window:
+        valid = idx < jnp.minimum(pos_v + 1, window)[:, None]
+    else:
+        valid = idx <= pos_v[:, None]
+    out = _decode_attend(q, ck, cv, valid, cfg)
+    return linear(out, p["wo"], x.dtype), cache
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import qtensor
+from repro.kernels import kv_cache
 from repro.models import layers, rglru, ssm
 from repro.models.layers import rms_norm
 
@@ -62,10 +63,16 @@ def block_apply(p: Params, x, cfg: ModelConfig, kind: str, pos):
     raise ValueError(kind)
 
 
-def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int, dtype):
-    if kind == "attn_local":
-        return layers.attn_cache_init(cfg, batch, min(cfg.window, s_cache), dtype)
-    if kind in ("attn", "attn_moe"):
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int,
+                     dtype, *, cache_kind: str = "dense", block_size: int = 16,
+                     num_blocks: int = 0):
+    if kind in ("attn", "attn_local", "attn_moe"):
+        if cache_kind != "dense":
+            return layers.paged_attn_cache_init(cfg, num_blocks, block_size,
+                                                dtype, cache_kind)
+        if kind == "attn_local":
+            return layers.attn_cache_init(cfg, batch,
+                                          min(cfg.window, s_cache), dtype)
         return layers.attn_cache_init(cfg, batch, s_cache, dtype)
     if kind == "rglru":
         return rglru.rglru_cache_init(cfg, batch, dtype)
@@ -74,12 +81,27 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int, dtyp
     raise ValueError(kind)
 
 
-def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos):
+def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, *,
+                 pages=None):
+    """``pages`` is None for the dense cache, else a dict with the shared
+    block ``table`` [B, blocks_per_slot] plus static ``kind``/``backend``
+    routing the attention layers through the paged KV kernels."""
     if kind in ("attn", "attn_local", "attn_moe"):
         h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
-        win = min(cfg.window, cache["k"].shape[1]) if kind == "attn_local" else 0
-        out, cache = layers.attention_decode(p["attn"], h, cfg, cache, pos,
-                                             window=win)
+        if pages is not None:
+            table = pages["table"]
+            # ring length must match the dense oracle's min(window, s_cache);
+            # the block-rounded capacity only bounds it when s_cache is unknown
+            cap = pages["s_cache"] or table.shape[1] * cache["kp"].shape[1]
+            win = min(cfg.window, cap) if kind == "attn_local" else 0
+            out, cache = layers.paged_attention_decode(
+                p["attn"], h, cfg, cache, table, pos, window=win,
+                kind=pages["kind"], kv_backend=pages["backend"])
+        else:
+            win = min(cfg.window, cache["k"].shape[1]) \
+                if kind == "attn_local" else 0
+            out, cache = layers.attention_decode(p["attn"], h, cfg, cache,
+                                                 pos, window=win)
         x = x + out
         if kind == "attn_moe":
             h = rms_norm(x, p["moe"]["ln"], cfg.norm_eps)
@@ -199,34 +221,88 @@ def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 # serving: prefill + decode
 # ---------------------------------------------------------------------------
 
-def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Params:
+def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype, *,
+               cache_kind: str = "dense", block_size: int = 16,
+               num_blocks: Optional[int] = None) -> Params:
+    """Decode cache for the whole stack.
+
+    ``cache_kind="dense"`` (default): per-slot max-length K/V buffers — the
+    parity oracle.  Paged kinds (``paged`` / ``paged_q8`` / ``paged_q8c``)
+    replace every attention layer's buffers with shared block pools plus one
+    top-level block table ``cache["table"]`` [batch, ceil(s_cache/block_size)]
+    (block 0 is reserved scratch; see ``serving.kvcache``).  Recurrent layers
+    (rglru / mamba) keep per-slot state either way."""
+    layout = None
+    if cache_kind != "dense":
+        layout = kv_cache.PageLayout.plan(s_cache, batch, block_size,
+                                          num_blocks)
+        num_blocks = layout.num_blocks
+    kw = dict(cache_kind=cache_kind, block_size=block_size,
+              num_blocks=num_blocks or 0)
     blocks = []
     for kind in cfg.scan_unit:
-        one = block_cache_init(cfg, kind, batch, s_cache, dtype)
+        one = block_cache_init(cfg, kind, batch, s_cache, dtype, **kw)
         blocks.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape), one))
-    tail = [block_cache_init(cfg, kind, batch, s_cache, dtype)
+    tail = [block_cache_init(cfg, kind, batch, s_cache, dtype, **kw)
             for kind in cfg.scan_tail]
-    return dict(blocks=tuple(blocks), tail=tail)
+    cache = dict(blocks=tuple(blocks), tail=tail)
+    if layout is not None:
+        cache["table"] = jnp.zeros((batch, layout.blocks_per_slot), jnp.int32)
+    return cache
+
+
+_RECURRENT_KINDS = ("rglru", "mamba")
+
+
+def has_recurrent(cfg: ModelConfig) -> bool:
+    return any(k in _RECURRENT_KINDS
+               for k in tuple(cfg.scan_unit) + tuple(cfg.scan_tail))
+
+
+def reset_slot(cache: Params, cfg: ModelConfig, slot) -> Params:
+    """Zero one batch slot's recurrent state (conv window + hidden state).
+
+    Attention caches need no reset — their validity masks hide everything
+    past a re-claimed slot's position — but recurrent layers integrate every
+    step, so a retired request's state would leak into the next occupant."""
+    def zero(tree, stacked: bool):
+        if stacked:   # leading repeat axis from the scan stack: [R, B, ...]
+            return jax.tree.map(lambda a: a.at[:, slot].set(0), tree)
+        return jax.tree.map(lambda a: a.at[slot].set(0), tree)
+
+    new_blocks = tuple(
+        zero(c, True) if kind in _RECURRENT_KINDS else c
+        for kind, c in zip(cfg.scan_unit, cache["blocks"]))
+    new_tail = [zero(c, False) if kind in _RECURRENT_KINDS else c
+                for kind, c in zip(cfg.scan_tail, cache["tail"])]
+    return dict(cache, blocks=new_blocks, tail=new_tail)
 
 
 def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                 *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
-                backend=None):
+                backend=None, cache_kind: str = "dense", kv_backend=None,
+                s_cache: Optional[int] = None):
     """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache).
 
     With ``qmeta``, every matmul against a quantized weight dispatches through
     ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
-    the dense weight never materializes on the fused backend."""
+    the dense weight never materializes on the fused backend.  With a paged
+    ``cache_kind``, attention history reads/writes dispatch through the
+    ``kernels.kv_cache`` backend registry instead of dense buffers."""
     if qmeta:
         params = _quantized_view(params, qmeta, backend)
+    pages = None
+    if cache_kind != "dense":
+        pages = dict(table=cache["table"], kind=cache_kind,
+                     backend=kv_backend, s_cache=s_cache)
     x = params["embed"].astype(dtype)[token][:, None, :]    # [B,1,D]
 
     def body(x, inp):
         unit_params, unit_cache = inp
         new_caches = []
         for kind, p, c in zip(cfg.scan_unit, unit_params, unit_cache):
-            x, nc = block_decode(p, x, cfg, kind, c, pos)
+            x, nc = block_decode(p, x, cfg, kind, c, pos, pages=pages)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -234,9 +310,12 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                                  unroll=unroll)
     new_tail = []
     for kind, p, c in zip(cfg.scan_tail, params["tail"], cache["tail"]):
-        x, nc = block_decode(p, x, cfg, kind, c, pos)
+        x, nc = block_decode(p, x, cfg, kind, c, pos, pages=pages)
         new_tail.append(nc)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     logits = (x[:, 0] @ head.astype(dtype)).astype(jnp.float32)
-    return logits, dict(blocks=new_blocks, tail=new_tail)
+    new_cache = dict(blocks=new_blocks, tail=new_tail)
+    if pages is not None:
+        new_cache["table"] = cache["table"]
+    return logits, new_cache

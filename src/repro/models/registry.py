@@ -3,10 +3,15 @@ plus ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run.
 
 Quantized execution: ``forward`` / ``decode_step`` accept ``qmeta`` (packed-
 payload metadata from ``core.quantized``) and ``backend`` (a name from
-``kernels.ops.matmul_backends()``); the LM wraps payloads into QuantTensor
-nodes and dispatches every matmul through the engine.  The encoder-decoder
-family is not quantized yet, so those kwargs are stripped here rather than
-at every call site."""
+``kernels.ops.matmul_backends()``); every family — the encoder-decoder
+included — wraps payloads into QuantTensor nodes and dispatches its matmuls
+through the engine.
+
+Serving caches are pluggable: ``cache_init`` / ``decode_step`` accept
+``cache_kind`` (dense | paged | paged_q8 | paged_q8c) and ``kv_backend``
+(from ``kernels.kv_cache.kv_backends()``).  The encoder-decoder family keeps
+a dense cache (its decoder contexts are short); those kwargs are stripped
+here rather than at every call site."""
 from __future__ import annotations
 
 import functools
@@ -36,42 +41,65 @@ def param_shapes(cfg: ModelConfig):
                           jax.ShapeDtypeStruct((2,), jnp.uint32))
 
 
-def _strip_quant_kwargs(kw: Dict[str, Any]) -> Dict[str, Any]:
+def _strip_cache_kwargs(cfg: ModelConfig, kw: Dict[str, Any]) -> Dict[str, Any]:
     kw = dict(kw)
-    kw.pop("qmeta", None)
-    kw.pop("backend", None)
+    if kw.pop("cache_kind", "dense") != "dense":
+        raise ValueError(f"{cfg.arch}: the encoder-decoder family only "
+                         "supports the dense cache")
+    kw.pop("kv_backend", None)
+    kw.pop("s_cache", None)
     return kw
 
 
 def loss_fn(params, batch, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
-        return whisper.loss_fn(params, batch, cfg, **_strip_quant_kwargs(kw))
+        return whisper.loss_fn(params, batch, cfg, **kw)
     return lm.loss_fn(params, batch, cfg, **kw)
 
 
 def forward(params, batch, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
-        return whisper.forward(params, batch, cfg, **_strip_quant_kwargs(kw))
+        return whisper.forward(params, batch, cfg, **kw)
     return lm.forward(params, batch, cfg, **kw)
 
 
 def decode_step(params, cache, token, pos, cfg: ModelConfig, **kw):
     if is_encdec(cfg):
         return whisper.decode_step(params, cache, token, pos, cfg,
-                                   **_strip_quant_kwargs(kw))
+                                   **_strip_cache_kwargs(cfg, kw))
     return lm.decode_step(params, cache, token, pos, cfg, **kw)
 
 
-def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16):
+def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16,
+               *, cache_kind: str = "dense", block_size: int = 16,
+               num_blocks: Optional[int] = None):
     if is_encdec(cfg):
+        if cache_kind != "dense":
+            raise ValueError(f"{cfg.arch}: the encoder-decoder family only "
+                             "supports the dense cache")
         return whisper.cache_init(cfg, batch, s_cache,
                                   max(s_cache // cfg.frontend_stride, 8), dtype)
-    return lm.cache_init(cfg, batch, s_cache, dtype)
+    return lm.cache_init(cfg, batch, s_cache, dtype, cache_kind=cache_kind,
+                         block_size=block_size, num_blocks=num_blocks)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16):
+def has_recurrent(cfg: ModelConfig) -> bool:
+    """True when slot reuse needs per-slot state resets (ssm / hybrid)."""
+    return not is_encdec(cfg) and lm.has_recurrent(cfg)
+
+
+def reset_slot(cache, cfg: ModelConfig, slot):
+    """Zero one batch slot's recurrent state; no-op for attention-only
+    families (their validity masks make stale cache content unreachable)."""
+    if is_encdec(cfg) or not lm.has_recurrent(cfg):
+        return cache
+    return lm.reset_slot(cache, cfg, slot)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16,
+                **kw):
     return jax.eval_shape(
-        functools.partial(cache_init, cfg, batch, s_cache, dtype))
+        functools.partial(cache_init, cfg, batch, s_cache, dtype, **kw))
 
 
 # ---------------------------------------------------------------------------

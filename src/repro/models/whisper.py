@@ -6,6 +6,11 @@ self-attention; the decoder interleaves causal self-attention, cross-attention
 to the encoder output, and a GELU MLP. Sinusoidal positions on both sides
 (we use RMSNorm rather than LayerNorm-with-bias throughout the repo; noted in
 DESIGN.md as an intentional uniformity deviation).
+
+Quantized execution: like ``models.lm``, ``forward`` / ``decode_step`` accept
+``qmeta`` + ``backend`` and wrap packed payloads into QuantTensor nodes, so
+encoder, decoder self/cross-attention and MLP matmuls all dispatch through
+the engine (the output head stays dense).
 """
 from __future__ import annotations
 
@@ -15,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import qtensor
+from repro.core.qtensor import QuantTensor
 from repro.models import layers
-from repro.models.layers import rms_norm
+from repro.models.layers import linear, rms_norm
 
 Params = Dict[str, Any]
 
@@ -99,7 +106,10 @@ def decode_train(params: Params, tokens, enc_out, cfg: ModelConfig,
 
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
-            *, dtype=jnp.bfloat16, remat: bool = False, unroll: int = 1):
+            *, dtype=jnp.bfloat16, remat: bool = False, unroll: int = 1,
+            qmeta=None, backend=None):
+    if qmeta:
+        params = qtensor.wrap_tree(params, qmeta, backend=backend)
     enc_out = encode(params, batch["frames"].astype(dtype), cfg, remat=remat,
                      unroll=unroll)
     return decode_train(params, batch["tokens"], enc_out, cfg, remat=remat,
@@ -107,9 +117,9 @@ def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 
 def loss_fn(params, batch, cfg: ModelConfig, *, dtype=jnp.bfloat16,
-            remat: bool = True, unroll: int = 1):
+            remat: bool = True, unroll: int = 1, qmeta=None, backend=None):
     logits = forward(params, batch, cfg, dtype=dtype, remat=remat,
-                     unroll=unroll)
+                     unroll=unroll, qmeta=qmeta, backend=backend)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
     return jnp.mean(nll)
@@ -131,27 +141,38 @@ def cache_init(cfg: ModelConfig, batch: int, s_dec: int, s_enc: int, dtype):
     )
 
 
-def prefill_cross(params: Params, enc_out, cfg: ModelConfig, s_dec: int):
+def prefill_cross(params: Params, enc_out, cfg: ModelConfig, s_dec: int,
+                  *, qmeta=None, backend=None):
     """Run the encoder-side of serving: precompute per-layer cross K/V."""
-    b = enc_out.shape[0]
+    if qmeta:
+        params = qtensor.wrap_tree(params, qmeta, backend=backend)
+    b, se = enc_out.shape[:2]
     dtype = enc_out.dtype
 
-    def one(p):
-        se = enc_out.shape[1]
-        k = (enc_out @ p["xattn"]["wk"].astype(dtype)).reshape(
-            b, se, cfg.n_kv_heads, cfg.hd)
-        v = (enc_out @ p["xattn"]["wv"].astype(dtype)).reshape(
-            b, se, cfg.n_kv_heads, cfg.hd)
-        return k, v
+    def proj(w):
+        # w is the stacked [L, D, KV*hd] cross projection; QuantTensor's
+        # stacked matmul broadcasts a 2-D activation against every layer
+        # slice (flatten [B, Se, D] -> [B*Se, D]: the engine's broadcast
+        # path only handles matrix activations).
+        if isinstance(w, QuantTensor):
+            y = w.matmul(enc_out.reshape(b * se, -1), out_dtype=dtype,
+                         zipped=False)
+        else:
+            y = jnp.einsum("bsd,ldn->lbsn", enc_out, w.astype(dtype))
+        return y.reshape(-1, b, se, cfg.n_kv_heads, cfg.hd)
 
-    ck, cv = jax.vmap(one)(params["dec_blocks"])
-    cache = cache_init(cfg, b, s_dec, enc_out.shape[1], dtype)
+    ck = proj(params["dec_blocks"]["xattn"]["wk"])
+    cv = proj(params["dec_blocks"]["xattn"]["wv"])
+    cache = cache_init(cfg, b, s_dec, se, dtype)
     return dict(cache, cross_k=ck, cross_v=cv)
 
 
 def decode_step(params: Params, cache, token, pos, cfg: ModelConfig,
-                *, dtype=jnp.bfloat16, unroll: int = 1):
+                *, dtype=jnp.bfloat16, unroll: int = 1, qmeta=None,
+                backend=None):
     """One decoder token against cached self-KV + cross-KV."""
+    if qmeta:
+        params = qtensor.wrap_tree(params, qmeta, backend=backend)
     b = token.shape[0]
     x = params["embed"].astype(dtype)[token][:, None, :]
     s_dec = cache["self_k"].shape[2]
@@ -167,12 +188,12 @@ def decode_step(params: Params, cache, token, pos, cfg: ModelConfig,
         x = x + out
         # cross attention against precomputed enc K/V
         h = rms_norm(x, p["xattn"]["ln"], cfg.norm_eps)
-        q = (h @ p["xattn"]["wq"].astype(dtype)).reshape(
+        q = linear(h, p["xattn"]["wq"], dtype).reshape(
             b, 1, cfg.n_kv_heads, n_rep, cfg.hd)
         scores = jnp.einsum("bsgrd,btgd->bgrst", q, ck).astype(jnp.float32)
         probs = jax.nn.softmax(scores * cfg.hd ** -0.5, -1).astype(dtype)
         out = jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
-        x = x + out @ p["xattn"]["wo"].astype(dtype)
+        x = x + linear(out, p["xattn"]["wo"], dtype)
         h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
         x = x + layers.mlp(p["mlp"], h, cfg)
         return x, (new_c["k"], new_c["v"])

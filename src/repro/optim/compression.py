@@ -17,7 +17,22 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ef_compress", "ef_decompress", "ef_round", "compressed_pod_psum"]
+__all__ = ["ef_compress", "ef_decompress", "ef_round", "compressed_pod_psum",
+           "shard_map_fn"]
+
+
+def shard_map_fn():
+    """Version-portable shard_map: ``jax.shard_map`` (new releases, kwarg
+    ``check_vma``) or ``jax.experimental.shard_map`` (kwarg ``check_rep``).
+    Returns a callable with the replication check disabled, or ``None`` when
+    the installed jax has neither."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, check_vma=False)
+    try:
+        from jax.experimental.shard_map import shard_map
+        return functools.partial(shard_map, check_rep=False)
+    except ImportError:
+        return None
 
 
 def ef_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -56,8 +71,12 @@ def compressed_pod_psum(grads, mesh, *, axis: str = "pod"):
         deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim)
         return jnp.sum(deq, axis=0).astype(g.dtype)
 
+    smap = shard_map_fn()
+    if smap is None:
+        raise NotImplementedError(
+            "compressed_pod_psum needs shard_map (jax.shard_map or "
+            "jax.experimental.shard_map); neither exists in this jax")
     specs = jax.tree.map(lambda _: P(), grads)
-    fn = jax.shard_map(
-        lambda t: jax.tree.map(reduce_leaf, t),
-        mesh=mesh, in_specs=(specs,), out_specs=specs, check_vma=False)
+    fn = smap(lambda t: jax.tree.map(reduce_leaf, t),
+              mesh=mesh, in_specs=(specs,), out_specs=specs)
     return fn(grads)

@@ -1,1 +1,2 @@
+from repro.serving import kvcache
 from repro.serving.scheduler import ContinuousBatcher, Request

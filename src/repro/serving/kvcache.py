@@ -1,0 +1,189 @@
+"""Paged, quantized KV-cache bookkeeping: block-pool allocator + block tables.
+
+HBM layout (device side, built by ``models.lm.cache_init``):
+  * every attention layer owns pools ``[num_blocks, block_size, KV, hd]``
+    (+ per-token f16 scales for the quantized modes — see
+    ``kernels.kv_cache``);
+  * one block table ``int32 [slots, blocks_per_slot]`` is shared by all
+    layers and lives at the top of the cache pytree (``cache["table"]``);
+  * block 0 is a reserved scratch block: idle slots' pad-token writes land
+    there and it is never handed out by the allocator, so stale scratch
+    content can never alias a live slot's history.
+
+Host side (this module): ``BlockAllocator`` is a plain free-list over block
+ids 1..num_blocks-1; ``SlotPages`` tracks which table entries each slot has
+been granted, allocating lazily as a slot's position crosses a block boundary
+and returning all of a slot's blocks to the free list when it retires.  Local
+(sliding-window) attention layers write ring-style at ``pos % window`` and so
+only ever touch a slot's first ``ceil(window / block_size)`` table entries —
+the shared table needs no per-layer variants.
+
+Byte accounting helpers at the bottom are the analytic source of truth for
+``benchmarks/kvcache.py`` (bytes/token, max resident slots at a fixed HBM
+budget).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.kv_cache import MODES, PageLayout
+
+__all__ = ["CACHE_KINDS", "PageLayout", "BlockAllocator", "SlotPages",
+           "static_table", "attn_layer_lengths", "cache_bytes",
+           "bytes_per_token", "max_resident_slots"]
+
+# every kernel-level paged mode plus the dense oracle — derived so the two
+# lists cannot drift
+CACHE_KINDS = ("dense",) + MODES
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_moe")
+
+
+class BlockAllocator:
+    """Free-list allocator over pool block ids; id 0 is reserved scratch."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: deque[int] = deque(range(1, num_blocks))
+        self._ever_used: set[int] = set()
+        self.recycled = 0                       # re-allocations of freed blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "KV block pool exhausted: all "
+                f"{self.num_blocks - 1} blocks are live. Retire requests, "
+                "raise num_blocks, or admit fewer concurrent slots.")
+        bid = self._free.popleft()
+        if bid in self._ever_used:
+            self.recycled += 1
+        self._ever_used.add(bid)
+        return bid
+
+    def free(self, ids: Iterable[int]):
+        for bid in ids:
+            if bid:                             # never recycle scratch 0
+                self._free.append(int(bid))
+
+
+class SlotPages:
+    """Per-slot block-table bookkeeping for the continuous-batching scheduler.
+
+    The host table mirrors ``cache["table"]`` on device; ``dirty`` marks when
+    the device copy must be refreshed before the next decode step.
+    """
+
+    def __init__(self, slots: int, layout: PageLayout):
+        self.layout = layout
+        self.alloc = BlockAllocator(layout.num_blocks)
+        self.table = np.zeros((slots, layout.blocks_per_slot), np.int32)
+        self.counts = np.zeros((slots,), np.int32)   # granted entries per slot
+        self.dirty = True                            # device table unset yet
+
+    def ensure(self, slot: int, pos: int):
+        """Grant slot all table entries needed to write position ``pos``."""
+        need = pos // self.layout.block_size + 1
+        while self.counts[slot] < need:
+            self.table[slot, self.counts[slot]] = self.alloc.alloc()
+            self.counts[slot] += 1
+            self.dirty = True
+
+    def release(self, slot: int):
+        """Return a retired slot's blocks; its row falls back to scratch 0."""
+        n = int(self.counts[slot])
+        if n:
+            self.alloc.free(self.table[slot, :n].tolist())
+            self.table[slot, :n] = 0
+            self.counts[slot] = 0
+            self.dirty = True
+
+    def device_table(self) -> jnp.ndarray:
+        self.dirty = False
+        return jnp.asarray(self.table)
+
+
+def static_table(batch: int, blocks_per_slot: int) -> jnp.ndarray:
+    """Fully-preallocated contiguous table (row b owns blocks
+    [1 + b*bps, 1 + (b+1)*bps)) — for plain batched decode loops that don't
+    run an allocator (``launch.serve`` demo, benchmarks)."""
+    base = 1 + blocks_per_slot * np.arange(batch)[:, None]
+    return jnp.asarray(base + np.arange(blocks_per_slot)[None], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Analytic byte accounting (benchmarks + capacity planning)
+# ---------------------------------------------------------------------------
+
+def attn_layer_lengths(cfg: ModelConfig, s_cache: int) -> List[int]:
+    """Per attention layer: how many cache positions it retains (global
+    layers keep s_cache; sliding-window layers keep min(window, s_cache))."""
+    out = []
+    kinds = list(cfg.scan_unit) * cfg.n_repeats + list(cfg.scan_tail)
+    for kind in kinds:
+        if kind in _ATTN_KINDS:
+            if kind == "attn_local" and cfg.window:
+                out.append(min(cfg.window, s_cache))
+            else:
+                out.append(s_cache)
+    return out
+
+
+def _per_pos_bytes(cfg: ModelConfig, kind: str, dtype_bytes: int) -> float:
+    """K+V bytes for one retained position of one attention layer."""
+    per_head = cfg.n_kv_heads * cfg.hd
+    if kind in ("dense", "paged"):
+        return 2 * per_head * dtype_bytes
+    # int8 codes + f16 per-token-per-head scale
+    return 2 * (per_head * 1 + cfg.n_kv_heads * 2)
+
+
+def cache_bytes(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
+                block_size: int = 16, dtype_bytes: int = 2) -> int:
+    """Resident attention-cache bytes for ONE slot holding ``seq_len`` tokens.
+
+    Dense reserves every layer's full retained length up front; paged modes
+    only hold the blocks the sequence has actually touched."""
+    if kind not in CACHE_KINDS:
+        raise ValueError(f"unknown cache kind {kind!r}; "
+                         f"available: {CACHE_KINDS}")
+    total = 0.0
+    for s_layer in attn_layer_lengths(cfg, s_cache):
+        if kind == "dense":
+            total += s_layer * _per_pos_bytes(cfg, kind, dtype_bytes)
+        else:
+            touched = min(seq_len, s_layer)
+            blocks = -(-touched // block_size) if touched else 0
+            total += blocks * block_size * _per_pos_bytes(cfg, kind,
+                                                          dtype_bytes)
+    if kind != "dense":
+        total += 4 * (-(-s_cache // block_size))      # int32 table row
+    return int(total)
+
+
+def bytes_per_token(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
+                    block_size: int = 16, dtype_bytes: int = 2) -> float:
+    """Resident cache bytes per stored token at sequence length ``seq_len``."""
+    return cache_bytes(cfg, kind, seq_len, s_cache, block_size,
+                       dtype_bytes) / max(seq_len, 1)
+
+
+def max_resident_slots(cfg: ModelConfig, kind: str, hbm_bytes: float,
+                       seq_len: int, s_cache: int, block_size: int = 16,
+                       dtype_bytes: int = 2) -> int:
+    """How many concurrent slots at ``seq_len`` fit a fixed cache budget."""
+    per_slot = cache_bytes(cfg, kind, seq_len, s_cache, block_size,
+                           dtype_bytes)
+    return int(hbm_bytes // max(per_slot, 1))

@@ -8,15 +8,24 @@ same decode step, so a single compiled program serves the whole lifecycle
 
 Idle slots feed a pad token at their stale position; this is safe for
 attention caches because a newly-assigned slot restarts at position 0 and the
-causal validity mask hides anything beyond the current position. (Recurrent
-caches — mamba2 / rglru — would need per-slot state resets; the scheduler
-checks the family and refuses, documented limitation.)
+causal validity mask hides anything beyond the current position.  Recurrent
+families (mamba2 / rglru / hybrid) integrate state every step, so the
+scheduler zeroes a slot's recurrent state when a new request claims it
+(``registry.reset_slot``) — slot churn cannot leak one request's state into
+the next.
+
+Cache modes (``cache_kind``): ``dense`` keeps per-slot max-length K/V
+buffers; ``paged`` / ``paged_q8`` / ``paged_q8c`` switch every attention
+layer to shared block pools (``serving.kvcache``) — the scheduler grants a
+slot one block at a time as its position crosses block boundaries and
+returns all of the slot's blocks to the free list when the request retires,
+so resident cache bytes track live tokens instead of worst-case length.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serving import kvcache
 
 __all__ = ["Request", "ContinuousBatcher"]
 
@@ -52,25 +62,42 @@ class ContinuousBatcher:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  s_cache: int = 64, dtype=jnp.float32, qmeta=None,
                  backend: Optional[str] = None, pad_token: int = 0,
-                 greedy: bool = True):
+                 greedy: bool = True, cache_kind: str = "dense",
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 kv_backend: Optional[str] = None):
         """``qmeta`` + ``backend`` route every weight matmul in the compiled
         decode step through the quantized-execution engine (QuantTensor
-        dispatch); ``backend=None`` uses the platform default."""
-        if cfg.family in ("ssm", "hybrid"):
-            raise NotImplementedError(
-                "continuous batching needs per-slot recurrent-state resets "
-                "for ssm/hybrid families")
+        dispatch); ``cache_kind`` + ``kv_backend`` route the attention cache
+        through the paged KV engine (``kernels.kv_cache``); ``None`` backends
+        use the platform default."""
+        if cache_kind not in kvcache.CACHE_KINDS:
+            raise ValueError(f"unknown cache_kind {cache_kind!r}; "
+                             f"available: {kvcache.CACHE_KINDS}")
         self.params = params
         self.cfg = cfg
         self.s_cache = s_cache
         self.pad = pad_token
         self.greedy = greedy
+        self.cache_kind = cache_kind
         self.slots = [_Slot() for _ in range(slots)]
         self.queue: deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
-        self.cache = registry.cache_init(cfg, slots, s_cache, dtype)
+        self.pages: Optional[kvcache.SlotPages] = None
+        if cache_kind != "dense":
+            layout = kvcache.PageLayout.plan(s_cache, slots, block_size,
+                                             num_blocks)
+            self.pages = kvcache.SlotPages(slots, layout)
+            num_blocks = layout.num_blocks
+        self.cache = registry.cache_init(cfg, slots, s_cache, dtype,
+                                         cache_kind=cache_kind,
+                                         block_size=block_size,
+                                         num_blocks=num_blocks)
+        self._recurrent = registry.has_recurrent(cfg)
+        self._reset = jax.jit(
+            lambda c, i: registry.reset_slot(c, cfg, i))
         self._step = jax.jit(lambda p, c, t, pos: registry.decode_step(
-            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta, backend=backend))
+            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta, backend=backend,
+            cache_kind=cache_kind, kv_backend=kv_backend, s_cache=s_cache))
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):
@@ -90,17 +117,21 @@ class ContinuousBatcher:
     def step(self):
         self._assign_slots()
         toks, poss = [], []
-        for s in self.slots:
+        for i, s in enumerate(self.slots):
             if s.free:
                 toks.append(self.pad)
                 poss.append(max(s.pos - 1, 0))
                 continue
+            if self.pages is not None:
+                self.pages.ensure(i, s.pos)   # grant the block pos lands in
             r = s.req
             if s.prompt_cursor < len(r.prompt):
                 toks.append(r.prompt[s.prompt_cursor])
             else:
                 toks.append(r.tokens[-1] if r.tokens else r.prompt[-1])
             poss.append(s.pos)
+        if self.pages is not None and self.pages.dirty:
+            self.cache["table"] = self.pages.device_table()
         logits, self.cache = self._step(
             self.params, self.cache,
             jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32))
@@ -120,9 +151,16 @@ class ContinuousBatcher:
                 r.done = True
                 self.finished[r.rid] = r
                 self.slots[i] = _Slot()            # slot recycled at pos 0
+                if self.pages is not None:
+                    self.pages.release(i)          # blocks back to the pool
 
     def _assign_slots(self):
         for i, s in enumerate(self.slots):
             if s.free and self.queue:
                 req = self.queue.popleft()
                 self.slots[i] = _Slot(req=req, pos=0, prompt_cursor=0)
+                if self._recurrent:
+                    # a retired request's conv window / hidden state must not
+                    # leak into the new occupant
+                    self.cache = self._reset(self.cache,
+                                             jnp.asarray(i, jnp.int32))

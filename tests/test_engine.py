@@ -198,6 +198,54 @@ def test_wrap_tree_matches_materialize_tree():
         dense_a, dense_b)
 
 
+def test_whisper_quantized_engine_parity():
+    """The encoder-decoder family routes through the QuantTensor engine like
+    every other family (registry no longer strips qmeta/backend): quantized
+    forward + decode must reproduce the materialized-dense-weight logits."""
+    from repro.configs import get_config, reduced
+    from repro.models import registry
+    cfg = reduced(get_config("whisper-large-v3"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=2, group_size=32)
+    qparams, meta = quantize_param_tree(params, cfg=qcfg)
+    assert meta, "no whisper weights were quantized"
+    dense = qtensor.dense_tree(qparams, meta, jnp.float32)
+
+    rng = np.random.default_rng(0)
+    b, s_a = 2, 16
+    s_t = max(s_a // cfg.frontend_stride, 8)
+    batch = dict(
+        frames=jnp.asarray(rng.normal(size=(b, s_a, cfg.d_model)), jnp.float32),
+        tokens=jnp.asarray(rng.integers(1, cfg.vocab, (b, s_t)), jnp.int32))
+    ref = np.asarray(registry.forward(dense, batch, cfg, dtype=jnp.float32))
+    out = np.asarray(registry.forward(qparams, batch, cfg, dtype=jnp.float32,
+                                      qmeta=meta, backend="xla_decode"))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    cache = registry.cache_init(cfg, b, 8, jnp.float32)
+    tok = jnp.zeros((b,), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    lr, _ = registry.decode_step(dense, cache, tok, pos, cfg,
+                                 dtype=jnp.float32)
+    lq, _ = registry.decode_step(qparams, cache, tok, pos, cfg,
+                                 dtype=jnp.float32, qmeta=meta,
+                                 backend="xla_decode")
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lr),
+                               rtol=1e-5, atol=1e-5)
+
+    # serving prefill: quantized cross-K/V, batch deliberately != n_layers
+    # (exercises the stacked broadcast path on the xla_decode shortcut)
+    from repro.models import whisper
+    b3 = 3
+    enc = jnp.asarray(rng.normal(size=(b3, s_a, cfg.d_model)), jnp.float32)
+    cq = whisper.prefill_cross(qparams, enc, cfg, 8, qmeta=meta,
+                               backend="xla_decode")
+    cd = whisper.prefill_cross(dense, enc, cfg, 8)
+    np.testing.assert_allclose(np.asarray(cq["cross_k"]),
+                               np.asarray(cd["cross_k"]),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_decode_step_backend_parity_model_level():
     """The model decode path dispatches through QuantTensor.matmul: the
     reference backend must reproduce the default backend's logits."""

@@ -70,11 +70,22 @@ def test_continuous_batching_more_requests_than_slots(tiny_lm):
     assert all(len(r.tokens) == 3 for r in done.values())
 
 
-def test_scheduler_rejects_recurrent_families(tiny_lm):
+def test_scheduler_accepts_recurrent_families():
+    """Recurrent families batch continuously now (per-slot state resets on
+    claim); deep churn parity lives in test_kvcache.py."""
     cfg = reduced(get_config("mamba2-1.3b"))
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
-    with pytest.raises(NotImplementedError):
-        ContinuousBatcher(params, cfg, slots=2, s_cache=16)
+    cb = ContinuousBatcher(params, cfg, slots=2, s_cache=16)
+    cb.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+    done = cb.run()
+    assert len(done[0].tokens) == 2
+
+
+def test_scheduler_rejects_unknown_cache_kind(tiny_lm):
+    cfg, params = tiny_lm
+    with pytest.raises(ValueError, match="cache_kind"):
+        ContinuousBatcher(params, cfg, slots=2, s_cache=16,
+                          cache_kind="blocky")
 
 
 # ---------------------------------------------------------------------------
