@@ -8,9 +8,16 @@ perf trajectory of the engine is recorded per PR.
 Run:  PYTHONPATH=src python -m benchmarks.engine [--out BENCH_engine.json]
 
 Note on CPU numbers: ``pallas_fused`` runs in interpret mode off-TPU, so its
-absolute timings are meaningless there — the JSON records the platform so
-trajectories only compare like with like.  ``bytes_moved`` is analytic
-(payload vs dense-materialization traffic) and platform-independent.
+absolute timings are meaningless there — the JSON records the platform AND
+the device count so trajectories only compare like with like.  ``bytes_moved``
+is analytic (payload vs dense-materialization traffic) and
+platform-independent.
+
+Tensor-parallel rows (``--tp N``) time the shard_map path against the
+replicated engine and record the physical per-device packed bytes.  Keep them
+in their own JSON (``BENCH_engine_tp.json``): a forced-multi-device host
+skews the single-device baseline rows, so the two trajectories must not share
+a file.
 """
 from __future__ import annotations
 
@@ -83,8 +90,11 @@ def bench_layers(m: int = 8, bits_list=(2, 3, 4), d: int = 8,
     return rows
 
 
-def bench_model(batch: int = 4, steps: int = 8):
-    """Whole-model quantized decode step on the default platform backend."""
+def bench_model(batch: int = 4, steps: int = 8, mesh=None):
+    """Whole-model quantized decode step on the default platform backend.
+
+    With ``mesh``, the step runs tensor-parallel (QuantTensor shard_map
+    dispatch) so the sharded-vs-replicated step time lands in the JSON."""
     cfg = reduced(get_config("llama2-7b"))
     params = registry.init_params(jax.random.PRNGKey(0), cfg)
     qcfg = GLVQConfig(d=8, bits=4, iters=4, group_size=32)
@@ -92,7 +102,8 @@ def bench_model(batch: int = 4, steps: int = 8):
     cache = registry.cache_init(cfg, batch, 32, jnp.float32)
     backend = ops.resolve_backend()
     step = jax.jit(lambda p, c, t, pos: registry.decode_step(
-        p, c, t, pos, cfg, dtype=jnp.float32, qmeta=qmeta, backend=backend))
+        p, c, t, pos, cfg, dtype=jnp.float32, qmeta=qmeta, backend=backend,
+        mesh=mesh))
     tok = jnp.zeros((batch,), jnp.int32)
     pos = jnp.zeros((batch,), jnp.int32)
     logits, cache = step(qparams, cache, tok, pos)          # compile
@@ -104,22 +115,94 @@ def bench_model(batch: int = 4, steps: int = 8):
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
     jax.block_until_ready(logits)
     sec = (time.perf_counter() - t0) / steps
+    tp = dict(mesh.shape).get("model", 1) if mesh is not None else 1
     row = dict(kind="model", arch="llama2-7b(reduced)", bits=4, batch=batch,
-               backend=backend, us_per_step=sec * 1e6,
+               backend=backend, tp=tp, us_per_step=sec * 1e6,
                tokens_per_s=batch / sec)
-    print(f"[engine] decode_step {backend}: {batch / sec:.1f} tok/s")
+    label = f"decode_step tp={tp}" if tp > 1 else "decode_step"
+    print(f"[engine] {label} {backend}: {batch / sec:.1f} tok/s")
     return [row]
+
+
+def bench_tp(tp: int, m: int = 8, bits: int = 4, d: int = 8,
+             k: int = 1024, n: int = 1024, smoke: bool = False):
+    """Sharded-vs-replicated quantized matmul over a (dp, tp) mesh, plus the
+    physical per-device packed bytes (from the addressable shards, not the
+    analytic formula — so mis-sharding shows up here immediately)."""
+    from repro.parallel import sharding
+
+    ndev = jax.device_count()
+    if tp < 2 or ndev < tp or ndev % tp:
+        print(f"[engine] --tp {tp} skipped: {ndev} device(s); hint "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return []
+    if smoke:
+        k = n = 256                 # keep the CI rot-check cheap
+    mesh = jax.make_mesh((ndev // tp, tp), ("data", "model"))
+    rng = np.random.default_rng(0)
+    rows = []
+    for parallel, wname in (("column", "wq"), ("row", "wo")):
+        meta = QuantLinearMeta(k=k, n=n, bits=bits, d=d, group_size=128)
+        payload = _payload(rng, k, n, bits, d)
+        specs = {key: sharding._payload_leaf_spec(wname, key, v.shape, tp,
+                                                  meta)
+                 for key, v in payload.items()}
+        sharded = jax.device_put(payload, sharding.named(specs, mesh))
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        full_bytes = int(payload["packed"].size * 4)
+        per_dev = max(s.data.nbytes
+                      for s in sharded["packed"].addressable_shards)
+        fn_tp = jax.jit(lambda x, p: ops.quant_matmul_tp(
+            x, p, meta, mesh=mesh, parallel=parallel,
+            out_dtype=jnp.float32))
+        fn_rep = jax.jit(lambda x, p: ops.quant_matmul(
+            x, p, meta, out_dtype=jnp.float32))
+        sec_tp = _time(fn_tp, x, sharded)
+        sec_rep = _time(fn_rep, x, payload)
+        rows.append(dict(
+            kind="tp", tp=tp, parallel=parallel, k=k, n=n, bits=bits, m=m,
+            backend=ops.resolve_backend(),
+            us_per_call_sharded=sec_tp * 1e6,
+            us_per_call_replicated=sec_rep * 1e6,
+            packed_bytes_full=full_bytes,
+            packed_bytes_per_device=per_dev,
+            payload_shrink=per_dev / full_bytes,
+        ))
+        print(f"[engine] tp={tp} {parallel:>6}: sharded {sec_tp * 1e6:9.1f} "
+              f"us  replicated {sec_rep * 1e6:9.1f} us  "
+              f"packed/device {per_dev}/{full_bytes} "
+              f"({per_dev / full_bytes:.3f}x)")
+    if not smoke:                   # a second model quantize is too heavy
+        rows += bench_model(batch=2, steps=2, mesh=mesh)
+    return rows
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=str(Path(__file__).parent
-                                         / "BENCH_engine.json"))
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_engine.json, or "
+                         "BENCH_engine_tp.json with --tp so multi-device "
+                         "rows never overwrite the 1-device baseline "
+                         "trajectory)")
     ap.add_argument("--m", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="one shape / one bit-width / few steps (CI smoke)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="also record tensor-parallel rows on a (dp, tp) "
+                         "mesh (needs >= tp devices)")
     args = ap.parse_args(argv)
-    if args.smoke:
+    if args.out is None:
+        name = "BENCH_engine_tp.json" if args.tp else "BENCH_engine.json"
+        args.out = str(Path(__file__).parent / name)
+    if args.tp:
+        # TP-only rows: the single-device baseline sweep belongs to
+        # BENCH_engine.json and would be skewed on a multi-device host
+        rows = bench_tp(args.tp, m=args.m, smoke=args.smoke)
+        if not rows:
+            # don't wipe the tracked trajectory with an empty run
+            raise SystemExit(f"[engine] --tp {args.tp} produced no rows; "
+                             "not writing " + str(args.out))
+    elif args.smoke:
         rows = bench_layers(m=args.m, bits_list=(4,), shapes=((256, 256),)) \
             + bench_model(batch=2, steps=2)
     else:
@@ -127,6 +210,7 @@ def main(argv=None):
     result = dict(
         platform=jax.default_backend(),
         default_backend=ops.resolve_backend(),
+        devices=jax.device_count(),
         smoke=args.smoke,
         rows=rows,
     )

@@ -9,12 +9,28 @@
 # BENCH_*.json perf-trajectory files.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# REPRO_SKIP_TP_SUBPROCESS: the dedicated forced-8-device step below covers
+# the TP suite, so the tier-1 pass skips test_tp_engine's self-re-running
+# subprocess test instead of paying for the suite twice.  A plain
+# `pytest -x -q` outside ci.sh still runs it.
+REPRO_SKIP_TP_SUBPROCESS=1 \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Forced-8-device CPU pass: the sharding rules + tensor-parallel engine run
+# against a real (host-emulated) multi-device mesh so the sharded path
+# cannot regress silently.  (On 1 device the TP suite only runs via its own
+# subprocess test; here it runs in-process on all 8.)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_sharding.py tests/test_tp_engine.py
 
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
     --smoke --out "$SMOKE_DIR/BENCH_engine.json"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
+    --smoke --tp 2 --out "$SMOKE_DIR/BENCH_engine_tp.json"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kvcache \
     --smoke --out "$SMOKE_DIR/BENCH_kvcache.json"
 echo "[ci] benchmark smoke OK"

@@ -11,17 +11,31 @@ the Pallas kernel replays on TPU VPU lanes.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["per_word", "packed_len", "pack_codes", "unpack_codes"]
+__all__ = ["per_word", "packed_len", "pack_codes", "unpack_codes",
+           "unit_codes"]
 
 
 def per_word(bits: int) -> int:
     if not 1 <= bits <= 8:
         raise ValueError(f"bits must be in [1, 8], got {bits}")
     return 32 // bits
+
+
+def unit_codes(bits: int, d: int) -> int:
+    """Smallest indivisible run of codes for a (bits, d) payload: a block or
+    shard boundary must land on whole uint32 words (per_word codes each) AND
+    whole lattice vectors (d codes) — lcm(per_word, d).  The single source of
+    this invariant: kernel block sizing (kernels.ops), TP shardability
+    (ops.tp_shardable), and the storage specs (parallel.sharding) all agree
+    through it."""
+    pw = per_word(bits)
+    return pw * d // math.gcd(pw, d)
 
 
 def packed_len(n: int, bits: int) -> int:

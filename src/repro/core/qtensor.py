@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantized import (QuantLinearMeta, QuantSegments,
+from repro.core.quantized import (QuantLinearMeta, QuantSegments, TP_ROW,
                                   _PAYLOAD_KEYS, _meta_key)
 
 __all__ = ["QuantTensor", "wrap_tree", "dense_tree"]
@@ -44,7 +44,8 @@ class QuantTensor:
                  metas: Tuple[QuantLinearMeta, ...],
                  group_index: Optional[Tuple[Tuple[int, ...], ...]],
                  k: int, n: int, group_size: int,
-                 out_dtype=None, backend: Optional[str] = None):
+                 out_dtype=None, backend: Optional[str] = None,
+                 mesh=None, tp: Optional[str] = None):
         self.payloads = tuple(payloads)
         self.metas = tuple(metas)
         self.group_index = group_index
@@ -53,22 +54,24 @@ class QuantTensor:
         self.group_size = group_size
         self.out_dtype = out_dtype
         self.backend = backend
+        self.mesh = mesh            # jax Mesh -> shard_map TP execution
+        self.tp = tp                # "column" | "row" | None
 
     # -- constructors --------------------------------------------------------
 
     @classmethod
     def from_payload(cls, payload: Dict[str, Any], meta: QuantLinearMeta, *,
-                     backend: Optional[str] = None,
-                     out_dtype=None) -> "QuantTensor":
+                     backend: Optional[str] = None, out_dtype=None,
+                     mesh=None, tp: Optional[str] = None) -> "QuantTensor":
         """Uniform-bit layer (possibly with leading stack dims)."""
         return cls(payloads=(dict(payload),), metas=(meta,), group_index=None,
                    k=meta.k, n=meta.n, group_size=meta.group_size,
-                   out_dtype=out_dtype, backend=backend)
+                   out_dtype=out_dtype, backend=backend, mesh=mesh, tp=tp)
 
     @classmethod
     def from_segments(cls, segs: QuantSegments, *,
-                      backend: Optional[str] = None,
-                      out_dtype=None) -> "QuantTensor":
+                      backend: Optional[str] = None, out_dtype=None,
+                      mesh=None, tp: Optional[str] = None) -> "QuantTensor":
         """Mixed-bit (SDBA) layer: one segment per bit-width."""
         metas = tuple(m for m, _, _ in segs.segments)
         payloads = tuple(dict(p) for _, p, _ in segs.segments)
@@ -76,21 +79,21 @@ class QuantTensor:
                      for _, _, idx in segs.segments)
         return cls(payloads=payloads, metas=metas, group_index=gidx,
                    k=segs.k, n=segs.n, group_size=segs.group_size,
-                   out_dtype=out_dtype, backend=backend)
+                   out_dtype=out_dtype, backend=backend, mesh=mesh, tp=tp)
 
     # -- pytree --------------------------------------------------------------
 
     def tree_flatten(self):
         aux = (self.metas, self.group_index, self.k, self.n, self.group_size,
-               self.out_dtype, self.backend)
+               self.out_dtype, self.backend, self.mesh, self.tp)
         return (self.payloads,), aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        metas, gidx, k, n, gs, out_dtype, backend = aux
+        metas, gidx, k, n, gs, out_dtype, backend, mesh, tp = aux
         return cls(payloads=children[0], metas=metas, group_index=gidx,
                    k=k, n=n, group_size=gs, out_dtype=out_dtype,
-                   backend=backend)
+                   backend=backend, mesh=mesh, tp=tp)
 
     # -- properties ----------------------------------------------------------
 
@@ -131,12 +134,22 @@ class QuantTensor:
         ``x @ w.astype(x.dtype)`` idiom working unchanged on quantized trees)."""
         return QuantTensor(self.payloads, self.metas, self.group_index,
                            self.k, self.n, self.group_size,
-                           out_dtype=jnp.dtype(dtype), backend=self.backend)
+                           out_dtype=jnp.dtype(dtype), backend=self.backend,
+                           mesh=self.mesh, tp=self.tp)
 
     def with_backend(self, backend: Optional[str]) -> "QuantTensor":
         return QuantTensor(self.payloads, self.metas, self.group_index,
                            self.k, self.n, self.group_size,
-                           out_dtype=self.out_dtype, backend=backend)
+                           out_dtype=self.out_dtype, backend=backend,
+                           mesh=self.mesh, tp=self.tp)
+
+    def with_mesh(self, mesh, tp: Optional[str] = "column") -> "QuantTensor":
+        """Bind a device mesh + TP mode: subsequent matmuls run the shard_map
+        path on the local payload slice (``kernels.ops.quant_matmul_tp``)."""
+        return QuantTensor(self.payloads, self.metas, self.group_index,
+                           self.k, self.n, self.group_size,
+                           out_dtype=self.out_dtype, backend=self.backend,
+                           mesh=mesh, tp=tp if mesh is not None else None)
 
     def matmul(self, x, *, backend: Optional[str] = None, out_dtype=None,
                zipped: Optional[bool] = None):
@@ -152,8 +165,19 @@ class QuantTensor:
         from repro.kernels import ops
         backend = backend if backend is not None else self.backend
         out_dtype = out_dtype or self.out_dtype or x.dtype
+        tp_mesh = self.mesh if self.tp is not None else None
         lead = self.lead_shape
         if not lead:
+            if tp_mesh is not None:
+                if not self.is_mixed:
+                    return ops.quant_matmul_tp(
+                        x, self.payloads[0], self.metas[0], mesh=tp_mesh,
+                        parallel=self.tp, backend=backend,
+                        out_dtype=out_dtype)
+                return ops.quant_matmul_segments_tp(
+                    x, list(zip(self.metas, self.payloads, self.group_index)),
+                    self.group_size, self.n, mesh=tp_mesh, parallel=self.tp,
+                    backend=backend, out_dtype=out_dtype)
             if not self.is_mixed:
                 return ops.quant_matmul(x, self.payloads[0], self.metas[0],
                                         backend=backend, out_dtype=out_dtype)
@@ -168,7 +192,8 @@ class QuantTensor:
         auto_zip = x.ndim >= nlead + 2 and x.shape[:nlead] == lead
         if zipped is None:
             zipped = auto_zip
-        if zipped == auto_zip and ops.resolve_backend(backend) == "xla_decode":
+        if tp_mesh is None and zipped == auto_zip \
+                and ops.resolve_backend(backend) == "xla_decode":
             # one batched decode + one (broadcasting) matmul: keeps the HLO
             # size constant in the number of stacked slices (MoE experts);
             # jnp.matmul's broadcasting matches the requested zip semantics
@@ -185,9 +210,16 @@ class QuantTensor:
         for i in range(size):
             pl_i = {key: v[i] for key, v in payload.items()}
             xi = xf[i] if zipped else x
-            outs.append(ops.quant_matmul(xi, pl_i, self.metas[0],
-                                         backend=backend,
-                                         out_dtype=out_dtype))
+            if tp_mesh is not None:
+                outs.append(ops.quant_matmul_tp(xi, pl_i, self.metas[0],
+                                                mesh=tp_mesh,
+                                                parallel=self.tp,
+                                                backend=backend,
+                                                out_dtype=out_dtype))
+            else:
+                outs.append(ops.quant_matmul(xi, pl_i, self.metas[0],
+                                             backend=backend,
+                                             out_dtype=out_dtype))
         return jnp.stack(outs).reshape(lead + outs[0].shape)
 
     def __rmatmul__(self, x):
@@ -212,19 +244,28 @@ class QuantTensor:
 # Whole-tree wrapping (the model / serving entry point)
 # ---------------------------------------------------------------------------
 
-def wrap_tree(tree, meta_by_key: Dict, *, backend: Optional[str] = None):
+def wrap_tree(tree, meta_by_key: Dict, *, backend: Optional[str] = None,
+              mesh=None):
     """Replace packed-payload dicts with QuantTensor nodes.
 
     Walks the param tree exactly like ``core.quantized`` does when packing:
     a dict with keys {packed, g, mu, scale} whose (block-kind, weight-name)
     suffix appears in ``meta_by_key`` becomes one QuantTensor.  Works on the
     full tree or any subtree; on concrete arrays, tracers, or SDS stand-ins.
+
+    With ``mesh``, every QuantTensor binds the mesh plus its Megatron TP mode
+    by weight name (``TP_ROW`` weights run row-parallel K-sharded psum,
+    everything else column-parallel N-sharded) so ``x @ qt`` executes the
+    shard_map path on the local payload slice.
     """
     def rebuild(node, names=()):
         if isinstance(node, dict) and set(node) == set(_PAYLOAD_KEYS) \
                 and _meta_key(names) in meta_by_key:
+            tp = None
+            if mesh is not None:
+                tp = "row" if (names and names[-1] in TP_ROW) else "column"
             return QuantTensor.from_payload(node, meta_by_key[_meta_key(names)],
-                                            backend=backend)
+                                            backend=backend, mesh=mesh, tp=tp)
         if isinstance(node, dict):
             return {k: rebuild(v, names + (k,)) for k, v in node.items()}
         if isinstance(node, (list, tuple)):

@@ -120,6 +120,14 @@ def segment_layer(q: GroupQuant, cfg: GLVQConfig) -> QuantSegments:
 QUANTIZABLE = {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "wx", "wg", "wr",
                "wi", "in_proj", "out_proj", "router"}
 
+# Megatron-style tensor parallelism over quantized layers: the TP_ROW
+# weights shard K (whole code groups) and psum partial products; every other
+# quantizable weight is column-parallel and shards the packed codes along N
+# (n_words).  The sharding rules (parallel.sharding) and the QuantTensor wrap
+# (core.qtensor) both key off this set so storage layout and compute layout
+# cannot drift.
+TP_ROW = {"wo", "w2", "out_proj"}
+
 _PAYLOAD_KEYS = {"packed", "g", "mu", "scale"}
 
 

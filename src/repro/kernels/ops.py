@@ -28,13 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import per_word
+from repro.core.packing import per_word, unit_codes
 from repro.kernels.babai_quant import babai_quantize_pallas
 from repro.kernels.glvq_matmul import glvq_matmul_pallas
 
 __all__ = ["glvq_matmul", "babai_quantize", "pick_n_block",
            "register_matmul_backend", "matmul_backends", "resolve_backend",
-           "quant_matmul", "quant_matmul_segments", "quant_decode"]
+           "quant_matmul", "quant_matmul_segments", "quant_decode",
+           "tp_shardable", "quant_matmul_tp", "quant_matmul_segments_tp"]
 
 
 def _on_tpu() -> bool:
@@ -43,7 +44,7 @@ def _on_tpu() -> bool:
 
 def pick_n_block(n_pad: int, bits: int, d: int, target: int = 512) -> int:
     """Largest Nb <= target with Nb % (per_word*d) == 0 and Nb | n_pad."""
-    unit = per_word(bits) * d // math.gcd(per_word(bits), d)
+    unit = unit_codes(bits, d)
     best = unit
     nb = unit
     while nb <= min(target, n_pad):
@@ -62,13 +63,16 @@ def glvq_matmul(x, packed, g, mu, scale, *, bits: int, d: int, n: int,
         interpret = not _on_tpu()
     m, k = x.shape
     pw = per_word(bits)
-    m_block = 128 if m % 128 == 0 else (8 if m % 8 == 0 else 1)
+    # keep the M tile MXU-sized: pad M up to the next multiple of the block
+    # instead of degrading to m_block=1 (a 4-slot decode batch would
+    # otherwise run 4 grid rows of 1xK GEMMs)
+    m_block = 128 if m % 128 == 0 else 8
     mb_pad = -m % m_block
     if mb_pad:
         x = jnp.pad(x, ((0, mb_pad), (0, 0)))
     # pad n_words so n_pad is a whole number of (per_word, d)-aligned units
     # (bits=3 payloads with small N otherwise have no valid block size)
-    unit = pw * d // math.gcd(pw, d)
+    unit = unit_codes(bits, d)
     w_words = packed.shape[1]
     while (w_words * pw) % unit:
         w_words += 1
@@ -191,6 +195,174 @@ def quant_matmul_segments(x, segments: Sequence, group_size: int, n: int, *,
         xs = jnp.take(x2, jnp.asarray(cols), axis=1)
         ys = _MATMUL_BACKENDS[name](xs, payload, meta)
         y = ys if y is None else y + ys
+    return y.reshape(batch + (n,)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel execution (shard_map over the "model" mesh axis)
+# ---------------------------------------------------------------------------
+#
+# The packed codes are the natural unit to shard: decoding is a per-column
+# (column-parallel) or per-group (row-parallel) operation, so each device
+# runs the SAME fused kernel on its local payload slice and the weight stays
+# compressed *and* distributed.
+#
+#   column-parallel  packed [K, n_words] shards n_words in word-unit-aligned
+#                    chunks (whole uint32 words AND whole lattice vectors);
+#                    g/mu/scale are per-K-group side info — replicated.  The
+#                    out_spec shards N, so shard_map's output IS the
+#                    concatenation: no collective at all.
+#   row-parallel     packed shards K in whole code groups; g/mu/scale shard
+#                    their group dim with it; x shards K; each device emits a
+#                    full-N partial product and a psum finishes the GEMM.
+
+import dataclasses as _dataclasses
+
+from jax.sharding import PartitionSpec as _P
+
+
+def _tp_size(mesh, axis: str) -> int:
+    return dict(mesh.shape).get(axis, 1)
+
+
+def tp_shardable(meta, tp: int, parallel: str) -> bool:
+    """Can this payload execute tp-way sharded without GSPMD padding?
+
+    column: N must split into tp chunks of whole words and whole d-vectors
+    (and carry no pad codes in the last word); row: K must split into tp
+    chunks of whole code groups."""
+    if tp <= 1:
+        return False
+    if parallel == "column":
+        return meta.n % (tp * unit_codes(meta.bits, meta.d)) == 0
+    if parallel == "row":
+        return meta.n_groups % tp == 0
+    raise ValueError(f"parallel must be 'column' or 'row', got {parallel!r}")
+
+
+def _payload_specs(payload, parallel: str, axis: str):
+    if parallel == "column":
+        by_name = dict(packed=_P(None, axis), g=_P(None, None, None),
+                       mu=_P(None), scale=_P(None))
+    else:
+        by_name = dict(packed=_P(axis, None), g=_P(axis, None, None),
+                       mu=_P(axis), scale=_P(axis))
+    return {k: by_name[k] for k in payload}
+
+
+def _m_axes(mesh, m: int, axis: str):
+    """Data axes to shard the flattened M (batch) dim over, so TP composes
+    with data parallelism instead of all-gathering activations: every axis of
+    the mesh other than the TP axis, when M divides evenly.  Returns None
+    (replicate M) otherwise."""
+    axes = tuple(a for a in mesh.axis_names if a != axis)
+    dp = math.prod(dict(mesh.shape)[a] for a in axes)
+    if not axes or dp <= 1 or m % dp:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _shard_map():
+    from repro.optim.compression import shard_map_fn
+    return shard_map_fn()
+
+
+def quant_matmul_tp(x, payload, meta, *, mesh, parallel: str = "column",
+                    axis: str = "model", backend: Optional[str] = None,
+                    out_dtype=None):
+    """Tensor-parallel y = x @ dequant(payload) over ``mesh[axis]``.
+
+    Falls back to the replicated ``quant_matmul`` when the mesh axis is
+    trivial, the payload is not cleanly shardable, or this jax has no
+    shard_map — callers never need to pre-check."""
+    tp = _tp_size(mesh, axis)
+    smap = _shard_map()
+    if smap is None or not tp_shardable(meta, tp, parallel):
+        return quant_matmul(x, payload, meta, backend=backend,
+                            out_dtype=out_dtype)
+    name = resolve_backend(backend)
+    out_dtype = out_dtype or x.dtype
+    batch = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    pspecs = _payload_specs(payload, parallel, axis)
+    ma = _m_axes(mesh, x2.shape[0], axis)     # keep data parallelism intact
+    if parallel == "column":
+        lmeta = _dataclasses.replace(meta, n=meta.n // tp)
+        xspec, out_spec = _P(ma, None), _P(ma, axis)
+
+        def fn(x_l, pl_l):
+            return _MATMUL_BACKENDS[name](x_l, pl_l, lmeta)
+    else:
+        lmeta = _dataclasses.replace(meta, k=meta.k // tp)
+        xspec, out_spec = _P(ma, axis), _P(ma, None)
+
+        def fn(x_l, pl_l):
+            return jax.lax.psum(_MATMUL_BACKENDS[name](x_l, pl_l, lmeta),
+                                axis)
+
+    y = smap(fn, mesh=mesh, in_specs=(xspec, pspecs),
+             out_specs=out_spec)(x2, payload)
+    return y.reshape(batch + (meta.n,)).astype(out_dtype)
+
+
+def quant_matmul_segments_tp(x, segments: Sequence, group_size: int, n: int,
+                             *, mesh, parallel: str = "column",
+                             axis: str = "model",
+                             backend: Optional[str] = None, out_dtype=None):
+    """Tensor-parallel mixed-bit (SDBA) fused matmul.
+
+    column: every segment's packed codes shard N; each device sums its
+    segments' partial products over its N-shard (no collective).  row: every
+    segment's K shards into whole code groups; each device gathers the x
+    columns its group sub-range contracts (offset by its position on the
+    mesh axis) and one psum finishes the sum over both segments and devices.
+    Falls back to the replicated path unless EVERY segment is shardable."""
+    tp = _tp_size(mesh, axis)
+    smap = _shard_map()
+    metas = [m for m, _, _ in segments]
+    if smap is None or tp <= 1 or \
+            not all(tp_shardable(m, tp, parallel) for m in metas):
+        return quant_matmul_segments(x, segments, group_size, n,
+                                     backend=backend, out_dtype=out_dtype)
+    name = resolve_backend(backend)
+    out_dtype = out_dtype or x.dtype
+    batch = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    payloads = tuple(p for _, p, _ in segments)
+    cols = []
+    for _, _, gidx in segments:
+        idx = np.asarray(gidx, np.int64)
+        cols.append(jnp.asarray(
+            (idx[:, None] * group_size
+             + np.arange(group_size)[None, :]).reshape(-1)))
+    pspecs = tuple(_payload_specs(p, parallel, axis) for p in payloads)
+    ma = _m_axes(mesh, x2.shape[0], axis)     # keep data parallelism intact
+    if parallel == "column":
+        lmetas = [_dataclasses.replace(m, n=m.n // tp) for m in metas]
+        out_spec = _P(ma, axis)
+
+        def fn(x_l, pls):
+            y = None
+            for lm, pl, c in zip(lmetas, pls, cols):
+                ys = _MATMUL_BACKENDS[name](jnp.take(x_l, c, axis=1), pl, lm)
+                y = ys if y is None else y + ys
+            return y
+    else:
+        lmetas = [_dataclasses.replace(m, k=m.k // tp) for m in metas]
+        out_spec = _P(ma, None)
+
+        def fn(x_l, pls):
+            t = jax.lax.axis_index(axis)
+            y = None
+            for lm, pl, c in zip(lmetas, pls, cols):
+                idx = jax.lax.dynamic_slice(c, (t * lm.k,), (lm.k,))
+                ys = _MATMUL_BACKENDS[name](jnp.take(x_l, idx, axis=1),
+                                            pl, lm)
+                y = ys if y is None else y + ys
+            return jax.lax.psum(y, axis)
+
+    y = smap(fn, mesh=mesh, in_specs=(_P(ma, None), pspecs),
+             out_specs=out_spec)(x2, payloads)
     return y.reshape(batch + (n,)).astype(out_dtype)
 
 

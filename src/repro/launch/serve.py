@@ -35,25 +35,30 @@ def make_decode_step(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
                      unroll: int = 1, backend: Optional[str] = None,
                      cache_kind: str = "dense",
                      kv_backend: Optional[str] = None,
-                     s_cache: Optional[int] = None):
+                     s_cache: Optional[int] = None,
+                     mesh: Optional[Mesh] = None):
     """One-token decode closure; quantized weights dispatch through the
     QuantTensor engine (``backend`` from kernels.ops.matmul_backends()),
     and a paged ``cache_kind`` routes attention history through the KV-cache
     engine (``kv_backend`` from kernels.kv_cache.kv_backends(); ``s_cache``
-    pins the sliding-window ring length to the dense oracle's)."""
+    pins the sliding-window ring length to the dense oracle's).  ``mesh``
+    runs quantized matmuls tensor-parallel (shard_map over the "model" axis)
+    — composable with every ``cache_kind``."""
     def decode_step(params, cache, token, pos):
         return registry.decode_step(params, cache, token, pos, cfg,
                                     dtype=dtype, unroll=unroll, qmeta=qmeta,
                                     backend=backend, cache_kind=cache_kind,
-                                    kv_backend=kv_backend, s_cache=s_cache)
+                                    kv_backend=kv_backend, s_cache=s_cache,
+                                    mesh=mesh)
     return decode_step
 
 
 def make_prefill(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                 unroll: int = 1, backend: Optional[str] = None):
+                 unroll: int = 1, backend: Optional[str] = None,
+                 mesh: Optional[Mesh] = None):
     def prefill(params, batch):
         return registry.forward(params, batch, cfg, dtype=dtype, qmeta=qmeta,
-                                unroll=unroll, backend=backend)
+                                unroll=unroll, backend=backend, mesh=mesh)
     return prefill
 
 
@@ -66,7 +71,7 @@ def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
     params_sds, qmeta = serve_param_shapes(cfg, quant_bits=quant_bits,
                                            quant_d=quant_d, dtype=dtype)
     cache_sds = registry.cache_specs(cfg, b, s, dtype)
-    p_specs = sharding.param_specs(params_sds, mesh)
+    p_specs = sharding.param_specs(params_sds, mesh, qmeta=qmeta)
     c_specs = sharding.cache_specs_tree(cache_sds, mesh)
     tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
     pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
@@ -75,7 +80,7 @@ def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
         if b % sharding.dp_size(mesh) == 0 else P()
     logits_s = sharding.logits_spec(cfg.vocab, mesh, b)
 
-    step = make_decode_step(cfg, qmeta, dtype, unroll, backend)
+    step = make_decode_step(cfg, qmeta, dtype, unroll, backend, mesh=mesh)
     jitted = jax.jit(
         step,
         in_shardings=sharding.named((p_specs, c_specs, bspec, P()), mesh),
@@ -92,9 +97,9 @@ def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
                   backend: Optional[str] = None):
     params_sds, qmeta = serve_param_shapes(cfg, quant_bits=quant_bits,
                                            quant_d=quant_d, dtype=dtype)
-    p_specs = sharding.param_specs(params_sds, mesh)
+    p_specs = sharding.param_specs(params_sds, mesh, qmeta=qmeta)
     b_specs = sharding.batch_specs(batch_sds, mesh)
-    fn = make_prefill(cfg, qmeta, dtype, unroll, backend)
+    fn = make_prefill(cfg, qmeta, dtype, unroll, backend, mesh=mesh)
     jitted = jax.jit(fn,
                      in_shardings=sharding.named((p_specs, b_specs), mesh),
                      out_shardings=None)
@@ -125,6 +130,10 @@ def main(argv=None):
     ap.add_argument("--kv-block-size", type=int, default=16)
     ap.add_argument("--kv-backend", default=None,
                     help="paged-cache kernel backend (pallas | xla)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel size: shard packed payloads over "
+                         "the model axis of a (dp, tp) mesh and run every "
+                         "quantized matmul per-shard (shard_map)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -135,6 +144,23 @@ def main(argv=None):
         qcfg = GLVQConfig(d=8, bits=args.quant_bits, iters=8, group_size=32)
         params, qmeta = quantized.quantize_param_tree(params, cfg=qcfg)
         print(f"[serve] quantized weights to {args.quant_bits} bits")
+    mesh = None
+    if args.tp > 1:
+        if jax.device_count() % args.tp:
+            raise SystemExit(
+                f"--tp {args.tp} needs a device count divisible by it "
+                f"(have {jax.device_count()}); hint: "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(jax.device_count() // args.tp, args.tp)
+        if qmeta:
+            specs = sharding.param_specs(params, mesh, qmeta=qmeta)
+            params = jax.device_put(params, sharding.named(specs, mesh))
+            print(f"[serve] tp={args.tp}: packed payloads sharded over "
+                  "'model'")
+        else:
+            print(f"[serve] tp={args.tp}: note — TP only shards quantized "
+                  "matmuls; pass --quant-bits to shard the weights")
     s_cache = 64
     cache = registry.cache_init(cfg, args.batch, s_cache, jnp.float32,
                                 cache_kind=args.cache,
@@ -152,7 +178,7 @@ def main(argv=None):
                                     backend=args.backend,
                                     cache_kind=args.cache,
                                     kv_backend=args.kv_backend,
-                                    s_cache=s_cache))
+                                    s_cache=s_cache, mesh=mesh))
     tok = jnp.zeros((args.batch,), jnp.int32)
     t0 = time.time()
     for i in range(args.steps):

@@ -144,14 +144,15 @@ def init_params(key, cfg: ModelConfig) -> Params:
     return p
 
 
-def _quantized_view(params: Params, qmeta, backend) -> Params:
+def _quantized_view(params: Params, qmeta, backend, mesh=None) -> Params:
     """Wrap packed payload dicts into QuantTensor nodes (the engine entry).
 
     The scan over ``blocks`` then slices each QuantTensor's payload arrays to
     the current repeat — the paper's streaming decode (Sec 3.4) — and every
     matmul inside the blocks dispatches through the backend registry instead
-    of materializing the dense weight in HBM."""
-    return qtensor.wrap_tree(params, qmeta, backend=backend)
+    of materializing the dense weight in HBM.  With ``mesh``, each matmul
+    runs tensor-parallel via shard_map on its local payload slice."""
+    return qtensor.wrap_tree(params, qmeta, backend=backend, mesh=mesh)
 
 
 def _backbone(params: Params, x, cfg: ModelConfig, pos, *, remat: bool = False,
@@ -192,10 +193,10 @@ def embed_inputs(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             *, dtype=jnp.bfloat16, remat: bool = False, qmeta=None,
-            unroll: int = 1, backend=None):
+            unroll: int = 1, backend=None, mesh=None):
     """logits [B, S, V] (f32)."""
     if qmeta:
-        params = _quantized_view(params, qmeta, backend)
+        params = _quantized_view(params, qmeta, backend, mesh)
     x, pos = embed_inputs(params, batch, cfg, dtype)
     x = _backbone(params, x, cfg, pos, remat=remat, unroll=unroll)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
@@ -282,16 +283,17 @@ def reset_slot(cache: Params, cfg: ModelConfig, slot) -> Params:
 def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                 *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
                 backend=None, cache_kind: str = "dense", kv_backend=None,
-                s_cache: Optional[int] = None):
+                s_cache: Optional[int] = None, mesh=None):
     """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache).
 
     With ``qmeta``, every matmul against a quantized weight dispatches through
     ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
     the dense weight never materializes on the fused backend.  With a paged
     ``cache_kind``, attention history reads/writes dispatch through the
-    ``kernels.kv_cache`` backend registry instead of dense buffers."""
+    ``kernels.kv_cache`` backend registry instead of dense buffers.  With
+    ``mesh``, quantized matmuls run tensor-parallel (shard_map) per shard."""
     if qmeta:
-        params = _quantized_view(params, qmeta, backend)
+        params = _quantized_view(params, qmeta, backend, mesh)
     pages = None
     if cache_kind != "dense":
         pages = dict(table=cache["table"], kind=cache_kind,

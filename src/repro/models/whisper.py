@@ -107,9 +107,9 @@ def decode_train(params: Params, tokens, enc_out, cfg: ModelConfig,
 
 def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
             *, dtype=jnp.bfloat16, remat: bool = False, unroll: int = 1,
-            qmeta=None, backend=None):
+            qmeta=None, backend=None, mesh=None):
     if qmeta:
-        params = qtensor.wrap_tree(params, qmeta, backend=backend)
+        params = qtensor.wrap_tree(params, qmeta, backend=backend, mesh=mesh)
     enc_out = encode(params, batch["frames"].astype(dtype), cfg, remat=remat,
                      unroll=unroll)
     return decode_train(params, batch["tokens"], enc_out, cfg, remat=remat,
@@ -142,10 +142,10 @@ def cache_init(cfg: ModelConfig, batch: int, s_dec: int, s_enc: int, dtype):
 
 
 def prefill_cross(params: Params, enc_out, cfg: ModelConfig, s_dec: int,
-                  *, qmeta=None, backend=None):
+                  *, qmeta=None, backend=None, mesh=None):
     """Run the encoder-side of serving: precompute per-layer cross K/V."""
     if qmeta:
-        params = qtensor.wrap_tree(params, qmeta, backend=backend)
+        params = qtensor.wrap_tree(params, qmeta, backend=backend, mesh=mesh)
     b, se = enc_out.shape[:2]
     dtype = enc_out.dtype
 
@@ -169,10 +169,10 @@ def prefill_cross(params: Params, enc_out, cfg: ModelConfig, s_dec: int,
 
 def decode_step(params: Params, cache, token, pos, cfg: ModelConfig,
                 *, dtype=jnp.bfloat16, unroll: int = 1, qmeta=None,
-                backend=None):
+                backend=None, mesh=None):
     """One decoder token against cached self-KV + cross-KV."""
     if qmeta:
-        params = qtensor.wrap_tree(params, qmeta, backend=backend)
+        params = qtensor.wrap_tree(params, qmeta, backend=backend, mesh=mesh)
     b = token.shape[0]
     x = params["embed"].astype(dtype)[token][:, None, :]
     s_dec = cache["self_k"].shape[2]

@@ -8,14 +8,20 @@ Scanned parameter stacks have a leading repeat dim which is never sharded.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.packing import per_word, unit_codes
+from repro.core.quantized import (QUANTIZABLE, TP_ROW, _PAYLOAD_KEYS,
+                                  _meta_key)
+
 __all__ = ["param_specs", "batch_specs", "cache_specs_tree", "ShardingRules",
-           "named", "zero_shard_specs", "dp_axes", "dp_size", "logits_spec"]
+           "named", "zero_shard_specs", "dp_axes", "dp_size", "logits_spec",
+           "payload_word_unit"]
 
 # logical (unstacked) rank per trailing param name
 _COL_PARALLEL = {"wq", "wk", "wv", "w1", "w3", "wx", "wg", "wr", "wi",
@@ -31,7 +37,10 @@ def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def dp_size(mesh: Mesh) -> int:
-    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in dp_axes(mesh)])))
+    # math.prod, not jnp.prod: this is a host-side integer used while
+    # *building* specs — allocating a device array here would round-trip
+    # through the backend on every spec build.
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
 
 
 def _tp(mesh: Mesh) -> int:
@@ -81,6 +90,49 @@ def _leaf_spec(name: str, shape: Tuple[int, ...], tp: int) -> P:
     return P(*([None] * nd))
 
 
+def payload_word_unit(bits: int, d: int) -> int:
+    """``core.packing.unit_codes`` expressed in packed uint32 words — the
+    granularity shard boundaries of ``packed``'s last dim must respect."""
+    return unit_codes(bits, d) // per_word(bits)
+
+
+def _payload_leaf_spec(wname: str, lname: str, shape: Tuple[int, ...],
+                       tp: int, meta) -> P:
+    """QuantTensor payload leaves ({packed, g, mu, scale} under a quantizable
+    weight name).
+
+    Column-parallel weights shard ``packed`` along n_words in word-unit-
+    aligned chunks (G / mu / scale are per-K-group side info shared by every
+    N column — replicated).  Row-parallel weights shard K: ``packed`` along
+    its K dim in whole code groups, and g / mu / scale along their group dim
+    together with it, so each device holds exactly the side info its K-shard
+    decodes with.  Anything indivisible stays replicated (no GSPMD padding).
+    """
+    nd = len(shape)
+    parts = [None] * nd
+    if wname in TP_ROW:
+        if meta is None or meta.n_groups % tp:
+            return P(*parts)                 # keep all four leaves consistent
+        if lname == "packed":                # [lead..., K, n_words]
+            parts[-2] = "model"
+        elif lname == "g":                   # [lead..., n_groups, d, d]
+            parts[-3] = "model"
+        else:                                # mu / scale [lead..., n_groups]
+            parts[-1] = "model"
+        return P(*parts)
+    # column-parallel
+    if lname == "packed":
+        if meta is not None:
+            # aligned shards, no pad codes — the same condition as
+            # kernels.ops.tp_shardable, via the shared unit_codes helper
+            ok = meta.n % (tp * unit_codes(meta.bits, meta.d)) == 0
+        else:
+            ok = _div(shape[-1], tp)         # legacy: plain word divisibility
+        if ok:
+            parts[-1] = "model"
+    return P(*parts)
+
+
 def _moe_leaf_spec(name: str, shape: Tuple[int, ...], tp: int,
                    expert_parallel: bool) -> Optional[P]:
     """MoE weights [R, E, D, F]: shard the expert dim when divisible."""
@@ -92,15 +144,44 @@ def _moe_leaf_spec(name: str, shape: Tuple[int, ...], tp: int,
     return None
 
 
+def _moe_payload_spec(lname: str, shape: Tuple[int, ...], tp: int,
+                      expert_parallel: bool) -> Optional[P]:
+    """Quantized MoE payload leaves: shard the expert dim (mirrors the dense
+    expert-parallel rule; all four leaves shard the same dim so one expert's
+    payload stays co-located)."""
+    nd = len(shape)
+    edim = {"packed": nd - 3, "g": nd - 4, "mu": nd - 2, "scale": nd - 2}[lname]
+    if expert_parallel and edim >= 0 and _div(shape[edim], tp):
+        parts = [None] * nd
+        parts[edim] = "model"
+        return P(*parts)
+    return None
+
+
 def param_specs(params, mesh: Mesh, *, expert_parallel: bool = True,
-                moe_paths: bool = True):
-    """PartitionSpec pytree matching ``params``."""
+                moe_paths: bool = True, qmeta=None):
+    """PartitionSpec pytree matching ``params``.
+
+    ``qmeta`` (the ``meta_by_key`` dict from ``core.quantized``) enables the
+    QuantTensor-aware payload rules: column-parallel packed codes shard along
+    n_words in word-unit-aligned chunks, row-parallel payloads shard K /
+    their group dim — matching the shard_map execution path in
+    ``kernels.ops``.  Without it, payload leaves fall back to storage-level
+    word sharding with replicated side info."""
     tp = _tp(mesh)
 
     def spec_for(path, leaf):
         names = [p.key for p in path if hasattr(p, "key")]
         name = names[-1] if names else ""
         in_moe = "moe" in names
+        wname = names[-2] if len(names) >= 2 else ""
+        if name in _PAYLOAD_KEYS and wname in QUANTIZABLE:
+            if in_moe and moe_paths:
+                s = _moe_payload_spec(name, leaf.shape, tp, expert_parallel)
+                if s is not None:
+                    return s
+            meta = qmeta.get(_meta_key(tuple(names[:-1]))) if qmeta else None
+            return _payload_leaf_spec(wname, name, leaf.shape, tp, meta)
         if in_moe and moe_paths:
             s = _moe_leaf_spec(name, leaf.shape, tp, expert_parallel)
             if s is not None:
@@ -144,8 +225,21 @@ def batch_specs(batch, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(spec_for, batch)
 
 
+# Paged-pool leaves (kernels.kv_cache.pool_init): kp/vp [R?, num_blocks,
+# block_size, KV, hd], ksc/vsc [R?, num_blocks, block_size, KV].  These are
+# NOT dense [B, S, ...] layouts: the pool dims (num_blocks, block_size) index
+# physical blocks shared by every slot, so sharding either one over the data
+# axes would scatter one slot's history across data replicas.
+_PAGED_POOLS = {"kp": -2, "vp": -2, "ksc": -1, "vsc": -1}   # name -> KV dim
+
+
 def cache_specs_tree(cache, mesh: Mesh, cfg=None):
-    """KV caches: batch over (pod,data); heads/channels over model if divisible."""
+    """KV caches: batch over (pod,data); heads/channels over model if divisible.
+
+    Paged pools replicate over the data axes (the block pool is shared by all
+    slots) and shard only the KV-head dim over model when divisible; the block
+    table is fully replicated — its host-side ``SlotPages`` mirror is
+    unsharded, and a data-sharded device copy would desynchronize from it."""
     axes = dp_axes(mesh)
     n = dp_size(mesh)
     tp = _tp(mesh)
@@ -155,6 +249,13 @@ def cache_specs_tree(cache, mesh: Mesh, cfg=None):
         name = names[-1] if names else ""
         shape = leaf.shape
         parts = [None] * leaf.ndim
+        if name in _PAGED_POOLS:
+            kv = _PAGED_POOLS[name]
+            if shape[kv] % tp == 0:
+                parts[kv] = "model"
+            return P(*parts)
+        if name == "table":                  # int32 [slots, blocks_per_slot]
+            return P(*parts)
         # layouts: k/v [R?, B, S, KV, hd]; state [R?, B, H, P, N] | [R?, B, R];
         # conv [R?, B, W, C]; whisper self_k [L, B, S, KV, hd]
         bdim = 1 if leaf.ndim >= 3 else 0

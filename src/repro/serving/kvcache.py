@@ -50,6 +50,7 @@ class BlockAllocator:
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free: deque[int] = deque(range(1, num_blocks))
+        self._free_set: set[int] = set(self._free)
         self._ever_used: set[int] = set()
         self.recycled = 0                       # re-allocations of freed blocks
 
@@ -68,15 +69,38 @@ class BlockAllocator:
                 f"{self.num_blocks - 1} blocks are live. Retire requests, "
                 "raise num_blocks, or admit fewer concurrent slots.")
         bid = self._free.popleft()
+        self._free_set.discard(bid)
         if bid in self._ever_used:
             self.recycled += 1
         self._ever_used.add(bid)
         return bid
 
     def free(self, ids: Iterable[int]):
+        """Return blocks to the pool.  A double-free is an error, not a
+        shrug: re-listing a block would hand it to two live slots and corrupt
+        cross-request KV history the next time either one writes.
+
+        Validates the whole batch before mutating anything, so a raise never
+        leaves the pool half-released."""
+        add = []
         for bid in ids:
-            if bid:                             # never recycle scratch 0
-                self._free.append(int(bid))
+            bid = int(bid)
+            if not bid:                         # never recycle scratch 0
+                continue
+            if bid < 0 or bid >= self.num_blocks:
+                raise ValueError(
+                    f"free of out-of-range KV block id {bid} "
+                    f"(pool has blocks 1..{self.num_blocks - 1})")
+            if bid in self._free_set or bid in add:
+                # also catches freeing a block that was never handed out:
+                # every non-live block sits on the free list by invariant
+                raise RuntimeError(
+                    f"double free of KV block {bid}: it is already on the "
+                    "free list; freeing it again would alias two slots onto "
+                    "one block")
+            add.append(bid)
+        self._free.extend(add)
+        self._free_set.update(add)
 
 
 class SlotPages:

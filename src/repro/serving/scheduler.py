@@ -64,12 +64,14 @@ class ContinuousBatcher:
                  backend: Optional[str] = None, pad_token: int = 0,
                  greedy: bool = True, cache_kind: str = "dense",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 kv_backend: Optional[str] = None):
+                 kv_backend: Optional[str] = None, mesh=None):
         """``qmeta`` + ``backend`` route every weight matmul in the compiled
         decode step through the quantized-execution engine (QuantTensor
         dispatch); ``cache_kind`` + ``kv_backend`` route the attention cache
         through the paged KV engine (``kernels.kv_cache``); ``None`` backends
-        use the platform default."""
+        use the platform default.  ``mesh`` runs quantized matmuls tensor-
+        parallel (shard_map over the mesh's "model" axis) — works with every
+        ``cache_kind``."""
         if cache_kind not in kvcache.CACHE_KINDS:
             raise ValueError(f"unknown cache_kind {cache_kind!r}; "
                              f"available: {kvcache.CACHE_KINDS}")
@@ -97,7 +99,8 @@ class ContinuousBatcher:
             lambda c, i: registry.reset_slot(c, cfg, i))
         self._step = jax.jit(lambda p, c, t, pos: registry.decode_step(
             p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta, backend=backend,
-            cache_kind=cache_kind, kv_backend=kv_backend, s_cache=s_cache))
+            cache_kind=cache_kind, kv_backend=kv_backend, s_cache=s_cache,
+            mesh=mesh))
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):

@@ -55,12 +55,43 @@ def test_glvq_matmul_irregular_m():
     rng = np.random.default_rng(12)
     k, n, bits, d = 128, 160, 2, 8
     packed, g, mu, scale = _payload(rng, k, n, bits, d)
-    for m in (1, 5, 13):
+    for m in (1, 4, 5, 13):
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits, d=d, n=n)
         y_ker = ops.glvq_matmul(x, packed, g, mu, scale, bits=bits, d=d, n=n)
         tol = 2e-6 * float(np.abs(np.asarray(y_ref)).max()) + 1e-5
         np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                                   rtol=2e-4, atol=tol)
+
+
+def test_glvq_matmul_pads_m_instead_of_degrading(monkeypatch):
+    """M not a multiple of 8 (a 4-slot decode batch) must pad M up and keep
+    an MXU-sized m_block >= 8, not fall back to m_block=1 row-at-a-time."""
+    rng = np.random.default_rng(13)
+    k, n, bits, d = 128, 160, 2, 8
+    packed, g, mu, scale = _payload(rng, k, n, bits, d)
+    calls = {}
+    real = ops.glvq_matmul_pallas
+
+    def spy(x, *args, **kw):
+        calls["m_block"] = kw["m_block"]
+        calls["m_padded"] = x.shape[0]
+        return real(x, *args, **kw)
+
+    monkeypatch.setattr(ops, "glvq_matmul_pallas", spy)
+    for m, want_pad in ((4, 8), (13, 16), (8, 8)):
+        calls.clear()
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        # bypass the jit wrapper so the spy observes the traced call
+        y = ops.glvq_matmul.__wrapped__(x, packed, g, mu, scale, bits=bits,
+                                        d=d, n=n, interpret=True)
+        assert calls["m_block"] >= 8
+        assert calls["m_padded"] == want_pad, (m, calls)
+        assert y.shape == (m, n)
+        y_ref = ref.glvq_matmul_ref(x, packed, g, mu, scale, bits=bits,
+                                    d=d, n=n)
+        tol = 2e-6 * float(np.abs(np.asarray(y_ref)).max()) + 1e-5
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=2e-4, atol=tol)
 
 

@@ -99,6 +99,36 @@ def test_block_allocator_exhaustion_and_recycling():
     assert again in ids[:2] and alloc.recycled == 1
 
 
+def test_block_allocator_double_free_raises():
+    """A double-free would hand the same block to two live slots and corrupt
+    cross-request KV history — it must raise, not silently re-list."""
+    alloc = kvcache.BlockAllocator(5)            # blocks 1..4 usable
+    ids = [alloc.alloc() for _ in range(3)]
+    alloc.free(ids[:1])
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free(ids[:1])
+    assert alloc.free_blocks == 2                # state unchanged by the raise
+    # the whole batch validates before any mutation: a bad id mid-list must
+    # not leave earlier ids half-released (or the release retry would then
+    # double-free spuriously)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free([ids[1], ids[2], ids[2]])
+    assert alloc.free_blocks == 2
+    alloc.free(ids[1:])                          # retry succeeds atomically
+    assert alloc.free_blocks == 4
+    # freeing a block that was never handed out is the same corruption
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.free([4])
+    # scratch block 0 is silently skipped (idle rows point at it)
+    alloc.free([0])
+    with pytest.raises(ValueError, match="out-of-range"):
+        alloc.free([7])
+    # legitimate free -> realloc -> free cycles still work
+    bid = alloc.alloc()
+    alloc.free([bid])
+    assert bid in [alloc.alloc() for _ in range(alloc.free_blocks)]
+
+
 def test_slot_pages_lazy_grant_and_release():
     layout = kvcache.PageLayout.plan(s_cache=32, slots=2, block_size=8)
     assert layout.blocks_per_slot == 4 and layout.num_blocks == 9

@@ -73,6 +73,116 @@ def test_zero_sharding_adds_data_axis():
     assert after > before
 
 
+def test_dp_size_is_host_int():
+    """dp_size is used while *building* specs — it must be an exact host int
+    (math.prod), never a device-array round-trip."""
+    assert sharding.dp_size(_FakeMesh({"data": 16, "model": 16})) == 16
+    assert sharding.dp_size(_FakeMesh({"pod": 2, "data": 16,
+                                       "model": 16})) == 32
+    assert type(sharding.dp_size(_FakeMesh({"model": 16}))) is int
+
+
+def test_payload_specs_quant_aware():
+    """With qmeta, payload leaves shard per their weight's TP mode: column
+    weights shard packed n_words (side info replicated), row weights shard
+    K / the group dim together."""
+    from repro.core.quantized import quantized_param_shapes
+    from repro.models import registry
+    cfg = get_config("llama2-7b")
+    sds = registry.param_shapes(cfg)
+    qsds, qmeta = quantized_param_shapes(sds, bits=4, d=8)
+    mesh = _FakeMesh({"data": 4, "model": 4})
+    specs = sharding.param_specs(qsds, mesh, qmeta=qmeta)
+    attn = specs["blocks"][0]["attn"]
+    mlp = specs["blocks"][0]["mlp"]
+    # column-parallel wq: packed [R, K, n_words] shards words; side info repl.
+    assert attn["wq"]["packed"] == P(None, None, "model")
+    assert attn["wq"]["g"] == P(None, None, None, None)
+    assert attn["wq"]["mu"] == P(None, None)
+    # row-parallel wo: packed shards K, g/mu/scale shard their group dim
+    assert attn["wo"]["packed"] == P(None, "model", None)
+    assert attn["wo"]["g"] == P(None, "model", None, None)
+    assert attn["wo"]["mu"] == P(None, "model")
+    assert attn["wo"]["scale"] == P(None, "model")
+    # w2's K is the FFN dim (11008 -> 86 groups, not divisible by 4): the
+    # whole payload must stay consistently replicated, not half-sharded
+    assert mlp["w2"]["packed"] == P(None, None, None)
+    assert mlp["w2"]["mu"] == P(None, None)
+    # every sharded dim still divides evenly
+    flat_s = jax.tree_util.tree_leaves(specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(qsds)
+    for spec, leaf in zip(flat_s, flat_l):
+        for i, part in enumerate(spec):
+            if part is not None:
+                assert leaf.shape[i] % mesh.shape["model"] == 0, \
+                    (spec, leaf.shape)
+
+
+def test_payload_specs_word_unit_alignment():
+    """bits=3 (per_word=10): shards must land on whole-word / whole-vector
+    boundaries, so an indivisible N stays replicated instead of padding."""
+    from repro.core.quantized import QuantLinearMeta
+    meta = QuantLinearMeta(k=256, n=320, bits=3, d=8, group_size=128)
+    # unit = lcm(10, 8) = 40 codes = 4 words; tp=2 -> n % 80 == 0: ok
+    s = sharding._payload_leaf_spec("wq", "packed", (256, 32), 2, meta)
+    assert s == P(None, "model")
+    # tp=16 -> n % 640 != 0: replicate (no GSPMD padding)
+    s = sharding._payload_leaf_spec("wq", "packed", (256, 32), 16, meta)
+    assert s == P(None, None)
+    # row: n_groups=2 divides tp=2 but not tp=4
+    assert sharding._payload_leaf_spec(
+        "wo", "packed", (256, 32), 2, meta) == P("model", None)
+    assert sharding._payload_leaf_spec(
+        "wo", "packed", (256, 32), 4, meta) == P(None, None)
+    assert sharding._payload_leaf_spec(
+        "wo", "mu", (2,), 4, meta) == P(None)
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "recurrentgemma-9b"])
+@pytest.mark.parametrize("kind", ["paged", "paged_q8"])
+def test_cache_specs_paged_pools_never_shard_pool_dims(arch, kind):
+    """Regression: kp/vp/ksc/vsc are [num_blocks, block_size, KV(, hd)] pool
+    layouts, NOT dense [B, S, ...]; the old dense rules data-sharded
+    block_size and the table's slots dim (desyncing it from the host-side
+    SlotPages mirror)."""
+    cfg = get_config(arch)
+    sds = registry.cache_specs(cfg, 4, 64, jnp.float32, cache_kind=kind)
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    specs = sharding.cache_specs_tree(sds, mesh)
+
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    flat_l = jax.tree_util.tree_leaves(sds)
+    assert len(flat_s) == len(flat_l)
+    seen = set()
+    for (path, spec), leaf in zip(flat_s, flat_l):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name in ("kp", "vp", "ksc", "vsc"):
+            seen.add(name)
+            # pool dims (num_blocks, block_size) and data axes: never sharded
+            nd = leaf.ndim
+            pool_dims = (nd - 4, nd - 3) if name in ("kp", "vp") \
+                else (nd - 3, nd - 2)
+            for i in pool_dims:
+                assert spec[i] is None, (name, spec, leaf.shape)
+            for part in spec:
+                assert part not in ("data", "pod"), (name, spec)
+                assert not (isinstance(part, tuple) and
+                            ("data" in part or "pod" in part)), (name, spec)
+            # KV head dim over model only when divisible
+            kv = nd - 2 if name in ("kp", "vp") else nd - 1
+            if leaf.shape[kv] % mesh.shape["model"] == 0:
+                assert spec[kv] == "model", (name, spec, leaf.shape)
+        elif name == "table":
+            seen.add(name)
+            assert spec == P(None, None)
+    assert {"kp", "vp", "table"} <= seen
+    if kind == "paged_q8":
+        assert {"ksc", "vsc"} <= seen
+
+
 def test_batch_specs_replicate_indivisible():
     mesh = _FakeMesh({"data": 16, "model": 16})
     b = dict(tokens=jax.ShapeDtypeStruct((1, 128), jnp.int32))

@@ -1,0 +1,246 @@
+"""Tensor-parallel quantized-execution parity suite.
+
+The acceptance bar for the TP engine: on a multi-device mesh, sharded
+``qt.matmul`` (uniform bits 2/3/4 and mixed-bit SDBA, column- and
+row-parallel) matches the unsharded ``reference`` backend, and each device's
+addressable ``packed`` shard is ~1/TP of the full payload in word-unit-
+aligned chunks.
+
+The parametrized tests below need >= 8 devices; under the normal tier-1 run
+(single CPU device) ``test_tp_parity_forced_8dev_subprocess`` re-runs this
+whole file in a subprocess with ``--xla_force_host_platform_device_count=8``
+so the suite is exercised either way.  ``scripts/ci.sh`` also runs the file
+directly on a forced-8-device CPU.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import GLVQConfig, QuantTensor, qtensor, quantize_layer
+from repro.core.quantized import (QuantLinearMeta, decode_segments,
+                                  quantize_param_tree, segment_layer)
+from repro.core.testing import synthetic_payload
+from repro.kernels import ops
+from repro.parallel import sharding
+
+_multidev = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8); covered by the subprocess test on 1 device")
+
+K, N, M, D = 512, 320, 5, 8          # n_groups=4; M=5 exercises the M-pad path
+
+
+def _mesh(tp: int):
+    return jax.make_mesh((jax.device_count() // tp, tp), ("data", "model"))
+
+
+def _assert_close(y, ref):
+    tol = 2e-6 * float(np.abs(ref).max()) + 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=5e-4, atol=tol)
+
+
+# --- uniform-bit parity ------------------------------------------------------
+
+@_multidev
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("parallel", ["column", "row"])
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_uniform_parity(bits, parallel, tp):
+    rng = np.random.default_rng(bits * 7 + tp)
+    meta = QuantLinearMeta(k=K, n=N, bits=bits, d=D, group_size=128)
+    payload = synthetic_payload(rng, K, N, bits, D)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    qt = QuantTensor.from_payload(payload, meta)
+    ref = qt.matmul(x, backend="reference", out_dtype=jnp.float32)
+    mesh = _mesh(tp)
+    assert ops.tp_shardable(meta, tp, parallel)
+    for backend in ("xla_decode", "pallas_fused"):
+        qts = QuantTensor.from_payload(payload, meta,
+                                       backend=backend).with_mesh(
+                                           mesh, parallel)
+        y = jax.jit(lambda x, q: q.matmul(x, out_dtype=jnp.float32))(x, qts)
+        _assert_close(y, np.asarray(ref))
+
+
+# --- mixed-bit (SDBA) parity -------------------------------------------------
+
+def _mixed_layer(rng, bits_per_group):
+    w = jnp.asarray(rng.standard_t(3, size=(K, N)) * 0.02, jnp.float32)
+    cfg = GLVQConfig(d=D, bits=3, iters=3)
+    q = quantize_layer(w, None, cfg, jnp.asarray(bits_per_group))
+    return segment_layer(q, cfg)
+
+
+@_multidev
+@pytest.mark.parametrize("parallel,tp", [("column", 2), ("column", 4),
+                                         ("row", 2)])
+def test_tp_mixed_parity(parallel, tp):
+    # bits chosen so every segment has 2 groups -> row-shardable at tp=2;
+    # column sharding only needs N % (tp * lcm(per_word, d)) == 0
+    rng = np.random.default_rng(31)
+    segs = _mixed_layer(rng, [2, 4, 2, 4])
+    assert len(segs.segments) == 2
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    ref = np.asarray(x @ decode_segments(segs))
+    mesh = _mesh(tp)
+    for m, _, _ in segs.segments:
+        assert ops.tp_shardable(m, tp, parallel)
+    for backend in ("xla_decode", "pallas_fused"):
+        qts = QuantTensor.from_segments(segs, backend=backend).with_mesh(
+            mesh, parallel)
+        y = jax.jit(lambda x, q: q.matmul(x, out_dtype=jnp.float32))(x, qts)
+        _assert_close(y, ref)
+
+
+@_multidev
+@pytest.mark.parametrize("parallel", ["column", "row"])
+def test_tp_composes_with_data_sharded_batch(parallel):
+    """When M divides the data axes, activations shard over them inside the
+    shard_map (no all-gather): a batch placed data-sharded must come out
+    bit-identical to the replicated-batch result."""
+    from jax.sharding import NamedSharding
+    rng = np.random.default_rng(9)
+    meta = QuantLinearMeta(k=K, n=N, bits=4, d=D, group_size=128)
+    payload = synthetic_payload(rng, K, N, 4, D)
+    mesh = _mesh(2)                              # (data=4, model=2)
+    m = 8                                        # divisible by dp=4
+    x = jnp.asarray(rng.normal(size=(m, K)), jnp.float32)
+    qt = QuantTensor.from_payload(payload, meta)
+    ref = qt.matmul(x, backend="reference", out_dtype=jnp.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+    qts = QuantTensor.from_payload(payload, meta,
+                                   backend="xla_decode").with_mesh(
+                                       mesh, parallel)
+    y = jax.jit(lambda x, q: q.matmul(x, out_dtype=jnp.float32))(xs, qts)
+    _assert_close(y, np.asarray(ref))
+
+
+@_multidev
+def test_tp_unshardable_falls_back_to_replicated():
+    """Row-parallel with n_groups % tp != 0 must still be correct (fallback),
+    never silently wrong."""
+    rng = np.random.default_rng(5)
+    segs = _mixed_layer(rng, [2, 4, 4, 4])      # segments with 1 and 3 groups
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    ref = np.asarray(x @ decode_segments(segs))
+    for m, _, _ in segs.segments:
+        assert not ops.tp_shardable(m, 2, "row")
+    qts = QuantTensor.from_segments(segs, backend="xla_decode").with_mesh(
+        _mesh(2), "row")
+    y = jax.jit(lambda x, q: q.matmul(x, out_dtype=jnp.float32))(x, qts)
+    _assert_close(y, ref)
+
+
+# --- per-device payload bytes ------------------------------------------------
+
+@_multidev
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_packed_bytes_shrink(tp):
+    """Each device's addressable packed shard must be exactly 1/TP of the
+    full payload, cut on word-unit boundaries."""
+    rng = np.random.default_rng(tp)
+    bits = 3                                     # per_word=10: the awkward one
+    meta = QuantLinearMeta(k=K, n=N, bits=bits, d=D, group_size=128)
+    payload = synthetic_payload(rng, K, N, bits, D)
+    mesh = _mesh(tp)
+    spec = sharding._payload_leaf_spec("wq", "packed",
+                                       payload["packed"].shape, tp, meta)
+    assert spec == P(None, "model")
+    packed = jax.device_put(payload["packed"],
+                            sharding.named(spec, mesh))
+    full = payload["packed"].size * 4
+    unit = sharding.payload_word_unit(bits, D)
+    for shard in packed.addressable_shards:
+        assert shard.data.nbytes == full // tp
+        assert shard.data.shape[-1] % unit == 0
+    # row-parallel: the K dim shards instead, in whole code groups
+    spec_r = sharding._payload_leaf_spec("wo", "packed",
+                                         payload["packed"].shape, tp, meta)
+    assert spec_r == P("model", None)
+    packed_r = jax.device_put(payload["packed"],
+                              sharding.named(spec_r, mesh))
+    for shard in packed_r.addressable_shards:
+        assert shard.data.nbytes == full // tp
+        assert shard.data.shape[0] % meta.group_size == 0
+
+
+# --- model-level: decode step with a mesh ------------------------------------
+
+@_multidev
+def test_tp_model_decode_matches_unsharded():
+    """registry.decode_step(mesh=...) must reproduce the meshless logits —
+    shardable layers run the shard_map path, the rest fall back."""
+    from repro.configs import get_config, reduced
+    from repro.models import registry
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=2, group_size=32)
+    qparams, qmeta = quantize_param_tree(params, cfg=qcfg)
+    tok = jnp.zeros((2,), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+
+    def logits(mesh):
+        cache = registry.cache_init(cfg, 2, 8, jnp.float32)
+        lg, _ = jax.jit(lambda p, c: registry.decode_step(
+            p, c, tok, pos, cfg, dtype=jnp.float32, qmeta=qmeta,
+            backend="xla_decode", mesh=mesh))(qparams, cache)
+        return np.asarray(lg)
+
+    ref = logits(None)
+    np.testing.assert_allclose(logits(_mesh(2)), ref, rtol=1e-4, atol=1e-4)
+
+
+@_multidev
+@pytest.mark.parametrize("cache_kind", ["dense", "paged_q8"])
+def test_tp_continuous_batching_matches_meshless(cache_kind):
+    """Sharded serving works with every cache_kind: the scheduler with a mesh
+    must emit token-identical generations to the meshless batcher."""
+    from repro.configs import get_config, reduced
+    from repro.models import registry
+    from repro.serving.scheduler import ContinuousBatcher, Request
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(1), cfg)
+    qcfg = GLVQConfig(d=8, bits=4, iters=2, group_size=32)
+    qparams, qmeta = quantize_param_tree(params, cfg=qcfg)
+    prompts = [[1, 2, 3], [4, 5], [6]]
+
+    def run(mesh):
+        cb = ContinuousBatcher(qparams, cfg, slots=2, s_cache=16,
+                               dtype=jnp.float32, qmeta=qmeta,
+                               backend="xla_decode", cache_kind=cache_kind,
+                               mesh=mesh)
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, prompt=p, max_new=3))
+        return {i: r.tokens for i, r in cb.run().items()}
+
+    assert run(_mesh(2)) == run(None)
+
+
+# --- single-device tier-1 entry point ----------------------------------------
+
+def test_tp_parity_forced_8dev_subprocess():
+    """Under the plain tier-1 run (1 device) re-run this file on a forced
+    8-device CPU so the TP path is always exercised."""
+    if jax.device_count() >= 8:
+        pytest.skip("multi-device host: the direct tests above already ran")
+    if os.environ.get("REPRO_SKIP_TP_SUBPROCESS"):
+        pytest.skip("REPRO_SKIP_TP_SUBPROCESS set: the caller runs the "
+                    "forced-8-device suite itself (scripts/ci.sh)")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__,
+         "-k", "not subprocess", "-p", "no:cacheprovider"],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=1800)
+    assert out.returncode == 0, (out.stdout[-3000:] + out.stderr[-3000:])
