@@ -1,0 +1,143 @@
+"""Chunked-prefill serving benchmark — emits ``BENCH_serving.json``.
+
+Two parts:
+
+  * **TTFT (time-to-first-token)**: one request with a long prompt through
+    ``ContinuousBatcher`` at several ``chunk_size`` settings.  ``chunk=1``
+    is the token-by-token baseline (one engine iteration per prompt token);
+    chunked prefill consumes up to ``chunk_size`` prompt tokens per
+    iteration, so TTFT drops roughly linearly until per-iteration overhead
+    stops dominating.  Compilation is excluded (a warm-up request with the
+    same program shapes runs first).
+  * **Hybrid throughput**: a batch of requests (prefill + decode slots mixed
+    in the same engine iterations, Sarathi-style) — steady-state tokens/s
+    per chunk size.
+
+Off-TPU the kernels run via the XLA fallback (or Pallas interpret mode), so
+absolute numbers only compare like with like — the JSON records the
+platform.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving [--smoke] [--out ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import registry
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+PROMPT_LEN_FULL = 512
+CHUNKS_FULL = (1, 16, 64, 128)
+PROMPT_LEN_SMOKE = 32
+CHUNKS_SMOKE = (1, 8)
+
+
+def _batcher(params, cfg, s_cache, chunk, **kw):
+    return ContinuousBatcher(params, cfg, slots=2, s_cache=s_cache,
+                             dtype=jnp.float32, chunk_size=chunk, **kw)
+
+
+def _ttft(params, cfg, prompt, s_cache, chunk):
+    """Seconds from submit to the first generated token (compile excluded)."""
+    cb = _batcher(params, cfg, s_cache, chunk)
+    # warm-up: compile both program shapes (T=chunk prefill, T=1 decode)
+    cb.submit(Request(rid=-1, prompt=prompt[: max(2, chunk + 1)], max_new=2))
+    cb.run()
+    cb.finished.clear()
+    req = Request(rid=0, prompt=prompt, max_new=4)
+    cb.submit(req)
+    t0 = time.perf_counter()
+    steps = 0
+    while not req.tokens and steps < 100_000:
+        cb.step()
+        steps += 1
+    ttft = time.perf_counter() - t0
+    cb.run()
+    assert req.done and len(req.tokens) == 4
+    return ttft, steps
+
+
+def bench_ttft(smoke: bool = False):
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    prompt_len = PROMPT_LEN_SMOKE if smoke else PROMPT_LEN_FULL
+    chunks = CHUNKS_SMOKE if smoke else CHUNKS_FULL
+    s_cache = prompt_len + 16
+    rng = np.random.default_rng(0)
+    prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+    rows, tokens = [], {}
+    for chunk in chunks:
+        ttft, steps = _ttft(params, cfg, prompt, s_cache, chunk)
+        rows.append(dict(kind="ttft", arch="llama2-7b(reduced)",
+                         prompt_len=prompt_len, chunk_size=chunk,
+                         ttft_s=ttft, prefill_steps=steps))
+        tokens[chunk] = ttft
+        print(f"[serving] TTFT prompt={prompt_len} chunk={chunk:4d}: "
+              f"{ttft * 1e3:8.1f} ms ({steps} engine iterations)")
+    base = tokens[1]
+    for r in rows:
+        r["speedup_vs_token_by_token"] = base / r["ttft_s"]
+    return rows
+
+
+def bench_hybrid_throughput(smoke: bool = False):
+    """Mixed prefill+decode batches: total tokens/s through request churn."""
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    n_req, p_len, max_new = (4, 12, 4) if smoke else (12, 48, 16)
+    chunks = CHUNKS_SMOKE if smoke else (1, 16, 64)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, p_len)))
+               for _ in range(n_req)]
+    rows = []
+    for chunk in chunks:
+        cb = _batcher(params, cfg, p_len + max_new + 8, chunk)
+        # warm-up: compile BOTH program shapes (T=chunk prefill, T=1 decode)
+        cb.submit(Request(rid=-1, prompt=prompts[0][:2], max_new=2))
+        cb.run()
+        cb.finished.clear()
+        for i, p in enumerate(prompts):
+            cb.submit(Request(rid=i, prompt=p, max_new=max_new))
+        t0 = time.perf_counter()
+        done = cb.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in done.values())
+        proc = toks + sum(len(p) for p in prompts)      # incl. prompt tokens
+        rows.append(dict(kind="hybrid", arch="llama2-7b(reduced)",
+                         requests=n_req, prompt_len=p_len, chunk_size=chunk,
+                         generated=toks, tokens_per_s=proc / dt))
+        print(f"[serving] hybrid chunk={chunk:4d}: {proc / dt:8.1f} tok/s "
+              f"({toks} generated, {proc} processed)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(Path(__file__).parent
+                                         / "BENCH_serving.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few steps (CI smoke)")
+    args = ap.parse_args(argv)
+    ttft = bench_ttft(smoke=args.smoke)
+    best = max(r["speedup_vs_token_by_token"] for r in ttft)
+    print(f"[serving] best TTFT speedup over token-by-token: {best:.1f}x")
+    result = dict(
+        platform=jax.default_backend(),
+        prompt_len=ttft[0]["prompt_len"],
+        best_ttft_speedup=best,
+        rows=ttft + bench_hybrid_throughput(smoke=args.smoke),
+    )
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    print(f"[serving] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_sharding.py tests/test_tp_engine.py
 
+# Forced-8-device chunked-prefill TP parity (chunk_step with a mesh + the
+# chunked scheduler); filtered so the single-device chunk tests don't run
+# twice.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_chunked.py -k "tp and not subprocess"
+
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
@@ -33,4 +40,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
     --smoke --tp 2 --out "$SMOKE_DIR/BENCH_engine_tp.json"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kvcache \
     --smoke --out "$SMOKE_DIR/BENCH_kvcache.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving \
+    --smoke --out "$SMOKE_DIR/BENCH_serving.json"
 echo "[ci] benchmark smoke OK"

@@ -33,7 +33,7 @@ import numpy as np
 from repro.core.quantized import (QuantLinearMeta, QuantSegments, TP_ROW,
                                   _PAYLOAD_KEYS, _meta_key)
 
-__all__ = ["QuantTensor", "wrap_tree", "dense_tree"]
+__all__ = ["QuantTensor", "matmul_cols", "wrap_tree", "dense_tree"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -238,6 +238,32 @@ class QuantTensor:
             seg = ops.quant_decode(payload, meta, dtype=jnp.float32)
             w = w.at[jnp.asarray(idx)].set(seg.reshape(len(idx), gs, self.n))
         return w.reshape(self.k, self.n).astype(dtype)
+
+
+def matmul_cols(ws: Sequence["QuantTensor"], x, *, out_dtype=None):
+    """Fused column-group matmul: (x @ w for w in ws) in ONE engine dispatch.
+
+    The q/k/v (or gate/up) projections of a block all contract the same
+    activations; fusing them streams the activation slab once and — on
+    ``xla_decode`` — runs a single [M, K] x [K, sum(N_i)] GEMM instead of one
+    GEMM per weight.  Falls back to per-weight dispatch when the group can't
+    fuse (mixed-bit segments, stacked payloads, TP meshes, or disagreeing
+    backends / K).  Returns a tuple of per-weight outputs."""
+    from repro.kernels import ops
+    ws = tuple(ws)
+    fusable = (len(ws) > 1
+               and all(isinstance(w, QuantTensor) for w in ws)
+               and not any(w.is_mixed or w.lead_shape for w in ws)
+               and all(w.mesh is None or w.tp is None for w in ws)
+               and len({w.backend for w in ws}) == 1
+               and len({w.k for w in ws}) == 1)
+    if not fusable:
+        return tuple(w.matmul(x, out_dtype=out_dtype) for w in ws)
+    out_dtype = out_dtype or ws[0].out_dtype or x.dtype
+    y = ops.quant_matmul_cols(x, [(w.payloads[0], w.metas[0]) for w in ws],
+                              backend=ws[0].backend, out_dtype=out_dtype)
+    splits = np.cumsum([w.n for w in ws])[:-1].tolist()
+    return tuple(jnp.split(y, splits, axis=-1))
 
 
 # ---------------------------------------------------------------------------

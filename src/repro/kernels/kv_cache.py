@@ -5,10 +5,13 @@ KV, hd] per attention layer); a per-slot block table maps logical positions
 to pool blocks (``serving.kvcache`` owns the allocator / table bookkeeping).
 This module owns the two device operations on that layout:
 
-  * ``append``  — write one token's K/V (quantized per cache mode) into each
-    slot's current block at its current offset.
-  * ``gather``  — read a slot's blocks back in logical order and dequantize
-    them into dense [B, S, KV, hd] history for attention.
+  * ``append``       — write one token's K/V (quantized per cache mode) into
+    each slot's current block at its current offset.
+  * ``append_chunk`` — write a whole chunk of T tokens per slot in one call
+    (the chunked-prefill path: whole blocks land per step instead of one
+    token at a time); invalid slab positions are masked out.
+  * ``gather``       — read a slot's blocks back in logical order and
+    dequantize them into dense [B, S, KV, hd] history for attention.
 
 Cache modes (``MODES``):
   * ``paged``     — blocks store the raw compute dtype (paging only).
@@ -39,7 +42,7 @@ from repro.core import companding
 
 __all__ = ["MODES", "KV_MU", "PageLayout", "kv_quantize", "kv_dequantize",
            "register_kv_backend", "kv_backends", "resolve_kv_backend",
-           "pool_init", "append", "gather"]
+           "pool_init", "append", "append_chunk", "gather"]
 
 MODES = ("paged", "paged_q8", "paged_q8c")
 
@@ -164,6 +167,19 @@ class _XlaKV:
         return new
 
     @staticmethod
+    def append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids):
+        # bids/offs [B, T]; masked tokens arrive with bids == num_blocks,
+        # which the drop-mode scatter discards.  prog_bids is the Pallas
+        # backend's per-slot touched-block list — unused here.
+        new = dict(cache)
+        new["kp"] = cache["kp"].at[bids, offs].set(kq, mode="drop")
+        new["vp"] = cache["vp"].at[bids, offs].set(vq, mode="drop")
+        if ks is not None:
+            new["ksc"] = cache["ksc"].at[bids, offs].set(ks, mode="drop")
+            new["vsc"] = cache["vsc"].at[bids, offs].set(vs, mode="drop")
+        return new
+
+    @staticmethod
     def gather(cache, table, mode, out_dtype):
         b, nb = table.shape
         bs = cache["kp"].shape[1]
@@ -194,6 +210,26 @@ def _append_kernel(bids_ref, offs_ref, *refs, quant: bool):
     for new_ref, in_ref, out_ref in zip(news, ins, outs):
         out_ref[...] = in_ref[...]
         out_ref[0, o] = new_ref[0]
+
+
+def _append_chunk_kernel(pbids_ref, bids_ref, offs_ref, *refs, quant: bool,
+                         t: int, nb: int):
+    """Grid (B, NB): read-modify-write pool block prog_bids[b, n], storing
+    every slab token whose target block id matches it.  Masked tokens carry
+    an out-of-pool sentinel bid and match no program."""
+    b = pl.program_id(0)
+    n = pl.program_id(1)
+    mine = pbids_ref[b * nb + n]
+    n_arr = 4 if quant else 2
+    news, ins, outs = refs[:n_arr], refs[n_arr:2 * n_arr], refs[2 * n_arr:]
+    for new_ref, in_ref, out_ref in zip(news, ins, outs):
+        out_ref[...] = in_ref[...]
+    for tok in range(t):
+        @pl.when(bids_ref[b * t + tok] == mine)
+        def _write(_tok=tok):
+            o = offs_ref[b * t + _tok]
+            for new_ref, out_ref in zip(news, outs):
+                out_ref[0, o] = new_ref[0, _tok]
 
 
 def _gather_kernel(tbl_ref, *refs, mode: str, out_dtype):
@@ -250,6 +286,46 @@ class _PallasKV:
         return new
 
     @staticmethod
+    def append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids):
+        quant = ks is not None
+        news = (kq, vq, ks, vs) if quant else (kq, vq)
+        pools = ("kp", "vp", "ksc", "vsc") if quant else ("kp", "vp")
+        ins = tuple(cache[p] for p in pools)
+        b, t = bids.shape
+        nb = prog_bids.shape[1]
+
+        def tok_spec(arr):
+            nd = arr.ndim - 1
+            return pl.BlockSpec((1,) + arr.shape[1:],
+                                lambda i, j, pb, bd, of, _nd=nd:
+                                (i,) + (0,) * _nd)
+
+        def blk_spec(arr):
+            nd = arr.ndim - 1
+            return pl.BlockSpec((1,) + arr.shape[1:],
+                                lambda i, j, pb, bd, of, _nd=nd:
+                                (pb[i * nb + j],) + (0,) * _nd)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, nb),
+            in_specs=[tok_spec(a) for a in news] + [blk_spec(a) for a in ins],
+            out_specs=tuple(blk_spec(a) for a in ins),
+        )
+        aliases = {3 + len(news) + i: i for i in range(len(ins))}
+        outs = pl.pallas_call(
+            functools.partial(_append_chunk_kernel, quant=quant, t=t, nb=nb),
+            grid_spec=grid_spec,
+            out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ins),
+            input_output_aliases=aliases,
+            interpret=not _on_tpu(),
+        )(prog_bids.reshape(-1), bids.reshape(-1), offs.reshape(-1), *news,
+          *ins)
+        new = dict(cache)
+        new.update(dict(zip(pools, outs)))
+        return new
+
+    @staticmethod
     def gather(cache, table, mode, out_dtype):
         b, nb = table.shape
         bs, kv, hd = cache["kp"].shape[1:]
@@ -298,6 +374,32 @@ def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
     kq, ks = kv_quantize(k_new, mode)
     vq, vs = kv_quantize(v_new, mode)
     return be.append(cache, kq, vq, ks, vs, bids, offs)
+
+
+def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
+                 valid, prog_bids, *, mode: str,
+                 backend: Optional[str] = None) -> Dict[str, jax.Array]:
+    """Write up to T tokens per slot in one call (chunked prefill).
+
+    k_new/v_new [B, T, KV, hd]; bids/offs [B, T] int32 target block id /
+    in-block offset per slab token; valid [B, T] bool masks pad positions
+    (their writes are dropped).  ``prog_bids`` [B, NB] int32 lists the pool
+    blocks each slot's chunk touches (entries must be distinct per slot or
+    the scratch block 0) — the Pallas backend runs one grid program per
+    (slot, touched block); the XLA backend scatters directly and ignores it.
+    Returns the new cache."""
+    be = _KV_BACKENDS[resolve_kv_backend(backend)]
+    num_blocks = cache["kp"].shape[0]
+    bids = jnp.where(valid, bids, num_blocks).astype(jnp.int32)
+    offs = offs.astype(jnp.int32)
+    if mode == "paged":
+        store = cache["kp"].dtype
+        return be.append_chunk(cache, k_new.astype(store),
+                               v_new.astype(store), None, None, bids, offs,
+                               prog_bids)
+    kq, ks = kv_quantize(k_new, mode)
+    vq, vs = kv_quantize(v_new, mode)
+    return be.append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids)
 
 
 def gather(cache: Dict[str, jax.Array], table, *, mode: str,

@@ -34,8 +34,9 @@ from repro.kernels.glvq_matmul import glvq_matmul_pallas
 
 __all__ = ["glvq_matmul", "babai_quantize", "pick_n_block",
            "register_matmul_backend", "matmul_backends", "resolve_backend",
-           "quant_matmul", "quant_matmul_segments", "quant_decode",
-           "tp_shardable", "quant_matmul_tp", "quant_matmul_segments_tp"]
+           "quant_matmul", "quant_matmul_segments", "quant_matmul_cols",
+           "quant_decode", "tp_shardable", "quant_matmul_tp",
+           "quant_matmul_segments_tp"]
 
 
 def _on_tpu() -> bool:
@@ -196,6 +197,32 @@ def quant_matmul_segments(x, segments: Sequence, group_size: int, n: int, *,
         ys = _MATMUL_BACKENDS[name](xs, payload, meta)
         y = ys if y is None else y + ys
     return y.reshape(batch + (n,)).astype(out_dtype)
+
+
+def quant_matmul_cols(x, parts: Sequence, *, backend: Optional[str] = None,
+                      out_dtype=None):
+    """Column-fused multi-weight matmul: y = x @ [W_0 | W_1 | ...].
+
+    ``parts`` is a sequence of ``(payload, meta)`` sharing the same K — the
+    q/k/v (or gate/up) projections of one block, which all contract the same
+    activations.  The activation slab is reshaped and streamed ONCE for the
+    whole group; on ``xla_decode`` the decoded weights concatenate into a
+    single [K, sum(N_i)] GEMM so the M-blocking amortizes across every
+    projection instead of re-running per weight.  Returns y [..., sum(N_i)].
+    """
+    name = resolve_backend(backend)
+    out_dtype = out_dtype or x.dtype
+    batch = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if name == "xla_decode":
+        from repro.core import quantized
+        w = jnp.concatenate([quantized.decode_xla(p, m).astype(x2.dtype)
+                             for p, m in parts], axis=1)
+        y = x2 @ w
+    else:
+        y = jnp.concatenate([_MATMUL_BACKENDS[name](x2, p, m)
+                             for p, m in parts], axis=1)
+    return y.reshape(batch + (y.shape[-1],)).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------

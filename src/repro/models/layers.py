@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import qtensor
 from repro.core.qtensor import QuantTensor
 from repro.kernels import kv_cache
 
@@ -44,6 +45,19 @@ def linear(x, w, dtype=None):
     if isinstance(w, QuantTensor):
         return w.matmul(x, out_dtype=dt)
     return x @ w.astype(dt)
+
+
+def linear_cols(x, ws, dtype=None):
+    """(x @ w for w in ws) for weights sharing the same input activations.
+
+    Quantized weights fuse into ONE engine dispatch (``qtensor.matmul_cols``):
+    the q/k/v projections of a block stop streaming the activation slab three
+    times.  Dense (or unfusable) weights fall back to per-weight ``linear``.
+    """
+    dt = dtype or x.dtype
+    if all(isinstance(w, QuantTensor) for w in ws):
+        return qtensor.matmul_cols(ws, x, out_dtype=dt)
+    return tuple(linear(x, w, dt) for w in ws)
 
 
 def expert_linear(xb, w, dtype=None):
@@ -131,11 +145,17 @@ def attn_init(key, cfg: ModelConfig) -> Params:
 def _qkv(p, x, cfg: ModelConfig, pos, *, cross_kv=None):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
-    src = cross_kv if cross_kv is not None else x
-    sk = src.shape[1]
-    k = linear(src, p["wk"], x.dtype).reshape(b, sk, cfg.n_kv_heads, hd)
-    v = linear(src, p["wv"], x.dtype).reshape(b, sk, cfg.n_kv_heads, hd)
+    if cross_kv is None:
+        q, k, v = linear_cols(x, (p["wq"], p["wk"], p["wv"]), x.dtype)
+        sk = s
+    else:
+        q = linear(x, p["wq"])
+        src = cross_kv
+        sk = src.shape[1]
+        k, v = linear_cols(src, (p["wk"], p["wv"]), x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, sk, cfg.n_kv_heads, hd)
+    v = v.reshape(b, sk, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -224,72 +244,107 @@ def local_attention(p, x, cfg: ModelConfig, pos):
     return linear(out, p["wo"], x.dtype)
 
 
-def _decode_qkv(p, x, cfg: ModelConfig, pos):
-    """Shared one-token q/k/v projection + qk-norm + RoPE for decode paths.
-    x [B, 1, D]; pos [B] (or scalar) absolute position."""
-    b = x.shape[0]
-    hd = cfg.hd
-    q = linear(x, p["wq"]).reshape(b, 1, cfg.n_heads, hd)
-    k = linear(x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
-    v = linear(x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
-        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    pos_b = pos[:, None] if pos.ndim else jnp.broadcast_to(pos[None, None], (b, 1))
-    if cfg.rope_kind == "default":
-        q = apply_rope(q, pos_b, cfg.rope_theta)
-        k = apply_rope(k, pos_b, cfg.rope_theta)
-    elif cfg.rope_kind == "mrope":
-        pos3 = jnp.broadcast_to(pos_b[None], (3, b, 1))
-        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
-        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
-    return q, k, v
+def _chunk_qkv(p, x, cfg: ModelConfig, pos):
+    """q/k/v projection + qk-norm + RoPE for the serving step.
+    x [B, T, D]; pos [B] first absolute position per slot (token t of slot b
+    sits at pos[b] + t).  T=1 is single-token decode."""
+    b, t, _ = x.shape
+    pos2 = pos[:, None] + jnp.arange(t)[None]                 # [B, T]
+    if cfg.rope_kind == "mrope":
+        return _qkv(p, x, cfg, jnp.broadcast_to(pos2[None], (3, b, t)))
+    return _qkv(p, x, cfg, pos2)
 
 
 def _decode_attend(q, ck, cv, valid, cfg: ModelConfig):
-    """Masked single-query attention over gathered history.
-    q [B,1,H,hd]; ck/cv [B,S,KV,hd]; valid [B,S] bool -> out [B,1,H*hd]."""
-    b = q.shape[0]
+    """Masked attention over gathered history.
+    q [B,Sq,H,hd]; ck/cv [B,Sk,KV,hd]; valid [B,Sk] (shared by all queries)
+    or [B,Sq,Sk] (per-query) bool -> out [B,Sq,H*hd]."""
+    b, sq = q.shape[:2]
     hd = cfg.hd
     n_rep = cfg.n_heads // cfg.n_kv_heads
     scores = jnp.einsum("bsgrd,btgd->bgrst",
-                        q.reshape(b, 1, cfg.n_kv_heads, n_rep, hd),
+                        q.reshape(b, sq, cfg.n_kv_heads, n_rep, hd),
                         ck).astype(jnp.float32) * (hd ** -0.5)
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    vm = valid[:, None, None, :, :] if valid.ndim == 3 \
+        else valid[:, None, None, None, :]
+    scores = jnp.where(vm, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
-    return jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, 1, -1)
+    return jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, sq, -1)
+
+
+def _ring_positions(last, size: int, modulus: int):
+    """Absolute position stored at each ring index after the newest write
+    landed at position ``last`` (ring slot = pos % modulus).  Entries that
+    were never written (stored position would be negative, or index >=
+    modulus) come back negative."""
+    idx = jnp.arange(size)[None, :]
+    stored = last[:, None] - (last[:, None] - idx) % modulus
+    return jnp.where(idx < modulus, stored, -1)
+
+
+def _window_chunk_masks(pos, apos, t: int, size: int, window: int):
+    """Key-validity masks for a chunked sliding-window step.
+
+    The ring is read BEFORE the chunk's writes land (a chunk overwrites ring
+    slots that its own earlier queries still need — the token-by-token
+    oracle saw those keys), so attention runs over [pre-append ring ++
+    in-flight chunk keys].  Returns (hist [B,T,size], intra [1,T,T])."""
+    aq = apos[:, :, None]                                     # [B, T, 1]
+    stored = _ring_positions(pos - 1, size, window)[:, None, :]
+    hist = (stored >= 0) & (stored <= aq) & (stored > aq - window)
+    intra = (jnp.arange(t)[None, None, :] <= jnp.arange(t)[None, :, None])
+    return hist, intra
+
+
+def attention_chunk(p, x, cfg: ModelConfig, cache, pos, lens, *,
+                    window: int = 0):
+    """Variable-width serving step against the dense cache.
+
+    x [B, T, D] token slab; pos [B] first absolute position per slot; lens
+    [B] number of valid slab tokens (0 = idle slot; tokens t >= lens[b] are
+    pad whose K/V writes are dropped and whose outputs are garbage the
+    caller masks).  T=1 with lens=1 is exactly single-token decode.  Window
+    > 0 writes ring-style; T must not exceed the ring length (earlier chunk
+    keys would be overwritten before this step's attention reads them)."""
+    b, t, _ = x.shape
+    q, k, v = _chunk_qkv(p, x, cfg, pos)
+    s_cache = cache["k"].shape[1]
+    if window and t > window:
+        raise ValueError(
+            f"chunk of {t} tokens exceeds the sliding-window ring length "
+            f"{window}; clamp chunk_size to the smallest local window")
+    tt = jnp.arange(t)[None]                                  # [1, T]
+    apos = pos[:, None] + tt                                  # [B, T]
+    valid_q = tt < lens[:, None]
+    idx = (apos % window) if window else apos
+    idx = jnp.where(valid_q, idx, s_cache)    # OOB -> dropped by the scatter
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, t))
+    ck = cache["k"].at[bi, idx].set(k, mode="drop")
+    cv = cache["v"].at[bi, idx].set(v, mode="drop")
+    aq = apos[:, :, None]                                     # [B, T, 1]
+    if window:
+        # the chunk's ring writes overwrite slots its own earlier queries
+        # still need: attend over [pre-append ring ++ in-flight chunk keys]
+        hist, intra = _window_chunk_masks(pos, apos, t, s_cache, window)
+        kk = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], 1)
+        vv = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], 1)
+        valid = jnp.concatenate(
+            [hist, jnp.broadcast_to(intra, (b, t, t))], axis=-1)
+        out = _decode_attend(q, kk, vv, valid, cfg)
+    else:
+        valid = jnp.arange(s_cache)[None, None, :] <= aq
+        out = _decode_attend(q, ck, cv, valid, cfg)
+    return linear(out, p["wo"], x.dtype), dict(k=ck, v=cv)
 
 
 def attention_decode(p, x, cfg: ModelConfig, cache, pos, *, window: int = 0):
-    """One-token decode. x [B, 1, D]; cache dict(k, v) [B, S_cache, KV, hd];
-    pos [B] current absolute position. Window > 0 => ring buffer cache."""
-    q, k, v = _decode_qkv(p, x, cfg, pos)
-    s_cache = cache["k"].shape[1]
-    if pos.ndim == 0:
-        # uniform decode position: one in-place dynamic_update_slice on the
-        # whole batch (avoids the per-row scatter the vmapped form lowers to)
-        slot = (pos % window) if window else pos
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-        idx = jnp.arange(s_cache)[None, :]
-        if window:
-            valid = jnp.broadcast_to(idx < jnp.minimum(pos + 1, s_cache),
-                                     (k.shape[0], s_cache))
-        else:
-            valid = jnp.broadcast_to(idx <= pos, (k.shape[0], s_cache))
-    else:
-        slot = (pos % window) if window else pos
-        ck = jax.vmap(lambda c, i, u: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-            cache["k"], slot, k)
-        cv = jax.vmap(lambda c, i, u: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
-            cache["v"], slot, v)
-        idx = jnp.arange(s_cache)[None, :]
-        if window:
-            valid = idx < jnp.minimum(pos + 1, s_cache)[:, None]
-        else:
-            valid = idx <= pos[:, None]
-    out = _decode_attend(q, ck, cv, valid, cfg)
-    return linear(out, p["wo"], x.dtype), dict(k=ck, v=cv)
+    """One-token decode — the T=1 specialization of ``attention_chunk``.
+    x [B, 1, D]; cache dict(k, v) [B, S_cache, KV, hd]; pos [B] (or scalar)
+    current absolute position. Window > 0 => ring buffer cache."""
+    b = x.shape[0]
+    pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
+    return attention_chunk(p, x, cfg, cache, pos_v,
+                           jnp.ones((b,), jnp.int32), window=window)
 
 
 def attn_cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype):
@@ -303,43 +358,120 @@ def attn_cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype):
 # paged attention cache (block pools + shared table; see serving.kvcache)
 # ---------------------------------------------------------------------------
 
+def static_local_table(batch: int, blocks_per_slot: int) -> jnp.ndarray:
+    """Contiguous per-slot block ownership for a layer-private ring pool:
+    slot b owns blocks [1 + b*bps, 1 + (b+1)*bps) of its own pool."""
+    base = 1 + blocks_per_slot * jnp.arange(batch)[:, None]
+    return (base + jnp.arange(blocks_per_slot)[None]).astype(jnp.int32)
+
+
 def paged_attn_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
-                          dtype, kind: str):
-    """Per-layer block pools for the paged cache modes.  All attention layers
-    (global and sliding-window) share one block geometry so the per-slot
-    table in ``cache["table"]`` indexes every layer's pool uniformly."""
+                          dtype, kind: str, *, batch: int = 0,
+                          s_cache: int = 0, local: bool = False):
+    """Per-layer block pools for the paged cache modes.
+
+    Global attention layers share the scheduler-managed block geometry (the
+    per-slot table in ``cache["table"]`` indexes their pools uniformly).
+    Sliding-window layers (``local=True``) only ever touch a ring of
+    ``min(window, s_cache)`` positions, so their pools shrink to
+    ``ceil(ring / block_size)`` statically-owned blocks per slot (plus
+    scratch block 0) with a baked-in table ``lt`` — HBM tracks the window,
+    not the global worst-case depth."""
+    if local and cfg.window and batch:
+        ring = min(cfg.window, s_cache) if s_cache else cfg.window
+        nb_l = -(-ring // block_size)
+        pools = kv_cache.pool_init(1 + batch * nb_l, block_size,
+                                   cfg.n_kv_heads, cfg.hd, dtype, kind)
+        pools["lt"] = static_local_table(batch, nb_l)
+        return pools
     return kv_cache.pool_init(num_blocks, block_size, cfg.n_kv_heads, cfg.hd,
                               dtype, kind)
+
+
+def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
+                          window: int = 0, kind: str = "paged",
+                          kv_backend=None):
+    """Variable-width serving step against the paged cache.
+
+    cache holds this layer's pools (``kp``/``vp`` + scales); table [B, nb]
+    maps the slot's logical blocks to pool blocks.  All of a slot's chunk
+    writes land in one ``append_chunk`` kernel call — whole blocks per step
+    instead of one token at a time.  Window > 0 writes ring-style at
+    ``pos % window``, touching only the slot's first ceil(window/bs) table
+    entries, exactly mirroring the dense ring buffer (T <= window)."""
+    b, t, _ = x.shape
+    q, k, v = _chunk_qkv(p, x, cfg, pos)
+    bs = cache["kp"].shape[1]
+    if window and t > window:
+        raise ValueError(
+            f"chunk of {t} tokens exceeds the sliding-window ring length "
+            f"{window}; clamp chunk_size to the smallest local window")
+    tt = jnp.arange(t)[None]
+    apos = pos[:, None] + tt                                  # [B, T]
+    valid_q = tt < lens[:, None]
+    p_eff = (apos % window) if window else apos
+    nb_l = -(-window // bs) if window else table.shape[1]
+    j = jnp.clip(p_eff // bs, 0, nb_l - 1)                    # [B, T]
+    bids = jnp.take_along_axis(table, j, axis=1)
+    # the (<= NBT) distinct pool blocks a slot's chunk touches: a cyclic walk
+    # of consecutive logical blocks from the first token's block (positions
+    # are consecutive, so touched blocks are too); out-of-range entries fall
+    # back to scratch 0 so the Pallas grid never double-visits a live block
+    nbt = min((t + bs - 2) // bs + 1, nb_l)
+    pj_raw = j[:, :1] + jnp.arange(nbt)[None]                 # [B, NBT]
+    pj = (pj_raw % nb_l) if window else jnp.minimum(pj_raw, nb_l - 1)
+    prog_bids = jnp.take_along_axis(table, pj, axis=1)
+    if not window:
+        prog_bids = jnp.where(pj_raw < nb_l, prog_bids, 0)
+    aq = apos[:, :, None]                                     # [B, T, 1]
+    if window:
+        # read the ring BEFORE this chunk's writes land (they overwrite
+        # slots earlier queries still need), then attend over [pre-append
+        # history ++ in-flight chunk keys] — the chunk keys roundtrip the
+        # cache codec so intra-chunk reads match what a gather would return
+        ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
+                                 backend=kv_backend, out_dtype=x.dtype)
+        if kind == "paged":
+            store = cache["kp"].dtype
+            k_rt = k.astype(store).astype(x.dtype)
+            v_rt = v.astype(store).astype(x.dtype)
+        else:
+            k_rt = kv_cache.kv_dequantize(*kv_cache.kv_quantize(k, kind),
+                                          kind, x.dtype)
+            v_rt = kv_cache.kv_dequantize(*kv_cache.kv_quantize(v, kind),
+                                          kind, x.dtype)
+        cache = kv_cache.append_chunk(cache, k, v, bids,
+                                      (p_eff % bs).astype(jnp.int32),
+                                      valid_q, prog_bids,
+                                      mode=kind, backend=kv_backend)
+        hist, intra = _window_chunk_masks(pos, apos, t, nb_l * bs, window)
+        kk = jnp.concatenate([ck, k_rt], axis=1)
+        vv = jnp.concatenate([cv, v_rt], axis=1)
+        valid = jnp.concatenate(
+            [hist, jnp.broadcast_to(intra, (b, t, t))], axis=-1)
+        out = _decode_attend(q, kk, vv, valid, cfg)
+    else:
+        cache = kv_cache.append_chunk(cache, k, v, bids,
+                                      (p_eff % bs).astype(jnp.int32),
+                                      valid_q, prog_bids,
+                                      mode=kind, backend=kv_backend)
+        ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
+                                 backend=kv_backend, out_dtype=x.dtype)
+        valid = jnp.arange(nb_l * bs)[None, None, :] <= aq
+        out = _decode_attend(q, ck, cv, valid, cfg)
+    return linear(out, p["wo"], x.dtype), cache
 
 
 def paged_attention_decode(p, x, cfg: ModelConfig, cache, table, pos, *,
                            window: int = 0, kind: str = "paged",
                            kv_backend=None):
-    """One-token decode against the paged cache.  cache holds this layer's
-    pools (``kp``/``vp`` + scales); table [B, blocks_per_slot] maps the
-    slot's logical blocks to pool blocks.  Window > 0 writes ring-style at
-    ``pos % window`` — touching only the slot's first ceil(window/bs) table
-    entries — exactly mirroring the dense ring buffer."""
+    """One-token decode — the T=1 specialization of
+    ``paged_attention_chunk``."""
     b = x.shape[0]
-    q, k, v = _decode_qkv(p, x, cfg, pos)
-    bs = cache["kp"].shape[1]
     pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
-    p_eff = (pos_v % window) if window else pos_v
-    j = p_eff // bs
-    bids = jnp.take_along_axis(table, j[:, None], axis=1)[:, 0]
-    cache = kv_cache.append(cache, k[:, 0], v[:, 0], bids,
-                            (p_eff % bs).astype(jnp.int32),
-                            mode=kind, backend=kv_backend)
-    nb_l = -(-window // bs) if window else table.shape[1]
-    ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
-                             backend=kv_backend, out_dtype=x.dtype)
-    idx = jnp.arange(nb_l * bs)[None, :]
-    if window:
-        valid = idx < jnp.minimum(pos_v + 1, window)[:, None]
-    else:
-        valid = idx <= pos_v[:, None]
-    out = _decode_attend(q, ck, cv, valid, cfg)
-    return linear(out, p["wo"], x.dtype), cache
+    return paged_attention_chunk(p, x, cfg, cache, table, pos_v,
+                                 jnp.ones((b,), jnp.int32), window=window,
+                                 kind=kind, kv_backend=kv_backend)
 
 
 # ---------------------------------------------------------------------------

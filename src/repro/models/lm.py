@@ -68,8 +68,12 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int,
                      num_blocks: int = 0):
     if kind in ("attn", "attn_local", "attn_moe"):
         if cache_kind != "dense":
-            return layers.paged_attn_cache_init(cfg, num_blocks, block_size,
-                                                dtype, cache_kind)
+            # sliding-window layers get a layer-private ring pool sized to
+            # ceil(min(window, s_cache)/block_size) blocks per slot (plus a
+            # baked-in table "lt") instead of the global pool depth
+            return layers.paged_attn_cache_init(
+                cfg, num_blocks, block_size, dtype, cache_kind, batch=batch,
+                s_cache=s_cache, local=(kind == "attn_local"))
         if kind == "attn_local":
             return layers.attn_cache_init(cfg, batch,
                                           min(cfg.window, s_cache), dtype)
@@ -81,27 +85,33 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int,
     raise ValueError(kind)
 
 
-def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, *,
-                 pages=None):
-    """``pages`` is None for the dense cache, else a dict with the shared
-    block ``table`` [B, blocks_per_slot] plus static ``kind``/``backend``
-    routing the attention layers through the paged KV kernels."""
+def block_chunk(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, lens,
+                valid, *, pages=None):
+    """Variable-width serving step for one block.  x [B, T, D]; pos [B] first
+    absolute position; lens [B] valid slab tokens per slot; valid [B, T] the
+    matching mask.  ``pages`` is None for the dense cache, else a dict with
+    the shared block ``table`` [B, blocks_per_slot] plus static ``kind`` /
+    ``backend`` routing the attention layers through the paged KV kernels
+    (sliding-window layers use their layer-private ``cache["lt"]`` ring
+    table instead of the shared one)."""
     if kind in ("attn", "attn_local", "attn_moe"):
         h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
         if pages is not None:
-            table = pages["table"]
             # ring length must match the dense oracle's min(window, s_cache);
             # the block-rounded capacity only bounds it when s_cache is unknown
-            cap = pages["s_cache"] or table.shape[1] * cache["kp"].shape[1]
+            cap = pages["s_cache"] or \
+                pages["table"].shape[1] * cache["kp"].shape[1]
             win = min(cfg.window, cap) if kind == "attn_local" else 0
-            out, cache = layers.paged_attention_decode(
-                p["attn"], h, cfg, cache, table, pos, window=win,
+            table = cache["lt"] if kind == "attn_local" and "lt" in cache \
+                else pages["table"]
+            out, cache = layers.paged_attention_chunk(
+                p["attn"], h, cfg, cache, table, pos, lens, window=win,
                 kind=pages["kind"], kv_backend=pages["backend"])
         else:
             win = min(cfg.window, cache["k"].shape[1]) \
                 if kind == "attn_local" else 0
-            out, cache = layers.attention_decode(p["attn"], h, cfg, cache,
-                                                 pos, window=win)
+            out, cache = layers.attention_chunk(p["attn"], h, cfg, cache,
+                                                pos, lens, window=win)
         x = x + out
         if kind == "attn_moe":
             h = rms_norm(x, p["moe"]["ln"], cfg.norm_eps)
@@ -109,14 +119,24 @@ def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, *,
         h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
         return x + layers.mlp(p["mlp"], h, cfg), cache
     if kind == "rglru":
-        out, cache = rglru.rglru_decode(p["rec"], x, cfg, cache)
+        out, cache = rglru.rglru_chunk(p["rec"], x, cfg, cache, valid)
         x = x + out
         h = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
         return x + layers.mlp(p["mlp"], h, cfg), cache
     if kind == "mamba":
-        out, cache = ssm.mamba_decode(p["m"], x, cfg, cache)
+        out, cache = ssm.mamba_chunk(p["m"], x, cfg, cache, valid)
         return x + out, cache
     raise ValueError(kind)
+
+
+def block_decode(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, *,
+                 pages=None):
+    """One-token decode — the T=1 specialization of ``block_chunk``."""
+    b = x.shape[0]
+    pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
+    return block_chunk(p, x, cfg, kind, cache, pos_v,
+                       jnp.ones((b,), jnp.int32),
+                       jnp.ones((b, 1), jnp.bool_), pages=pages)
 
 
 # ---------------------------------------------------------------------------
@@ -280,31 +300,40 @@ def reset_slot(cache: Params, cfg: ModelConfig, slot) -> Params:
     return dict(cache, blocks=new_blocks, tail=new_tail)
 
 
-def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
-                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
-                backend=None, cache_kind: str = "dense", kv_backend=None,
-                s_cache: Optional[int] = None, mesh=None):
-    """One-token decode. token [B] int32, pos [B] int32 -> (logits [B, V], cache).
+def chunk_step(params: Params, cache: Params, tokens, pos, lens,
+               cfg: ModelConfig, *, dtype=jnp.bfloat16, qmeta=None,
+               unroll: int = 1, backend=None, cache_kind: str = "dense",
+               kv_backend=None, s_cache: Optional[int] = None, mesh=None):
+    """One variable-width serving step: the unified prefill/decode program.
 
-    With ``qmeta``, every matmul against a quantized weight dispatches through
-    ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
-    the dense weight never materializes on the fused backend.  With a paged
-    ``cache_kind``, attention history reads/writes dispatch through the
-    ``kernels.kv_cache`` backend registry instead of dense buffers.  With
-    ``mesh``, quantized matmuls run tensor-parallel (shard_map) per shard."""
+    tokens [B, T] int32 token slab; pos [B] int32 first absolute position
+    per slot; lens [B] int32 valid slab tokens per slot (0 = idle slot; a
+    prefill slot consumes up to T prompt tokens, a decode slot exactly 1 —
+    T=1 IS single-token decode, same code path).  Returns (logits [B, V]
+    taken at each slot's LAST valid token, new cache).
+
+    The backbone runs ONCE over the whole chunk, so every quantized matmul
+    executes at M = B*T — the fused ``glvq_matmul`` M-blocking finally pays
+    off during prefill — and paged attention layers write whole KV blocks
+    per call via ``kv_cache.append_chunk``.  Pad positions (t >= lens[b])
+    are masked everywhere that matters: their KV writes are dropped, their
+    recurrent state updates are skipped, and their logits never selected."""
     if qmeta:
         params = _quantized_view(params, qmeta, backend, mesh)
     pages = None
     if cache_kind != "dense":
         pages = dict(table=cache["table"], kind=cache_kind,
                      backend=kv_backend, s_cache=s_cache)
-    x = params["embed"].astype(dtype)[token][:, None, :]    # [B,1,D]
+    b, t = tokens.shape
+    valid = jnp.arange(t)[None] < lens[:, None]
+    x = params["embed"].astype(dtype)[tokens]               # [B,T,D]
 
     def body(x, inp):
         unit_params, unit_cache = inp
         new_caches = []
         for kind, p, c in zip(cfg.scan_unit, unit_params, unit_cache):
-            x, nc = block_decode(p, x, cfg, kind, c, pos, pages=pages)
+            x, nc = block_chunk(p, x, cfg, kind, c, pos, lens, valid,
+                                pages=pages)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -312,12 +341,37 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                                  unroll=unroll)
     new_tail = []
     for kind, p, c in zip(cfg.scan_tail, params["tail"], cache["tail"]):
-        x, nc = block_decode(p, x, cfg, kind, c, pos, pages=pages)
+        x, nc = block_chunk(p, x, cfg, kind, c, pos, lens, valid,
+                            pages=pages)
         new_tail.append(nc)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    last = jnp.maximum(lens - 1, 0)                         # [B]
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]  # [B,D]
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = (x[:, 0] @ head.astype(dtype)).astype(jnp.float32)
+    logits = (xl @ head.astype(dtype)).astype(jnp.float32)
     new_cache = dict(blocks=new_blocks, tail=new_tail)
     if pages is not None:
         new_cache["table"] = cache["table"]
     return logits, new_cache
+
+
+def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
+                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
+                backend=None, cache_kind: str = "dense", kv_backend=None,
+                s_cache: Optional[int] = None, mesh=None):
+    """One-token decode — the T=1 specialization of ``chunk_step``.
+    token [B] int32, pos [B] (or scalar) int32 -> (logits [B, V], cache).
+
+    With ``qmeta``, every matmul against a quantized weight dispatches through
+    ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
+    the dense weight never materializes on the fused backend.  With a paged
+    ``cache_kind``, attention history reads/writes dispatch through the
+    ``kernels.kv_cache`` backend registry instead of dense buffers.  With
+    ``mesh``, quantized matmuls run tensor-parallel (shard_map) per shard."""
+    b = token.shape[0]
+    pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
+    return chunk_step(params, cache, token[:, None], pos_v,
+                      jnp.ones((b,), jnp.int32), cfg, dtype=dtype,
+                      qmeta=qmeta, unroll=unroll, backend=backend,
+                      cache_kind=cache_kind, kv_backend=kv_backend,
+                      s_cache=s_cache, mesh=mesh)

@@ -70,6 +70,18 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, **kw):
     return lm.decode_step(params, cache, token, pos, cfg, **kw)
 
 
+def chunk_step(params, cache, tokens, pos, lens, cfg: ModelConfig, **kw):
+    """One variable-width serving step (unified prefill/decode): tokens
+    [B, T] slab + per-slot first positions / valid lengths -> (logits [B, V]
+    at each slot's last valid token, cache).  T=1 is single-token decode —
+    the same compiled program family as ``decode_step``."""
+    if is_encdec(cfg):
+        raise ValueError(f"{cfg.arch}: the encoder-decoder family has no "
+                         "chunked serving step (its decoder contexts are "
+                         "short; drive it token-by-token via decode_step)")
+    return lm.chunk_step(params, cache, tokens, pos, lens, cfg, **kw)
+
+
 def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16,
                *, cache_kind: str = "dense", block_size: int = 16,
                num_blocks: Optional[int] = None):

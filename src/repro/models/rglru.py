@@ -82,15 +82,41 @@ def rglru_cache_init(cfg: ModelConfig, batch: int, dtype):
     )
 
 
-def rglru_decode(p, x, cfg: ModelConfig, cache):
-    """One-step decode. x [B,1,D]."""
+def rglru_chunk(p, x, cfg: ModelConfig, cache, valid):
+    """Chunked serving step: all four projections (wg/wx/wr/wi) run once
+    over the whole [B, T] slab; only the elementwise h_t = a_t h_{t-1} + b_t
+    recurrence scans over T, in the same sequential order as one-step decode
+    (bit-parity with the token-by-token oracle — an associative scan would
+    re-associate the f32 products).  valid [B, T] masks pad positions: their
+    conv inputs and state updates are skipped."""
+    from repro.models.ssm import _chunk_conv, advance_conv_cache
+    bsz, t, _ = x.shape
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    gate = jax.nn.gelu(linear(h, p["wg"], x.dtype))[:, 0]
-    u = linear(h, p["wx"], x.dtype)[:, 0]                 # [B,R]
-    conv_in = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
-    w = p["conv"].astype(x.dtype)
-    v = jnp.sum(conv_in * w[None], axis=1) + p["conv_bias"][None].astype(x.dtype)
-    a, b = _gates(p, v)                                   # [B,R]
-    state = a * cache["state"] + b
-    y = linear(state.astype(x.dtype) * gate, p["wo"], x.dtype)
-    return y[:, None], dict(conv=conv_in[:, 1:], state=state)
+    gate = jax.nn.gelu(linear(h, p["wg"], x.dtype))       # [B,T,R]
+    u = linear(h, p["wx"], x.dtype)                       # [B,T,R]
+    timeline = jnp.concatenate([cache["conv"], u], axis=1)
+    v = _chunk_conv(timeline, p["conv"].astype(x.dtype),
+                    p["conv_bias"].astype(x.dtype), t)
+    a, b = _gates(p, v)                                   # [B,T,R] f32
+    a = jnp.where(valid[..., None], a, 1.0)               # pad: a=1, b=0
+    b = jnp.where(valid[..., None], b, 0.0)
+
+    def step(state, inp):
+        a_t, b_t = inp
+        state = a_t * state + b_t
+        return state, state
+
+    state, hseq = jax.lax.scan(step, cache["state"],
+                               (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    hseq = hseq.transpose(1, 0, 2)                        # [B,T,R]
+    y = linear(hseq.astype(x.dtype) * gate, p["wo"], x.dtype)
+    lens = jnp.sum(valid.astype(jnp.int32), axis=1)
+    return y, dict(conv=advance_conv_cache(timeline, lens, cfg.conv_width),
+                   state=state)
+
+
+def rglru_decode(p, x, cfg: ModelConfig, cache):
+    """One-step decode — the T=1 specialization of ``rglru_chunk``.
+    x [B,1,D]."""
+    return rglru_chunk(p, x, cfg, cache,
+                       jnp.ones((x.shape[0], 1), jnp.bool_))

@@ -144,29 +144,74 @@ def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
     )
 
 
-def mamba_decode(p, x, cfg: ModelConfig, cache):
-    """One-token decode: O(1) in context length. x [B,1,D]."""
-    bsz = x.shape[0]
+def _chunk_conv(timeline, w, bias, t: int):
+    """Causal depthwise conv over a [B, W-1+T, C] timeline (conv cache ++
+    slab): token tau's window is timeline[tau : tau+W]."""
+    width = w.shape[0]
+    out = sum(timeline[:, i:i + t] * w[i][None, None, :] for i in range(width))
+    return out + bias[None, None, :]
+
+
+def advance_conv_cache(timeline, lens, width: int):
+    """New conv cache = last (width-1) VALID timeline entries per slot.
+
+    timeline [B, width-1+T, C] is (old cache ++ slab inputs); a slot that
+    consumed ``lens[b]`` tokens advances its window to timeline rows
+    [lens[b], lens[b]+width-1) — slots with lens=0 keep their cache."""
+    idx = lens[:, None] + jnp.arange(width - 1)[None]          # [B, W-1]
+    return jnp.take_along_axis(timeline, idx[..., None], axis=1)
+
+
+def mamba_chunk(p, x, cfg: ModelConfig, cache, valid):
+    """Chunked serving step: projections run once over the whole [B, T] slab
+    (matmuls at M = B*T — where the fused GLVQ kernels pay off) and only the
+    elementwise state recurrence scans over T.  valid [B, T] masks pad slab
+    positions: their conv inputs and state contributions are skipped, so the
+    result matches token-by-token decode exactly.  T=1 is plain decode."""
+    bsz, t, _ = x.shape
     d_in, nh, ns = ssm_dims(cfg)
     h = rms_norm(x, p["ln"], cfg.norm_eps)
-    zxbcdt = linear(h, p["in_proj"], x.dtype)[:, 0]
+    zxbcdt = linear(h, p["in_proj"], x.dtype)                  # [B, T, ...]
     z, xs, b, c, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
-    xbc_new = jnp.concatenate([xs, b, c], axis=-1)             # [B, C]
-    conv_in = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    xbc_new = jnp.concatenate([xs, b, c], axis=-1)             # [B, T, C]
+    timeline = jnp.concatenate([cache["conv"], xbc_new], axis=1)
     w = p["conv"].astype(x.dtype)
-    xbc = jnp.sum(conv_in * w[None], axis=1) + p["conv_bias"][None].astype(x.dtype)
+    xbc = _chunk_conv(timeline, w, p["conv_bias"].astype(x.dtype), t)
     xbc = jax.nn.silu(xbc)
     xs, b, c = jnp.split(xbc, [d_in, d_in + ns], axis=-1)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])  # [B,H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
     a = -jnp.exp(p["a_log"])
-    da = jnp.exp(dt * a[None])                                 # [B,H]
-    xh = xs.reshape(bsz, nh, cfg.ssm_headdim).astype(jnp.float32)
-    state = cache["state"] * da[..., None, None] + \
-        (dt[..., None] * xh)[..., None] * b[:, None, None, :].astype(jnp.float32)
-    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
-    y = y.astype(x.dtype) + xh.astype(x.dtype) * p["d_skip"][None, :, None].astype(x.dtype)
-    y = y.reshape(bsz, 1, d_in)
-    y = rms_norm(y * jax.nn.silu(z[:, None]), p["out_norm"], cfg.norm_eps)
-    new_cache = dict(conv=conv_in[:, 1:], state=state)
+    da = jnp.exp(dt * a[None, None])                           # [B, T, H]
+    xh = xs.reshape(bsz, t, nh, cfg.ssm_headdim).astype(jnp.float32)
+    inc = (dt[..., None] * xh)[..., None] \
+        * b[:, :, None, None, :].astype(jnp.float32)           # [B,T,H,P,N]
+    da = jnp.where(valid[..., None], da, 1.0)                  # pad: a=1, b=0
+    inc = jnp.where(valid[..., None, None, None], inc, 0.0)
+
+    def step(state, inp):
+        da_t, inc_t, c_t = inp
+        state = state * da_t[..., None, None] + inc_t
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    state, ys = jax.lax.scan(
+        step, cache["state"],
+        (da.transpose(1, 0, 2), inc.transpose(1, 0, 2, 3, 4),
+         c.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3)                               # [B, T, H, P]
+    y = y.astype(x.dtype) + xh.astype(x.dtype) \
+        * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, t, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    lens = jnp.sum(valid.astype(jnp.int32), axis=1)
+    new_cache = dict(conv=advance_conv_cache(timeline, lens, cfg.conv_width),
+                     state=state)
     return linear(y, p["out_proj"], x.dtype), new_cache
+
+
+def mamba_decode(p, x, cfg: ModelConfig, cache):
+    """One-token decode — the T=1 specialization of ``mamba_chunk``:
+    O(1) in context length. x [B,1,D]."""
+    return mamba_chunk(p, x, cfg, cache,
+                       jnp.ones((x.shape[0], 1), jnp.bool_))

@@ -254,7 +254,9 @@ def cache_specs_tree(cache, mesh: Mesh, cfg=None):
             if shape[kv] % tp == 0:
                 parts[kv] = "model"
             return P(*parts)
-        if name == "table":                  # int32 [slots, blocks_per_slot]
+        if name in ("table", "lt"):          # int32 [slots, blocks_per_slot]
+            # "table" mirrors the host-side SlotPages allocator; "lt" is a
+            # local layer's baked-in ring ownership — both stay replicated
             return P(*parts)
         # layouts: k/v [R?, B, S, KV, hd]; state [R?, B, H, P, N] | [R?, B, R];
         # conv [R?, B, W, C]; whisper self_k [L, B, S, KV, hd]

@@ -151,18 +151,23 @@ def static_table(batch: int, blocks_per_slot: int) -> jnp.ndarray:
 # Analytic byte accounting (benchmarks + capacity planning)
 # ---------------------------------------------------------------------------
 
-def attn_layer_lengths(cfg: ModelConfig, s_cache: int) -> List[int]:
-    """Per attention layer: how many cache positions it retains (global
-    layers keep s_cache; sliding-window layers keep min(window, s_cache))."""
+def _attn_layers(cfg: ModelConfig, s_cache: int) -> List[tuple]:
+    """Per attention layer: (retained positions, is_sliding_window)."""
     out = []
     kinds = list(cfg.scan_unit) * cfg.n_repeats + list(cfg.scan_tail)
     for kind in kinds:
         if kind in _ATTN_KINDS:
             if kind == "attn_local" and cfg.window:
-                out.append(min(cfg.window, s_cache))
+                out.append((min(cfg.window, s_cache), True))
             else:
-                out.append(s_cache)
+                out.append((s_cache, False))
     return out
+
+
+def attn_layer_lengths(cfg: ModelConfig, s_cache: int) -> List[int]:
+    """Per attention layer: how many cache positions it retains (global
+    layers keep s_cache; sliding-window layers keep min(window, s_cache))."""
+    return [s for s, _ in _attn_layers(cfg, s_cache)]
 
 
 def _per_pos_bytes(cfg: ModelConfig, kind: str, dtype_bytes: int) -> float:
@@ -178,18 +183,25 @@ def cache_bytes(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
                 block_size: int = 16, dtype_bytes: int = 2) -> int:
     """Resident attention-cache bytes for ONE slot holding ``seq_len`` tokens.
 
-    Dense reserves every layer's full retained length up front; paged modes
-    only hold the blocks the sequence has actually touched."""
+    Dense reserves every layer's full retained length up front.  Paged
+    GLOBAL layers only hold the blocks the sequence has actually touched
+    (lazy allocator grants); paged SLIDING-WINDOW layers statically own
+    their whole ring — ``ceil(min(window, s_cache) / block_size)`` blocks
+    per slot in a layer-private pool from init (``models.layers.
+    paged_attn_cache_init``) — so their bytes never scale with seq_len."""
     if kind not in CACHE_KINDS:
         raise ValueError(f"unknown cache kind {kind!r}; "
                          f"available: {CACHE_KINDS}")
     total = 0.0
-    for s_layer in attn_layer_lengths(cfg, s_cache):
+    for s_layer, local in _attn_layers(cfg, s_cache):
         if kind == "dense":
             total += s_layer * _per_pos_bytes(cfg, kind, dtype_bytes)
         else:
-            touched = min(seq_len, s_layer)
-            blocks = -(-touched // block_size) if touched else 0
+            if local:
+                blocks = -(-s_layer // block_size)     # static ring ownership
+            else:
+                touched = min(seq_len, s_layer)
+                blocks = -(-touched // block_size) if touched else 0
             total += blocks * block_size * _per_pos_bytes(cfg, kind,
                                                           dtype_bytes)
     if kind != "dense":

@@ -1,14 +1,18 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler with chunked prefill.
 
-Decode-only continuous batching (Orca-style): a fixed number of batch slots
-advance one token per model step; finished requests retire and queued requests
-claim slots immediately — prompts are prefilled token-by-token through the
-same decode step, so a single compiled program serves the whole lifecycle
-(no prefill/decode program switch, no recompilation as load changes).
+Hybrid (Sarathi-style) continuous batching: a fixed number of batch slots
+advance through ONE variable-width engine step (``registry.chunk_step``) per
+iteration.  Decode slots consume exactly one token; prefill slots consume up
+to ``chunk_size`` prompt tokens, so time-to-first-token scales with
+``len(prompt) / chunk_size`` instead of ``len(prompt)`` and the backbone's
+quantized matmuls run at M = B*T where the fused GLVQ kernels pay off.  Both
+widths are the SAME code path — the engine compiles exactly two program
+shapes (T = chunk_size while any prompt is in flight, T = 1 for steady-state
+decode), so there is no prefill/decode program switch and no recompilation
+as load changes.
 
-Idle slots feed a pad token at their stale position; this is safe for
-attention caches because a newly-assigned slot restarts at position 0 and the
-causal validity mask hides anything beyond the current position.  Recurrent
+Idle slots carry ``lens = 0``: every KV write, recurrent-state update, and
+logit of their pad positions is masked inside the chunk step.  Recurrent
 families (mamba2 / rglru / hybrid) integrate state every step, so the
 scheduler zeroes a slot's recurrent state when a new request claims it
 (``registry.reset_slot``) — slot churn cannot leak one request's state into
@@ -17,9 +21,10 @@ the next.
 Cache modes (``cache_kind``): ``dense`` keeps per-slot max-length K/V
 buffers; ``paged`` / ``paged_q8`` / ``paged_q8c`` switch every attention
 layer to shared block pools (``serving.kvcache``) — the scheduler grants a
-slot one block at a time as its position crosses block boundaries and
-returns all of the slot's blocks to the free list when the request retires,
-so resident cache bytes track live tokens instead of worst-case length.
+slot ALL the blocks its chunk will touch up front (whole blocks land per
+step via the batched append kernel) and returns them to the free list when
+the request retires, so resident cache bytes track live tokens instead of
+worst-case length.
 """
 from __future__ import annotations
 
@@ -58,20 +63,33 @@ class _Slot:
         return self.req is None
 
 
+def _local_ring(cfg: ModelConfig, s_cache: int) -> Optional[int]:
+    """Smallest sliding-window ring length in the stack, if any."""
+    kinds = tuple(cfg.scan_unit) + tuple(cfg.scan_tail)
+    if cfg.window and any(k == "attn_local" for k in kinds):
+        return min(cfg.window, s_cache)
+    return None
+
+
 class ContinuousBatcher:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  s_cache: int = 64, dtype=jnp.float32, qmeta=None,
                  backend: Optional[str] = None, pad_token: int = 0,
                  greedy: bool = True, cache_kind: str = "dense",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 kv_backend: Optional[str] = None, mesh=None):
+                 kv_backend: Optional[str] = None, mesh=None,
+                 chunk_size: int = 1):
         """``qmeta`` + ``backend`` route every weight matmul in the compiled
-        decode step through the quantized-execution engine (QuantTensor
+        serving step through the quantized-execution engine (QuantTensor
         dispatch); ``cache_kind`` + ``kv_backend`` route the attention cache
         through the paged KV engine (``kernels.kv_cache``); ``None`` backends
         use the platform default.  ``mesh`` runs quantized matmuls tensor-
         parallel (shard_map over the mesh's "model" axis) — works with every
-        ``cache_kind``."""
+        ``cache_kind``.  ``chunk_size`` > 1 enables chunked prefill: a
+        prefill slot consumes up to that many prompt tokens per engine
+        iteration (clamped to the smallest sliding-window ring so local
+        attention layers never overwrite keys the chunk still has to read);
+        ``chunk_size=1`` is the token-by-token baseline."""
         if cache_kind not in kvcache.CACHE_KINDS:
             raise ValueError(f"unknown cache_kind {cache_kind!r}; "
                              f"available: {kvcache.CACHE_KINDS}")
@@ -81,6 +99,11 @@ class ContinuousBatcher:
         self.pad = pad_token
         self.greedy = greedy
         self.cache_kind = cache_kind
+        chunk = max(1, int(chunk_size))
+        ring = _local_ring(cfg, s_cache)
+        if ring is not None:
+            chunk = min(chunk, ring)
+        self.chunk = min(chunk, s_cache)
         self.slots = [_Slot() for _ in range(slots)]
         self.queue: deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
@@ -97,13 +120,23 @@ class ContinuousBatcher:
         self._recurrent = registry.has_recurrent(cfg)
         self._reset = jax.jit(
             lambda c, i: registry.reset_slot(c, cfg, i))
-        self._step = jax.jit(lambda p, c, t, pos: registry.decode_step(
-            p, c, t, pos, cfg, dtype=dtype, qmeta=qmeta, backend=backend,
-            cache_kind=cache_kind, kv_backend=kv_backend, s_cache=s_cache,
-            mesh=mesh))
+        # ONE jitted program family: T=1 (steady decode) and T=chunk
+        # (prefill in flight) are the only shapes it ever sees
+        self._step = jax.jit(lambda p, c, t, pos, lens: registry.chunk_step(
+            p, c, t, pos, lens, cfg, dtype=dtype, qmeta=qmeta,
+            backend=backend, cache_kind=cache_kind, kv_backend=kv_backend,
+            s_cache=s_cache, mesh=mesh))
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) >= self.s_cache:
+            # the retire check would otherwise "finish" the request mid-
+            # prompt once pos hits s_cache and return garbage tokens
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot fit the serving cache (s_cache={self.s_cache}); at "
+                "least one position must remain for generation — raise "
+                "s_cache or truncate the prompt")
         self.queue.append(req)
 
     def pending(self) -> bool:
@@ -116,36 +149,49 @@ class ContinuousBatcher:
             steps += 1
         return self.finished
 
-    # -- one engine iteration --------------------------------------------------
+    # -- one engine iteration ------------------------------------------------
     def step(self):
+        """One hybrid iteration: decode slots (1 token) and prefill slots
+        (up to ``chunk_size`` prompt tokens) pack into one token slab."""
         self._assign_slots()
-        toks, poss = [], []
+        prefilling = any(
+            not s.free and s.prompt_cursor < len(s.req.prompt)
+            for s in self.slots)
+        t = self.chunk if (prefilling and self.chunk > 1) else 1
+        toks = np.full((len(self.slots), t), self.pad, np.int32)
+        poss = np.zeros((len(self.slots),), np.int32)
+        lens = np.zeros((len(self.slots),), np.int32)
         for i, s in enumerate(self.slots):
             if s.free:
-                toks.append(self.pad)
-                poss.append(max(s.pos - 1, 0))
-                continue
-            if self.pages is not None:
-                self.pages.ensure(i, s.pos)   # grant the block pos lands in
+                continue                      # lens=0: fully masked
             r = s.req
-            if s.prompt_cursor < len(r.prompt):
-                toks.append(r.prompt[s.prompt_cursor])
+            remaining = len(r.prompt) - s.prompt_cursor
+            if remaining > 0:
+                take = min(remaining, t)
+                toks[i, :take] = r.prompt[s.prompt_cursor:
+                                          s.prompt_cursor + take]
             else:
-                toks.append(r.tokens[-1] if r.tokens else r.prompt[-1])
-            poss.append(s.pos)
+                take = 1
+                toks[i, 0] = r.tokens[-1] if r.tokens else r.prompt[-1]
+            poss[i] = s.pos
+            lens[i] = take
+            if self.pages is not None:
+                # grant every block the chunk will touch up front
+                self.pages.ensure(i, s.pos + take - 1)
         if self.pages is not None and self.pages.dirty:
             self.cache["table"] = self.pages.device_table()
         logits, self.cache = self._step(
-            self.params, self.cache,
-            jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32))
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
+            jnp.asarray(lens))
         nxt = np.asarray(jnp.argmax(logits, -1)) if self.greedy else None
         for i, s in enumerate(self.slots):
             if s.free:
                 continue
             r = s.req
-            s.pos += 1
+            take = int(lens[i])
+            s.pos += take
             if s.prompt_cursor < len(r.prompt):
-                s.prompt_cursor += 1
+                s.prompt_cursor += take
                 if s.prompt_cursor == len(r.prompt):
                     r.tokens.append(int(nxt[i]))   # first generated token
             else:
