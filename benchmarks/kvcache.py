@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import registry
 from repro.serving import kvcache
+from repro.serving.engine import EngineConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 HBM_BUDGET = 16 * 1024 ** 3          # fixed cache budget for slot counts
@@ -67,9 +68,9 @@ def bench_throughput(smoke: bool = False):
                for _ in range(n_req)]
     rows = []
     for kind in kvcache.CACHE_KINDS:
-        cb = ContinuousBatcher(params, cfg, slots=4, s_cache=32,
-                               dtype=jnp.float32, cache_kind=kind,
-                               block_size=8)
+        cb = ContinuousBatcher(params, cfg, EngineConfig(
+            dtype=jnp.float32, s_cache=32, slots=4, cache_kind=kind,
+            block_size=8))
         for i, p in enumerate(prompts):
             cb.submit(Request(rid=i, prompt=p, max_new=max_new))
         cb.step()                                    # compile outside timing

@@ -1,10 +1,10 @@
-"""Chunked-prefill serving benchmark — emits ``BENCH_serving.json``.
+"""Serving benchmark — emits ``BENCH_serving.json``.
 
-Two parts:
+Three parts:
 
   * **TTFT (time-to-first-token)**: one request with a long prompt through
-    ``ContinuousBatcher`` at several ``chunk_size`` settings.  ``chunk=1``
-    is the token-by-token baseline (one engine iteration per prompt token);
+    the serving engine at several ``chunk_size`` settings.  ``chunk=1`` is
+    the token-by-token baseline (one engine iteration per prompt token);
     chunked prefill consumes up to ``chunk_size`` prompt tokens per
     iteration, so TTFT drops roughly linearly until per-iteration overhead
     stops dominating.  Compilation is excluded (a warm-up request with the
@@ -12,6 +12,13 @@ Two parts:
   * **Hybrid throughput**: a batch of requests (prefill + decode slots mixed
     in the same engine iterations, Sarathi-style) — steady-state tokens/s
     per chunk size.
+  * **Scheduler policies at equal token budget**: ``FCFSPolicy`` with a
+    fixed chunk such that a worst-case iteration packs ``budget`` tokens
+    (slots x chunk = budget) vs ``TokenBudgetPolicy(budget)`` whose widths
+    adapt along a ladder — a lone prefill gets the whole budget as one wide
+    slab (fewer iterations to first token), a prefill sharing the engine
+    with decode slots is throttled to the same cap.  Rows record TTFT and
+    hybrid tokens/s for both at the same per-iteration budget.
 
 Off-TPU the kernels run via the XLA fallback (or Pallas interpret mode), so
 absolute numbers only compare like with like — the JSON records the
@@ -32,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.models import registry
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving import (ContinuousBatcher, EngineConfig, Request,
+                           TokenBudgetPolicy)
 
 PROMPT_LEN_FULL = 512
 CHUNKS_FULL = (1, 16, 64, 128)
@@ -40,19 +48,19 @@ PROMPT_LEN_SMOKE = 32
 CHUNKS_SMOKE = (1, 8)
 
 
-def _batcher(params, cfg, s_cache, chunk, **kw):
-    return ContinuousBatcher(params, cfg, slots=2, s_cache=s_cache,
-                             dtype=jnp.float32, chunk_size=chunk, **kw)
+def _batcher(params, cfg, s_cache, chunk, policy=None, slots=2):
+    ecfg = EngineConfig(dtype=jnp.float32, s_cache=s_cache, slots=slots,
+                        chunk_size=chunk)
+    return ContinuousBatcher(params, cfg, ecfg, policy=policy)
 
 
-def _ttft(params, cfg, prompt, s_cache, chunk):
-    """Seconds from submit to the first generated token (compile excluded)."""
-    cb = _batcher(params, cfg, s_cache, chunk)
-    # warm-up: compile both program shapes (T=chunk prefill, T=1 decode)
-    cb.submit(Request(rid=-1, prompt=prompt[: max(2, chunk + 1)], max_new=2))
+def _ttft(cb, prompt, warm_prompt=None):
+    """Seconds from submit to the first generated token (compile excluded).
+    The warm-up request replays the same program shapes first."""
+    cb.submit(Request(rid=-1, prompt=list(warm_prompt or prompt), max_new=2))
     cb.run()
     cb.finished.clear()
-    req = Request(rid=0, prompt=prompt, max_new=4)
+    req = Request(rid=0, prompt=list(prompt), max_new=4)
     cb.submit(req)
     t0 = time.perf_counter()
     steps = 0
@@ -75,7 +83,9 @@ def bench_ttft(smoke: bool = False):
     prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
     rows, tokens = [], {}
     for chunk in chunks:
-        ttft, steps = _ttft(params, cfg, prompt, s_cache, chunk)
+        cb = _batcher(params, cfg, s_cache, chunk)
+        ttft, steps = _ttft(cb, prompt,
+                            warm_prompt=prompt[: max(2, chunk + 1)])
         rows.append(dict(kind="ttft", arch="llama2-7b(reduced)",
                          prompt_len=prompt_len, chunk_size=chunk,
                          ttft_s=ttft, prefill_steps=steps))
@@ -86,6 +96,22 @@ def bench_ttft(smoke: bool = False):
     for r in rows:
         r["speedup_vs_token_by_token"] = base / r["ttft_s"]
     return rows
+
+
+def _hybrid_tokens_per_s(cb, prompts, max_new):
+    """Warm every program shape with the same workload, then time it."""
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=-1 - i, prompt=list(p), max_new=max_new))
+    cb.run()
+    cb.finished.clear()
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=i, prompt=list(p), max_new=max_new))
+    t0 = time.perf_counter()
+    done = cb.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in done.values())
+    proc = toks + sum(len(p) for p in prompts)      # incl. prompt tokens
+    return proc / dt, toks, proc
 
 
 def bench_hybrid_throughput(smoke: bool = False):
@@ -100,22 +126,65 @@ def bench_hybrid_throughput(smoke: bool = False):
     rows = []
     for chunk in chunks:
         cb = _batcher(params, cfg, p_len + max_new + 8, chunk)
-        # warm-up: compile BOTH program shapes (T=chunk prefill, T=1 decode)
-        cb.submit(Request(rid=-1, prompt=prompts[0][:2], max_new=2))
-        cb.run()
-        cb.finished.clear()
-        for i, p in enumerate(prompts):
-            cb.submit(Request(rid=i, prompt=p, max_new=max_new))
-        t0 = time.perf_counter()
-        done = cb.run()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.tokens) for r in done.values())
-        proc = toks + sum(len(p) for p in prompts)      # incl. prompt tokens
+        tps, toks, proc = _hybrid_tokens_per_s(cb, prompts, max_new)
         rows.append(dict(kind="hybrid", arch="llama2-7b(reduced)",
                          requests=n_req, prompt_len=p_len, chunk_size=chunk,
-                         generated=toks, tokens_per_s=proc / dt))
-        print(f"[serving] hybrid chunk={chunk:4d}: {proc / dt:8.1f} tok/s "
+                         generated=toks, tokens_per_s=tps))
+        print(f"[serving] hybrid chunk={chunk:4d}: {tps:8.1f} tok/s "
               f"({toks} generated, {proc} processed)")
+    return rows
+
+
+def bench_policies(smoke: bool = False):
+    """FCFS vs TokenBudgetPolicy at the SAME worst-case per-iteration token
+    budget (slots x fcfs_chunk == budget == TokenBudgetPolicy cap)."""
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    slots = 2
+    budget = 16 if smoke else 64
+    prompt_len = 24 if smoke else 256
+    n_req, p_len, max_new = (4, 12, 4) if smoke else (12, 48, 16)
+    rng = np.random.default_rng(2)
+    long_prompt = list(map(int, rng.integers(1, cfg.vocab, prompt_len)))
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, p_len)))
+               for _ in range(n_req)]
+    s_cache = prompt_len + 16
+
+    setups = [
+        ("fcfs", budget // slots, None),
+        ("token_budget", budget, TokenBudgetPolicy(budget)),
+    ]
+    trials = 1 if smoke else 3            # best-of-N: steady-state numbers,
+    rows = []                             # not OS-scheduling noise
+    for name, chunk, policy in setups:
+        cb = _batcher(params, cfg, s_cache, chunk, policy=policy,
+                      slots=slots)
+        ttft, steps = _ttft(cb, long_prompt, warm_prompt=long_prompt)
+        for _ in range(trials - 1):
+            cb.finished.clear()
+            t2, _ = _ttft(cb, long_prompt, warm_prompt=long_prompt)
+            ttft = min(ttft, t2)
+        cb2 = _batcher(params, cfg, p_len + max_new + 8, chunk,
+                       policy=policy, slots=slots)
+        tps, toks, _ = _hybrid_tokens_per_s(cb2, prompts, max_new)
+        for _ in range(trials - 1):
+            cb2.finished.clear()
+            t2, _, _ = _hybrid_tokens_per_s(cb2, prompts, max_new)
+            tps = max(tps, t2)
+        rows.append(dict(kind="policy", arch="llama2-7b(reduced)",
+                         policy=name, token_budget=budget, chunk_size=chunk,
+                         slots=slots, prompt_len=prompt_len, ttft_s=ttft,
+                         prefill_steps=steps, requests=n_req,
+                         hybrid_prompt_len=p_len, tokens_per_s=tps))
+        print(f"[serving] policy={name:12s} budget={budget}: TTFT "
+              f"{ttft * 1e3:8.1f} ms ({steps} iters), hybrid {tps:8.1f} "
+              f"tok/s")
+    fcfs, tb = rows
+    tb["ttft_speedup_vs_fcfs"] = fcfs["ttft_s"] / tb["ttft_s"]
+    tb["throughput_vs_fcfs"] = tb["tokens_per_s"] / fcfs["tokens_per_s"]
+    print(f"[serving] token_budget vs fcfs at budget={budget}: "
+          f"TTFT {tb['ttft_speedup_vs_fcfs']:.2f}x, tokens/s "
+          f"{tb['throughput_vs_fcfs']:.2f}x")
     return rows
 
 
@@ -133,7 +202,8 @@ def main(argv=None):
         platform=jax.default_backend(),
         prompt_len=ttft[0]["prompt_len"],
         best_ttft_speedup=best,
-        rows=ttft + bench_hybrid_throughput(smoke=args.smoke),
+        rows=ttft + bench_hybrid_throughput(smoke=args.smoke)
+        + bench_policies(smoke=args.smoke),
     )
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[serving] wrote {args.out}")

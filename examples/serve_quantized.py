@@ -1,7 +1,11 @@
-"""End-to-end serving driver: batched-request decode loop over
-GLVQ-quantized weights (streaming per-layer dequantization, Sec 3.4).
+"""End-to-end serving driver: ServingEngine continuous batching over
+GLVQ-quantized weights (streaming per-layer dequantization, Sec 3.4) with
+per-request in-graph sampling.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py --quant-bits 4
+Sampled + streamed:
+      PYTHONPATH=src python examples/serve_quantized.py --quant-bits 4 \
+          --temperature 0.8 --top-k 40 --seed 0 --stream
 """
 from repro.launch.serve import main
 

@@ -24,12 +24,20 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_sharding.py tests/test_tp_engine.py
 
-# Forced-8-device chunked-prefill TP parity (chunk_step with a mesh + the
-# chunked scheduler); filtered so the single-device chunk tests don't run
-# twice.
+# Forced-8-device chunked-prefill + sampled-serving TP parity (chunk_step
+# with a mesh, the chunked scheduler, and in-graph sampling over sharded
+# weights); filtered so the single-device tests don't run twice.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-    tests/test_chunked.py -k "tp and not subprocess"
+    tests/test_chunked.py tests/test_serving_api.py -k "tp and not subprocess"
+
+# ServingEngine smoke: the new front door end to end — EngineConfig,
+# in-graph sampling (temperature/top-k/seed), streamed TokenEvents, stop
+# tokens, and the Sarathi token-budget packer.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --requests 3 --batch 2 --prompt-len 9 --max-new 4 --chunk-size 4 \
+    --policy token_budget --token-budget 6 \
+    --temperature 0.8 --top-k 8 --seed 0 --stop-token 3 --stream
 
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT

@@ -1,5 +1,6 @@
 """Serving driver: prefill + decode step builders (bf16 or GLVQ-quantized),
-with AOT lowering entry points used by the multi-pod dry-run."""
+with AOT lowering entry points used by the multi-pod dry-run, plus the
+``ServingEngine`` CLI (sampled, streamed continuous batching)."""
 from __future__ import annotations
 
 import argparse
@@ -16,6 +17,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import quantized
 from repro.models import registry
 from repro.parallel import sharding
+from repro.serving.engine import EngineConfig
 
 
 def serve_param_shapes(cfg: ModelConfig, *, quant_bits: int = 0,
@@ -31,34 +33,22 @@ def serve_param_shapes(cfg: ModelConfig, *, quant_bits: int = 0,
     return sds, None
 
 
-def make_decode_step(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                     unroll: int = 1, backend: Optional[str] = None,
-                     cache_kind: str = "dense",
-                     kv_backend: Optional[str] = None,
-                     s_cache: Optional[int] = None,
-                     mesh: Optional[Mesh] = None):
-    """One-token decode closure; quantized weights dispatch through the
-    QuantTensor engine (``backend`` from kernels.ops.matmul_backends()),
-    and a paged ``cache_kind`` routes attention history through the KV-cache
-    engine (``kv_backend`` from kernels.kv_cache.kv_backends(); ``s_cache``
-    pins the sliding-window ring length to the dense oracle's).  ``mesh``
-    runs quantized matmuls tensor-parallel (shard_map over the "model" axis)
-    — composable with every ``cache_kind``."""
+def make_decode_step(cfg: ModelConfig, engine: EngineConfig):
+    """One-token decode closure over an ``EngineConfig``: quantized weights
+    dispatch through the QuantTensor engine, a paged ``cache_kind`` routes
+    attention history through the KV-cache engine, and ``mesh`` runs
+    quantized matmuls tensor-parallel — all per the one config object."""
     def decode_step(params, cache, token, pos):
         return registry.decode_step(params, cache, token, pos, cfg,
-                                    dtype=dtype, unroll=unroll, qmeta=qmeta,
-                                    backend=backend, cache_kind=cache_kind,
-                                    kv_backend=kv_backend, s_cache=s_cache,
-                                    mesh=mesh)
+                                    engine=engine)
     return decode_step
 
 
-def make_prefill(cfg: ModelConfig, qmeta=None, dtype=jnp.bfloat16,
-                 unroll: int = 1, backend: Optional[str] = None,
-                 mesh: Optional[Mesh] = None):
+def make_prefill(cfg: ModelConfig, engine: EngineConfig):
     def prefill(params, batch):
-        return registry.forward(params, batch, cfg, dtype=dtype, qmeta=qmeta,
-                                unroll=unroll, backend=backend, mesh=mesh)
+        return registry.forward(params, batch, cfg, dtype=engine.dtype,
+                                qmeta=engine.qmeta, unroll=engine.unroll,
+                                backend=engine.backend, mesh=engine.mesh)
     return prefill
 
 
@@ -80,7 +70,9 @@ def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
         if b % sharding.dp_size(mesh) == 0 else P()
     logits_s = sharding.logits_spec(cfg.vocab, mesh, b)
 
-    step = make_decode_step(cfg, qmeta, dtype, unroll, backend, mesh=mesh)
+    ecfg = EngineConfig(dtype=dtype, qmeta=qmeta, unroll=unroll,
+                        backend=backend, mesh=mesh)
+    step = make_decode_step(cfg, ecfg)
     jitted = jax.jit(
         step,
         in_shardings=sharding.named((p_specs, c_specs, bspec, P()), mesh),
@@ -99,7 +91,9 @@ def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
                                            quant_d=quant_d, dtype=dtype)
     p_specs = sharding.param_specs(params_sds, mesh, qmeta=qmeta)
     b_specs = sharding.batch_specs(batch_sds, mesh)
-    fn = make_prefill(cfg, qmeta, dtype, unroll, backend, mesh=mesh)
+    ecfg = EngineConfig(dtype=dtype, qmeta=qmeta, unroll=unroll,
+                        backend=backend, mesh=mesh)
+    fn = make_prefill(cfg, ecfg)
     jitted = jax.jit(fn,
                      in_shardings=sharding.named((p_specs, b_specs), mesh),
                      out_shardings=None)
@@ -109,14 +103,16 @@ def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
 
 
 # ---------------------------------------------------------------------------
-# CLI: continuous-batching serving loop on a tiny model (CPU demonstration)
+# CLI: ServingEngine continuous-batching loop on a tiny model (CPU demo)
 # ---------------------------------------------------------------------------
 
 def main(argv=None):
     import numpy as np
 
     from repro.serving import kvcache
-    from repro.serving.scheduler import ContinuousBatcher, Request
+    from repro.serving.engine import ServingEngine
+    from repro.serving.policy import FCFSPolicy, TokenBudgetPolicy
+    from repro.serving.sampling import SamplingParams
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama2-7b")
@@ -129,6 +125,26 @@ def main(argv=None):
                     help="chunked prefill width: prompt tokens one engine "
                          "iteration may consume per slot (1 = token-by-"
                          "token baseline; cuts TTFT ~linearly)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "token_budget"),
+                    help="slab-packing policy: fcfs = full chunk width while "
+                         "any prompt is in flight; token_budget = Sarathi-"
+                         "style cap on total slab tokens per iteration")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="token_budget policy: max valid slab tokens per "
+                         "engine iteration (default: batch * chunk-size)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (exact); > 0 samples in-graph")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampling seed (deterministic per request / token "
+                         "index; independent of chunk width and policy)")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="stop generation when this token id is sampled "
+                         "(repeatable)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print TokenEvents as the engine emits them")
     ap.add_argument("--quant-bits", type=int, default=0)
     ap.add_argument("--backend", default=None,
                     help="quantized-matmul backend "
@@ -172,25 +188,50 @@ def main(argv=None):
             print(f"[serve] tp={args.tp}: note — TP only shards quantized "
                   "matmuls; pass --quant-bits to shard the weights")
     s_cache = max(64, args.prompt_len + args.max_new + 8)
-    cb = ContinuousBatcher(params, cfg, slots=args.batch, s_cache=s_cache,
-                           dtype=jnp.float32, qmeta=qmeta,
-                           backend=args.backend, cache_kind=args.cache,
-                           block_size=args.kv_block_size,
-                           kv_backend=args.kv_backend, mesh=mesh,
-                           chunk_size=args.chunk_size)
+    ecfg = EngineConfig(dtype=jnp.float32, qmeta=qmeta, backend=args.backend,
+                        cache_kind=args.cache,
+                        block_size=args.kv_block_size,
+                        kv_backend=args.kv_backend, mesh=mesh,
+                        chunk_size=args.chunk_size, s_cache=s_cache,
+                        slots=args.batch)
+    if args.policy == "token_budget":
+        budget = args.token_budget or args.batch * max(args.chunk_size, 1)
+        policy = TokenBudgetPolicy(budget)
+        print(f"[serve] policy=token_budget budget={budget} "
+              f"widths={policy.program_widths(args.chunk_size)}")
+    else:
+        policy = FCFSPolicy()
+    engine = ServingEngine(params, cfg, ecfg, policy=policy)
     if args.cache != "dense":
         print(f"[serve] cache={args.cache} block_size={args.kv_block_size}")
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed,
+                        stop_token_ids=tuple(args.stop_token or ()),
+                        max_tokens=args.max_new)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
-        cb.submit(Request(rid=i, prompt=prompt, max_new=args.max_new))
+        engine.submit(prompt, sp, rid=i)
     t0 = time.time()
-    done = cb.run()
+    n_events = 0
+    for ev in engine.stream():
+        n_events += 1
+        if args.stream:
+            tail = f" done[{ev.done_reason}]" if ev.done else ""
+            print(f"[serve] rid={ev.rid} #{ev.index}: {ev.token}{tail}")
     dt = time.time() - t0
+    done = engine.batcher.finished
     toks = sum(len(r.tokens) for r in done.values())
+    assert toks == n_events, "every generated token must stream as an event"
+    reasons: Dict[str, int] = {}
+    for r in done.values():
+        reasons[r.done_reason] = reasons.get(r.done_reason, 0) + 1
+    mode = "greedy" if sp.greedy else (
+        f"T={sp.temperature} top_k={sp.top_k} top_p={sp.top_p}")
     print(f"[serve] {len(done)} requests (prompt {args.prompt_len}, "
-          f"chunk {cb.chunk}): {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s; CPU, tiny model)")
+          f"chunk {engine.batcher.chunk}, {mode}): {toks} tokens in "
+          f"{dt:.2f}s ({toks / dt:.1f} tok/s; CPU, tiny model); "
+          f"done reasons: {reasons}")
 
 
 if __name__ == "__main__":

@@ -301,10 +301,15 @@ def reset_slot(cache: Params, cfg: ModelConfig, slot) -> Params:
 
 
 def chunk_step(params: Params, cache: Params, tokens, pos, lens,
-               cfg: ModelConfig, *, dtype=jnp.bfloat16, qmeta=None,
-               unroll: int = 1, backend=None, cache_kind: str = "dense",
-               kv_backend=None, s_cache: Optional[int] = None, mesh=None):
+               cfg: ModelConfig, *, engine=None, dtype=jnp.bfloat16,
+               qmeta=None, unroll: int = 1, backend=None,
+               cache_kind: str = "dense", kv_backend=None,
+               s_cache: Optional[int] = None, mesh=None):
     """One variable-width serving step: the unified prefill/decode program.
+
+    ``engine`` (a ``serving.engine.EngineConfig``, duck-typed here to keep
+    the model layer import-free of serving) supersedes the loose execution
+    kwargs when given.
 
     tokens [B, T] int32 token slab; pos [B] int32 first absolute position
     per slot; lens [B] int32 valid slab tokens per slot (0 = idle slot; a
@@ -318,6 +323,11 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
     per call via ``kv_cache.append_chunk``.  Pad positions (t >= lens[b])
     are masked everywhere that matters: their KV writes are dropped, their
     recurrent state updates are skipped, and their logits never selected."""
+    if engine is not None:
+        dtype, qmeta, unroll = engine.dtype, engine.qmeta, engine.unroll
+        backend, cache_kind = engine.backend, engine.cache_kind
+        kv_backend, s_cache, mesh = (engine.kv_backend, engine.s_cache,
+                                     engine.mesh)
     if qmeta:
         params = _quantized_view(params, qmeta, backend, mesh)
     pages = None
@@ -356,13 +366,14 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
 
 
 def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
-                *, dtype=jnp.bfloat16, qmeta=None, unroll: int = 1,
-                backend=None, cache_kind: str = "dense", kv_backend=None,
-                s_cache: Optional[int] = None, mesh=None):
+                *, engine=None, dtype=jnp.bfloat16, qmeta=None,
+                unroll: int = 1, backend=None, cache_kind: str = "dense",
+                kv_backend=None, s_cache: Optional[int] = None, mesh=None):
     """One-token decode — the T=1 specialization of ``chunk_step``.
     token [B] int32, pos [B] (or scalar) int32 -> (logits [B, V], cache).
 
-    With ``qmeta``, every matmul against a quantized weight dispatches through
+    ``engine`` (an ``EngineConfig``) supersedes the loose kwargs.  With
+    ``qmeta``, every matmul against a quantized weight dispatches through
     ``QuantTensor.matmul`` — decoding reduces to a matrix-vector product and
     the dense weight never materializes on the fused backend.  With a paged
     ``cache_kind``, attention history reads/writes dispatch through the
@@ -370,6 +381,9 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
     ``mesh``, quantized matmuls run tensor-parallel (shard_map) per shard."""
     b = token.shape[0]
     pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
+    if engine is not None:
+        return chunk_step(params, cache, token[:, None], pos_v,
+                          jnp.ones((b,), jnp.int32), cfg, engine=engine)
     return chunk_step(params, cache, token[:, None], pos_v,
                       jnp.ones((b,), jnp.int32), cfg, dtype=dtype,
                       qmeta=qmeta, unroll=unroll, backend=backend,

@@ -1,17 +1,16 @@
 """Model registry: uniform init / loss / decode API over all families,
 plus ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run.
 
-Quantized execution: ``forward`` / ``decode_step`` accept ``qmeta`` (packed-
-payload metadata from ``core.quantized``) and ``backend`` (a name from
-``kernels.ops.matmul_backends()``); every family — the encoder-decoder
-included — wraps payloads into QuantTensor nodes and dispatches its matmuls
-through the engine.
-
-Serving caches are pluggable: ``cache_init`` / ``decode_step`` accept
-``cache_kind`` (dense | paged | paged_q8 | paged_q8c) and ``kv_backend``
-(from ``kernels.kv_cache.kv_backends()``).  The encoder-decoder family keeps
-a dense cache (its decoder contexts are short); those kwargs are stripped
-here rather than at every call site."""
+Serving entry points (``chunk_step`` / ``decode_step`` / ``cache_init``)
+consume ONE ``serving.engine.EngineConfig`` (``engine=...``): dtype, GLVQ
+``qmeta`` + matmul ``backend`` (QuantTensor dispatch), ``cache_kind`` /
+``block_size`` / ``kv_backend`` / ``s_cache`` (pluggable paged attention
+cache), and ``mesh`` (tensor-parallel shard_map).  The PR-4 loose-kwarg
+spellings (``dtype=..., qmeta=..., cache_kind=..., ...``) keep working
+through ``_as_engine``, the one back-compat shim that folds them into an
+EngineConfig.  The encoder-decoder family keeps a dense cache (its decoder
+contexts are short); its cache knobs are validated/stripped here rather
+than at every call site."""
 from __future__ import annotations
 
 import functools
@@ -41,14 +40,25 @@ def param_shapes(cfg: ModelConfig):
                           jax.ShapeDtypeStruct((2,), jnp.uint32))
 
 
-def _strip_cache_kwargs(cfg: ModelConfig, kw: Dict[str, Any]) -> Dict[str, Any]:
-    kw = dict(kw)
-    if kw.pop("cache_kind", "dense") != "dense":
+def _as_engine(engine, kw: Dict[str, Any]):
+    """The loose-kwarg back-compat shim: fold legacy serving kwargs into an
+    ``EngineConfig``.  Every call site in the repo passes ``engine=`` now;
+    this keeps external ``dtype=... qmeta=... cache_kind=...`` spellings
+    working (and rejects mixing the two)."""
+    # local import: repro.serving.scheduler imports this module
+    from repro.serving.engine import EngineConfig
+    if engine is not None:
+        if kw:
+            raise TypeError("pass either engine=EngineConfig(...) or the "
+                            f"legacy loose kwargs, not both: got {sorted(kw)}")
+        return engine
+    return EngineConfig(**kw)
+
+
+def _check_encdec_cache(cfg: ModelConfig, engine) -> None:
+    if engine.cache_kind != "dense":
         raise ValueError(f"{cfg.arch}: the encoder-decoder family only "
                          "supports the dense cache")
-    kw.pop("kv_backend", None)
-    kw.pop("s_cache", None)
-    return kw
 
 
 def loss_fn(params, batch, cfg: ModelConfig, **kw):
@@ -63,28 +73,56 @@ def forward(params, batch, cfg: ModelConfig, **kw):
     return lm.forward(params, batch, cfg, **kw)
 
 
-def decode_step(params, cache, token, pos, cfg: ModelConfig, **kw):
+def decode_step(params, cache, token, pos, cfg: ModelConfig, *,
+                engine=None, **kw):
+    engine = _as_engine(engine, kw)
     if is_encdec(cfg):
+        _check_encdec_cache(cfg, engine)
         return whisper.decode_step(params, cache, token, pos, cfg,
-                                   **_strip_cache_kwargs(cfg, kw))
-    return lm.decode_step(params, cache, token, pos, cfg, **kw)
+                                   dtype=engine.dtype, unroll=engine.unroll,
+                                   qmeta=engine.qmeta, backend=engine.backend,
+                                   mesh=engine.mesh)
+    return lm.decode_step(params, cache, token, pos, cfg, engine=engine)
 
 
-def chunk_step(params, cache, tokens, pos, lens, cfg: ModelConfig, **kw):
+def chunk_step(params, cache, tokens, pos, lens, cfg: ModelConfig, *,
+               engine=None, **kw):
     """One variable-width serving step (unified prefill/decode): tokens
     [B, T] slab + per-slot first positions / valid lengths -> (logits [B, V]
     at each slot's last valid token, cache).  T=1 is single-token decode —
     the same compiled program family as ``decode_step``."""
+    engine = _as_engine(engine, kw)
     if is_encdec(cfg):
         raise ValueError(f"{cfg.arch}: the encoder-decoder family has no "
                          "chunked serving step (its decoder contexts are "
                          "short; drive it token-by-token via decode_step)")
-    return lm.chunk_step(params, cache, tokens, pos, lens, cfg, **kw)
+    return lm.chunk_step(params, cache, tokens, pos, lens, cfg, engine=engine)
 
 
-def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype=jnp.bfloat16,
-               *, cache_kind: str = "dense", block_size: int = 16,
-               num_blocks: Optional[int] = None):
+def cache_init(cfg: ModelConfig, batch: int, s_cache: Optional[int] = None,
+               dtype=None, *, engine=None, **kw):
+    """Serving cache for ``batch`` slots.  Either pass ``engine=`` (an
+    ``EngineConfig``; its s_cache/dtype/cache_kind/block_size/num_blocks
+    drive the geometry) or the legacy positional ``s_cache``/``dtype`` plus
+    loose cache kwargs."""
+    if engine is not None:
+        if s_cache is not None or dtype is not None or kw:
+            raise TypeError("cache_init(engine=...) takes its geometry from "
+                            "the EngineConfig; don't also pass "
+                            "s_cache/dtype/cache kwargs")
+    else:
+        if s_cache is None:
+            raise TypeError("cache_init requires s_cache (positionally or "
+                            "via engine=EngineConfig(...))")
+        engine = _as_engine(None, dict(
+            kw, s_cache=s_cache,
+            dtype=jnp.bfloat16 if dtype is None else dtype))
+    if engine.s_cache is None:
+        raise ValueError("cache_init needs a concrete EngineConfig.s_cache "
+                         "to size the cache")
+    s_cache, dtype = engine.s_cache, engine.dtype
+    cache_kind, block_size = engine.cache_kind, engine.block_size
+    num_blocks = engine.num_blocks
     if is_encdec(cfg):
         if cache_kind != "dense":
             raise ValueError(f"{cfg.arch}: the encoder-decoder family only "

@@ -1,0 +1,249 @@
+"""``repro.serving.engine`` — the serving front door.
+
+``EngineConfig`` is ONE frozen object for every execution knob that used to
+thread through ``ContinuousBatcher.__init__`` / ``registry.chunk_step`` /
+``launch/serve.py`` as loose kwargs: model execution (dtype / qmeta /
+backend / unroll / mesh), attention cache (cache_kind / block_size /
+num_blocks / kv_backend / s_cache), and scheduling (slots / chunk_size /
+pad_token / default stop tokens).  ``registry.chunk_step`` / ``decode_step``
+/ ``cache_init`` and the scheduler all consume it directly; the loose-kwarg
+spellings survive only as back-compat shims.
+
+``ServingEngine`` is the user-facing facade on top of the continuous
+batcher:
+
+    engine = ServingEngine(params, cfg, EngineConfig(s_cache=128,
+                                                     chunk_size=32))
+    handle = engine.submit(prompt, SamplingParams(temperature=0.8, seed=7))
+    for tok in handle:                  # streams as the engine iterates
+        ...
+    # or drive everything and watch all slots:
+    for event in engine.stream():       # TokenEvent(rid, token, index, ...)
+        ...
+    req = engine.generate(prompt)       # blocking convenience
+
+Sampling runs inside the compiled serving step (see ``serving.sampling``),
+so each iteration ships ``[B]`` token ids to the host, never ``[B, vocab]``
+logits.  Finished requests carry ``done_reason``: ``"length"`` (hit the
+token cap), ``"stop_token"``, or ``"cache_full"`` (ran out of cache
+positions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.serving import kvcache
+from repro.serving.policy import SchedulerPolicy
+from repro.serving.sampling import SamplingParams
+
+__all__ = ["EngineConfig", "TokenEvent", "RequestHandle", "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving-execution knob in one immutable object.
+
+    Model execution: ``dtype`` (activation dtype), ``qmeta`` (packed GLVQ
+    payload metadata; enables the QuantTensor engine), ``backend`` (name
+    from ``kernels.ops.matmul_backends()``; None = platform default),
+    ``unroll`` (scan unroll), ``mesh`` (tensor-parallel shard_map mesh).
+
+    Attention cache: ``cache_kind`` (dense | paged | paged_q8 | paged_q8c),
+    ``block_size`` / ``num_blocks`` (paged pool geometry; ``num_blocks``
+    None = planned from ``s_cache`` x ``slots``), ``kv_backend`` (name from
+    ``kernels.kv_cache.kv_backends()``), ``s_cache`` (cache positions per
+    slot; None lets model-level calls infer capacity, the scheduler defaults
+    it to 64).
+
+    Scheduling: ``slots`` (concurrent batch lanes), ``chunk_size`` (max
+    prompt tokens one iteration may consume per slot), ``pad_token``,
+    ``stop_tokens`` (engine-wide default stop ids, merged with each
+    request's ``SamplingParams.stop_token_ids``).
+    """
+    # model execution
+    dtype: Any = jnp.bfloat16
+    qmeta: Any = None
+    backend: Optional[str] = None
+    unroll: int = 1
+    mesh: Any = None
+    # attention cache
+    cache_kind: str = "dense"
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    kv_backend: Optional[str] = None
+    s_cache: Optional[int] = None
+    # scheduling
+    slots: int = 4
+    chunk_size: int = 1
+    pad_token: int = 0
+    stop_tokens: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.cache_kind not in kvcache.CACHE_KINDS:
+            raise ValueError(f"unknown cache_kind {self.cache_kind!r}; "
+                             f"available: {kvcache.CACHE_KINDS}")
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        object.__setattr__(self, "stop_tokens",
+                           tuple(int(t) for t in self.stop_tokens))
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One generated token, surfaced per engine iteration per live slot."""
+    rid: int
+    token: int
+    index: int                      # position in the request's output stream
+    done: bool = False
+    done_reason: Optional[str] = None
+
+
+class RequestHandle:
+    """Live view of one submitted request.
+
+    Iterating the handle drives the engine until THIS request finishes,
+    yielding its token ids as they are generated (other slots advance on the
+    same iterations — streaming one request never starves the rest).
+    """
+
+    def __init__(self, engine: "ServingEngine", request):
+        self._engine = engine
+        self.request = request
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def tokens(self) -> List[int]:
+        return list(self.request.tokens)
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+    @property
+    def done_reason(self) -> Optional[str]:
+        return self.request.done_reason
+
+    def result(self, max_steps: int = 100_000):
+        """Block until this request finishes; returns the finished Request."""
+        steps = 0
+        while not self.request.done and steps < max_steps:
+            if not self._engine.batcher.pending():
+                raise RuntimeError(
+                    f"request {self.rid} cannot finish: the engine has no "
+                    "pending work (was it already retired elsewhere?)")
+            self._engine.step()
+            steps += 1
+        if not self.request.done:
+            raise RuntimeError(f"request {self.rid} still unfinished after "
+                               f"{max_steps} engine iterations")
+        return self.request
+
+    def __iter__(self) -> Iterator[int]:
+        emitted = 0
+        while True:
+            toks = self.request.tokens
+            while emitted < len(toks):
+                yield toks[emitted]
+                emitted += 1
+            if self.request.done:
+                return
+            if not self._engine.batcher.pending():
+                return
+            self._engine.step()
+
+
+class ServingEngine:
+    """Facade over the continuous batcher: submit / stream / generate."""
+
+    def __init__(self, params, cfg, engine: Optional[EngineConfig] = None, *,
+                 policy: Optional[SchedulerPolicy] = None,
+                 default_params: Optional[SamplingParams] = None):
+        # local import: scheduler imports this module for EngineConfig
+        from repro.serving.scheduler import ContinuousBatcher
+        self.config = engine if engine is not None else EngineConfig()
+        self.batcher = ContinuousBatcher(params, cfg, self.config,
+                                         policy=policy,
+                                         default_params=default_params)
+        self._next_rid = 0
+        self.handles: dict = {}
+
+    @property
+    def policy(self) -> SchedulerPolicy:
+        return self.batcher.policy
+
+    def submit(self, prompt: Sequence[int],
+               params: Optional[SamplingParams] = None,
+               rid: Optional[int] = None) -> RequestHandle:
+        """Queue one request; returns a streaming handle.
+
+        The request's token cap is ``params.max_tokens`` when set, else
+        whatever fits the cache (it then finishes with done_reason
+        "cache_full" unless a stop token lands first).
+        """
+        from repro.serving.scheduler import Request
+        if rid is None:
+            rid = self._next_rid
+        if rid in self.handles:
+            raise ValueError(f"request id {rid} is still in flight")
+        self._next_rid = max(self._next_rid, rid) + 1
+        params = params if params is not None else self.batcher.default_params
+        # max_tokens unset -> run until the cache fills (or a stop token);
+        # the cap is deliberately past the cache so the request retires with
+        # done_reason "cache_full", not "length"
+        max_new = params.max_tokens if params.max_tokens is not None \
+            else self.batcher.s_cache
+        req = Request(rid=rid, prompt=list(map(int, prompt)),
+                      max_new=max_new, params=params)
+        self.batcher.submit(req)
+        handle = RequestHandle(self, req)
+        self.handles[rid] = handle
+        return handle
+
+    def step(self) -> List[TokenEvent]:
+        """One engine iteration; returns the tokens it produced.
+
+        Finished requests are evicted from ``handles`` (the handle object a
+        caller holds keeps working — it references the Request directly), so
+        a long-running engine doesn't pin every request it ever served; the
+        rid becomes reusable.  ``batcher.finished`` still accumulates
+        results for ``run()``/``generate()`` callers — a persistent server
+        should drain or clear it periodically."""
+        events = self.batcher.step()
+        for ev in events:
+            if ev.done:
+                self.handles.pop(ev.rid, None)
+        return events
+
+    def stream(self, max_steps: int = 100_000) -> Iterator[TokenEvent]:
+        """Drive the engine until idle, yielding every TokenEvent in order."""
+        steps = 0
+        while self.batcher.pending() and steps < max_steps:
+            yield from self.step()
+            steps += 1
+
+    def generate(self, prompt: Sequence[int],
+                 params: Optional[SamplingParams] = None):
+        """Blocking convenience: submit + drain; returns the finished
+        Request (tokens + done_reason)."""
+        return self.submit(prompt, params).result()
+
+    def run(self, max_steps: int = 10_000):
+        """Drain all queued work; returns {rid: finished Request}."""
+        steps = 0
+        while self.batcher.pending() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.batcher.finished

@@ -1,0 +1,134 @@
+"""Scheduler policies: slot admission + slab packing, pulled out of the
+continuous batcher so serving behavior is pluggable without touching the
+engine step.
+
+A policy decides, per engine iteration, (a) which queued requests claim free
+slots (``assign``) and (b) the token-slab shape: the slab width ``T`` and how
+many tokens each slot consumes from it (``widths``).  The batcher turns that
+plan into one ``[B, T]`` chunk-step call; a slot given 0 tokens simply rides
+along fully masked (lens = 0), so deferring a slot is free.
+
+Compiled-shape discipline: every distinct ``T`` a policy emits is one XLA
+program in the serving step's jit cache.  ``program_widths`` declares the
+full family up front — ``FCFSPolicy`` compiles at most {1, chunk};
+``TokenBudgetPolicy`` picks T from a small fixed ladder, so its family is
+bounded by the ladder length no matter how load fluctuates (asserted by the
+compile-count spy test).
+"""
+from __future__ import annotations
+
+from typing import Deque, List, Optional, Sequence, Tuple
+
+__all__ = ["SchedulerPolicy", "FCFSPolicy", "TokenBudgetPolicy",
+           "default_ladder"]
+
+
+def default_ladder(chunk: int) -> Tuple[int, ...]:
+    """Powers of two up to ``chunk``, always ending at ``chunk`` itself."""
+    chunk = max(1, int(chunk))
+    ladder = [1]
+    while ladder[-1] * 2 < chunk:
+        ladder.append(ladder[-1] * 2)
+    if ladder[-1] != chunk:
+        ladder.append(chunk)
+    return tuple(ladder)
+
+
+class SchedulerPolicy:
+    """Base policy: FCFS admission; packing left to subclasses.
+
+    ``remaining`` below is the per-slot prompt view: ``None`` = free slot,
+    ``0`` = decoding (consumes exactly 1 token), ``n > 0`` = still has n
+    prompt tokens to prefill.
+    """
+
+    name = "base"
+
+    def assign(self, slots, queue: Deque) -> List[Tuple[int, object]]:
+        """Claim free slots from the queue head; returns (slot, request)."""
+        out = []
+        for i, s in enumerate(slots):
+            if s.free and queue:
+                out.append((i, queue.popleft()))
+        return out
+
+    def widths(self, remaining: Sequence[Optional[int]],
+               chunk: int) -> Tuple[int, List[int]]:
+        """-> (slab width T, per-slot token takes, each in [0, T])."""
+        raise NotImplementedError
+
+    def program_widths(self, chunk: int) -> Tuple[int, ...]:
+        """Every slab width this policy can emit (the compiled-shape family)."""
+        raise NotImplementedError
+
+
+def _takes(remaining: Sequence[Optional[int]], t: int) -> List[int]:
+    """Greedy per-slot consumption at slab width ``t``."""
+    return [0 if r is None else (min(r, t) if r > 0 else 1)
+            for r in remaining]
+
+
+class FCFSPolicy(SchedulerPolicy):
+    """PR-4 behavior: while ANY prompt is in flight every iteration runs at
+    the full chunk width (decode slots ride along at 1 valid token); pure
+    decode runs at T = 1.  Exactly two compiled shapes."""
+
+    name = "fcfs"
+
+    def widths(self, remaining, chunk):
+        prefilling = any(r is not None and r > 0 for r in remaining)
+        t = chunk if (prefilling and chunk > 1) else 1
+        return t, _takes(remaining, t)
+
+    def program_widths(self, chunk):
+        return (1,) if chunk <= 1 else (1, chunk)
+
+
+class TokenBudgetPolicy(SchedulerPolicy):
+    """Sarathi-style packer: cap TOTAL valid slab tokens per iteration.
+
+    Each iteration picks the widest ladder width ``t`` whose greedy takes sum
+    to at most ``token_budget`` — a lone prefill gets the whole budget as one
+    wide slab (better TTFT than a fixed conservative chunk), while a prefill
+    sharing the engine with decode slots is throttled so decode inter-token
+    latency stays bounded.  Widths come from a small fixed ladder, so the
+    compiled program family is bounded by ``len(ladder)`` regardless of how
+    requests arrive.
+
+    When even ``t = 1`` exceeds the budget (more live slots than budget
+    tokens) the iteration still runs at T = 1: every active slot must
+    advance, so the budget is a packing target, not an admission limit.
+    """
+
+    name = "token_budget"
+
+    def __init__(self, token_budget: int,
+                 ladder: Optional[Sequence[int]] = None):
+        if token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        self.token_budget = int(token_budget)
+        self.ladder = tuple(sorted(set(int(w) for w in ladder))) \
+            if ladder else None
+        if self.ladder and self.ladder[0] < 1:
+            raise ValueError(f"ladder widths must be >= 1, got {self.ladder}")
+
+    def _rungs(self, chunk: int) -> Tuple[int, ...]:
+        ladder = self.ladder or default_ladder(chunk)
+        return tuple(w for w in ladder if w <= chunk) or (1,)
+
+    def widths(self, remaining, chunk):
+        prefill = [r for r in remaining if r is not None and r > 0]
+        if not prefill:
+            return 1, _takes(remaining, 1)
+        t = 1
+        for w in self._rungs(chunk):            # ascending; takes-sum is
+            if sum(_takes(remaining, w)) <= self.token_budget:
+                t = w                           # monotone in w, keep last fit
+            else:
+                break
+            if w >= max(prefill):
+                break                           # wider rungs add pure padding
+        return t, _takes(remaining, t)
+
+    def program_widths(self, chunk):
+        return tuple(sorted(set((1,) + self._rungs(chunk))))

@@ -1,0 +1,133 @@
+"""Per-request sampling: ``SamplingParams`` + batched in-graph token sampling.
+
+``SamplingParams`` travels with each ``Request``; the scheduler flattens the
+live slots' params into small per-slot arrays (temperature / top-k / top-p /
+seed / token-index) every engine iteration and ``sample_tokens`` runs INSIDE
+the compiled serving step, directly on the chunk-final logits.  The host loop
+therefore receives ``[B]`` sampled token ids instead of ``[B, vocab]``
+logits — at tensor parallelism the full-vocab tensor never crosses the host
+boundary — and changing a request's sampling params never recompiles (they
+are traced values, not static arguments).
+
+Determinism: the PRNG key for a request's ``i``-th generated token is
+``fold_in(PRNGKey(seed), i)`` — a pure function of (seed, token index), NOT
+of how many engine iterations ran before it.  Carried split-per-step key
+state would consume different amounts of randomness under different chunk
+widths or scheduler policies; the stateless derivation makes a fixed seed
+reproduce the same token stream across chunk widths, slab packings, backends,
+and TP meshes (the sampled stream only depends on the logits, which the
+chunk-parity suite pins down).
+
+``temperature=0`` lowers to a plain ``argmax`` of the raw logits — bit-for-bit
+the greedy path — so greedy serving is just the default ``SamplingParams()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "sample_tokens"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    temperature: 0 = greedy argmax (exact); > 0 scales the logits before
+        gumbel sampling.
+    top_k: keep only the k highest-probability tokens (0 = off).
+    top_p: keep the smallest prefix of the sorted distribution whose
+        cumulative probability reaches p (1.0 = off; the most-likely token
+        is always kept).
+    seed: PRNG seed for this request's token stream; ``None`` derives a
+        deterministic per-request default from the request id.
+    stop_token_ids: generation ends when one of these ids is sampled (the
+        stop token is kept as the last element of ``Request.tokens`` and the
+        finished request carries ``done_reason="stop_token"``).
+    max_tokens: generation cap for this request; ``None`` falls back to the
+        request's ``max_new`` (and ultimately the cache capacity).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+    max_tokens: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def _token_keys(seeds, idx):
+    """[B] seeds x [B] token indices -> [B] PRNG keys, statelessly."""
+    def one(seed, i):
+        return jax.random.fold_in(jax.random.PRNGKey(seed), i)
+    return jax.vmap(one)(seeds, idx)
+
+
+def sample_tokens(logits, seeds, idx, temps, top_ks, top_ps):
+    """Batched per-slot sampling, traced inside the serving step.
+
+    logits [B, V] f32 (each slot's chunk-final row); seeds [B] i32; idx [B]
+    i32 index of the token being sampled in each request's generated stream;
+    temps [B] f32; top_ks [B] i32 (0 = off); top_ps [B] f32 (1 = off).
+    Returns [B] i32 token ids.  Rows with ``temps == 0`` are exact argmax
+    (identical to the host-side greedy path); the rest draw one gumbel
+    top-k/top-p sample.  All params are traced, so request churn never
+    changes the compiled program.
+    """
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+        scaled = logits / safe_t
+        # one descending sort serves both filters (top-k keeps the k
+        # largest, so its mask is a prefix of the same order top-p cuts)
+        sorted_l = jnp.sort(scaled, axis=-1)[:, ::-1]
+
+        k = jnp.clip(top_ks, 0, v)
+        kth = jnp.take_along_axis(sorted_l,
+                                  jnp.maximum(k - 1, 0)[:, None], axis=-1)
+        k_off = (k == 0)[:, None]
+        masked = jnp.where(k_off | (scaled >= kth), scaled, -jnp.inf)
+        sorted_m = jnp.where(k_off | (sorted_l >= kth), sorted_l, -jnp.inf)
+
+        probs = jax.nn.softmax(sorted_m, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # exclusive-prefix rule: token j survives iff the mass BEFORE it is
+        # still under top_p — the most likely token always survives, and
+        # the kept set is the smallest prefix reaching p
+        keep = (cum - probs) < top_ps[:, None]
+        n_keep = jnp.maximum(jnp.sum(keep, axis=-1), 1)
+        thr = jnp.take_along_axis(sorted_m, (n_keep - 1)[:, None], axis=-1)
+        masked = jnp.where(masked >= thr, masked, -jnp.inf)
+
+        keys = _token_keys(seeds, idx)
+        u = jax.vmap(lambda key: jax.random.uniform(
+            key, (v,), minval=jnp.finfo(jnp.float32).tiny, maxval=1.0))(keys)
+        gumbel = -jnp.log(-jnp.log(u))
+        return jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+
+    # all-greedy iterations (the default) skip the sort/softmax/RNG
+    # machinery entirely — at a real vocab that is the decode hot path
+    sampled = jax.lax.cond(jnp.any(temps > 0), _sampled,
+                           lambda _: greedy_tok, operand=None)
+    return jnp.where(temps > 0, sampled, greedy_tok)

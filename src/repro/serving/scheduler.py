@@ -1,15 +1,19 @@
-"""Continuous-batching serving scheduler with chunked prefill.
+"""Continuous-batching serving scheduler with chunked prefill + in-graph
+sampling.
 
 Hybrid (Sarathi-style) continuous batching: a fixed number of batch slots
 advance through ONE variable-width engine step (``registry.chunk_step``) per
-iteration.  Decode slots consume exactly one token; prefill slots consume up
-to ``chunk_size`` prompt tokens, so time-to-first-token scales with
-``len(prompt) / chunk_size`` instead of ``len(prompt)`` and the backbone's
-quantized matmuls run at M = B*T where the fused GLVQ kernels pay off.  Both
-widths are the SAME code path — the engine compiles exactly two program
-shapes (T = chunk_size while any prompt is in flight, T = 1 for steady-state
-decode), so there is no prefill/decode program switch and no recompilation
-as load changes.
+iteration.  What each iteration looks like is a ``SchedulerPolicy`` decision
+(``serving.policy``): ``FCFSPolicy`` reproduces the classic two-shape
+behavior (T = chunk while any prompt is in flight, T = 1 steady-state);
+``TokenBudgetPolicy`` caps total valid slab tokens per iteration with widths
+drawn from a fixed ladder, so the compiled program family stays bounded.
+
+Sampling happens INSIDE the compiled step (``serving.sampling``): the
+per-slot ``SamplingParams`` flatten into small traced arrays, the chunk-final
+logits are sampled on device, and only ``[B]`` token ids reach the host —
+under tensor parallelism the full-vocab logits never cross the host boundary.
+``temperature=0`` (the default) is bit-for-bit the greedy path.
 
 Idle slots carry ``lens = 0``: every KV write, recurrent-state update, and
 logit of their pad positions is masked inside the chunk step.  Recurrent
@@ -18,17 +22,22 @@ scheduler zeroes a slot's recurrent state when a new request claims it
 (``registry.reset_slot``) — slot churn cannot leak one request's state into
 the next.
 
+Every execution knob (dtype / qmeta / backend / mesh, cache_kind /
+block_size / kv_backend / s_cache, slots / chunk_size / stop tokens) lives
+in one ``EngineConfig`` (``serving.engine``).  The PR-4 loose-kwarg
+constructor keeps working through a deprecation shim.
+
 Cache modes (``cache_kind``): ``dense`` keeps per-slot max-length K/V
 buffers; ``paged`` / ``paged_q8`` / ``paged_q8c`` switch every attention
 layer to shared block pools (``serving.kvcache``) — the scheduler grants a
-slot ALL the blocks its chunk will touch up front (whole blocks land per
-step via the batched append kernel) and returns them to the free list when
-the request retires, so resident cache bytes track live tokens instead of
-worst-case length.
+slot ALL the blocks its chunk will touch up front and returns them to the
+free list when the request retires, so resident cache bytes track live
+tokens instead of worst-case length.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -39,8 +48,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.serving import kvcache
+from repro.serving.engine import EngineConfig, TokenEvent
+from repro.serving.policy import FCFSPolicy, SchedulerPolicy
+from repro.serving.sampling import SamplingParams, sample_tokens
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher",
+           "DONE_LENGTH", "DONE_STOP", "DONE_CACHE_FULL"]
+
+DONE_LENGTH = "length"            # hit the request's token cap
+DONE_STOP = "stop_token"          # sampled a stop id
+DONE_CACHE_FULL = "cache_full"    # no cache positions left for this slot
 
 
 @dataclasses.dataclass
@@ -50,6 +67,8 @@ class Request:
     max_new: int
     tokens: List[int] = dataclasses.field(default_factory=list)  # generated
     done: bool = False
+    params: Optional[SamplingParams] = None   # None -> batcher default
+    done_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -71,64 +90,112 @@ def _local_ring(cfg: ModelConfig, s_cache: int) -> Optional[int]:
     return None
 
 
+# legacy ContinuousBatcher(**kwargs) keys -> EngineConfig fields (greedy is
+# handled separately: it shapes default_params, not the config)
+_LEGACY_KEYS = ("slots", "s_cache", "dtype", "qmeta", "backend", "pad_token",
+                "cache_kind", "block_size", "num_blocks", "kv_backend",
+                "mesh", "chunk_size")
+_LEGACY_DEFAULT_S_CACHE = 64
+_LEGACY_DEFAULT_DTYPE = jnp.float32
+
+
 class ContinuousBatcher:
-    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 s_cache: int = 64, dtype=jnp.float32, qmeta=None,
-                 backend: Optional[str] = None, pad_token: int = 0,
-                 greedy: bool = True, cache_kind: str = "dense",
-                 block_size: int = 16, num_blocks: Optional[int] = None,
-                 kv_backend: Optional[str] = None, mesh=None,
-                 chunk_size: int = 1):
-        """``qmeta`` + ``backend`` route every weight matmul in the compiled
-        serving step through the quantized-execution engine (QuantTensor
-        dispatch); ``cache_kind`` + ``kv_backend`` route the attention cache
-        through the paged KV engine (``kernels.kv_cache``); ``None`` backends
-        use the platform default.  ``mesh`` runs quantized matmuls tensor-
-        parallel (shard_map over the mesh's "model" axis) — works with every
-        ``cache_kind``.  ``chunk_size`` > 1 enables chunked prefill: a
-        prefill slot consumes up to that many prompt tokens per engine
-        iteration (clamped to the smallest sliding-window ring so local
-        attention layers never overwrite keys the chunk still has to read);
-        ``chunk_size=1`` is the token-by-token baseline."""
-        if cache_kind not in kvcache.CACHE_KINDS:
-            raise ValueError(f"unknown cache_kind {cache_kind!r}; "
-                             f"available: {kvcache.CACHE_KINDS}")
+    def __init__(self, params, cfg: ModelConfig,
+                 engine: Optional[EngineConfig] = None, *,
+                 policy: Optional[SchedulerPolicy] = None,
+                 default_params: Optional[SamplingParams] = None,
+                 **legacy):
+        """``engine`` consolidates every execution knob (see
+        ``serving.engine.EngineConfig``); ``policy`` plugs the slab-packing
+        strategy (default ``FCFSPolicy``); ``default_params`` is the
+        ``SamplingParams`` applied to requests that carry none (default:
+        greedy).  The PR-4 loose-kwarg signature
+        (``ContinuousBatcher(params, cfg, slots=..., qmeta=..., ...)``)
+        still works through a deprecation shim."""
+        greedy = legacy.pop("greedy", None)
+        if legacy or greedy is not None:
+            if engine is not None:
+                raise TypeError(
+                    "pass either an EngineConfig or the legacy loose kwargs,"
+                    f" not both (got EngineConfig plus {sorted(legacy)})")
+            unknown = sorted(set(legacy) - set(_LEGACY_KEYS))
+            if unknown:
+                raise TypeError(f"unknown ContinuousBatcher kwargs {unknown}; "
+                                f"legacy kwargs are {_LEGACY_KEYS}")
+            warnings.warn(
+                "ContinuousBatcher(**loose_kwargs) is deprecated; pass "
+                "ContinuousBatcher(params, cfg, EngineConfig(...)) instead",
+                DeprecationWarning, stacklevel=2)
+            legacy.setdefault("s_cache", _LEGACY_DEFAULT_S_CACHE)
+            legacy.setdefault("dtype", _LEGACY_DEFAULT_DTYPE)
+            engine = EngineConfig(**legacy)
+            if greedy is False and default_params is None:
+                # the old greedy=False flag crashed outright (host argmax was
+                # the only mode); it now means "actually sample".  seed stays
+                # None so each request falls back to its rid-derived stream —
+                # concurrent requests must not draw correlated noise
+                default_params = SamplingParams(temperature=1.0)
+        if engine is None:
+            engine = EngineConfig(s_cache=_LEGACY_DEFAULT_S_CACHE,
+                                  dtype=_LEGACY_DEFAULT_DTYPE)
+
         self.params = params
         self.cfg = cfg
+        self.policy = policy if policy is not None else FCFSPolicy()
+        self.default_params = default_params if default_params is not None \
+            else SamplingParams()
+        s_cache = engine.s_cache if engine.s_cache is not None \
+            else _LEGACY_DEFAULT_S_CACHE
         self.s_cache = s_cache
-        self.pad = pad_token
-        self.greedy = greedy
-        self.cache_kind = cache_kind
-        chunk = max(1, int(chunk_size))
+        self.pad = engine.pad_token
+        self.cache_kind = engine.cache_kind
+        chunk = max(1, int(engine.chunk_size))
         ring = _local_ring(cfg, s_cache)
         if ring is not None:
             chunk = min(chunk, ring)
         self.chunk = min(chunk, s_cache)
-        self.slots = [_Slot() for _ in range(slots)]
+        self.slots = [_Slot() for _ in range(engine.slots)]
         self.queue: deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
         self.pages: Optional[kvcache.SlotPages] = None
-        if cache_kind != "dense":
-            layout = kvcache.PageLayout.plan(s_cache, slots, block_size,
-                                             num_blocks)
-            self.pages = kvcache.SlotPages(slots, layout)
+        num_blocks = engine.num_blocks
+        if engine.cache_kind != "dense":
+            layout = kvcache.PageLayout.plan(s_cache, engine.slots,
+                                             engine.block_size, num_blocks)
+            self.pages = kvcache.SlotPages(engine.slots, layout)
             num_blocks = layout.num_blocks
-        self.cache = registry.cache_init(cfg, slots, s_cache, dtype,
-                                         cache_kind=cache_kind,
-                                         block_size=block_size,
-                                         num_blocks=num_blocks)
+        # the stored config carries the RESOLVED s_cache / num_blocks so the
+        # compiled step and the cache agree on geometry
+        self.engine_config = engine.replace(s_cache=s_cache,
+                                            num_blocks=num_blocks)
+        self.cache = registry.cache_init(cfg, engine.slots,
+                                         engine=self.engine_config)
         self._recurrent = registry.has_recurrent(cfg)
         self._reset = jax.jit(
             lambda c, i: registry.reset_slot(c, cfg, i))
-        # ONE jitted program family: T=1 (steady decode) and T=chunk
-        # (prefill in flight) are the only shapes it ever sees
-        self._step = jax.jit(lambda p, c, t, pos, lens: registry.chunk_step(
-            p, c, t, pos, lens, cfg, dtype=dtype, qmeta=qmeta,
-            backend=backend, cache_kind=cache_kind, kv_backend=kv_backend,
-            s_cache=s_cache, mesh=mesh))
+        # ONE jitted program family over the policy's slab widths; sampling
+        # is traced into the same program, so only [B] ids reach the host
+        ecfg = self.engine_config
+
+        def _step_fn(p, c, toks, poss, lens, seeds, sidx, temps, tks, tps):
+            logits, c = registry.chunk_step(p, c, toks, poss, lens, cfg,
+                                            engine=ecfg)
+            return sample_tokens(logits, seeds, sidx, temps, tks, tps), c
+
+        self._step = jax.jit(_step_fn)
+
+    @property
+    def greedy(self) -> bool:
+        """Back-compat view of the old flag: are default requests greedy?"""
+        return self.default_params.greedy
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request):
+        if not req.prompt:
+            # the decode branch seeds from the last prompt token; with no
+            # prompt there is nothing to condition on and step() would die
+            # with an opaque IndexError
+            raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) >= self.s_cache:
             # the retire check would otherwise "finish" the request mid-
             # prompt once pos hits s_cache and return garbage tokens
@@ -150,24 +217,37 @@ class ContinuousBatcher:
         return self.finished
 
     # -- one engine iteration ------------------------------------------------
-    def step(self):
-        """One hybrid iteration: decode slots (1 token) and prefill slots
-        (up to ``chunk_size`` prompt tokens) pack into one token slab."""
-        self._assign_slots()
-        prefilling = any(
-            not s.free and s.prompt_cursor < len(s.req.prompt)
-            for s in self.slots)
-        t = self.chunk if (prefilling and self.chunk > 1) else 1
-        toks = np.full((len(self.slots), t), self.pad, np.int32)
-        poss = np.zeros((len(self.slots),), np.int32)
-        lens = np.zeros((len(self.slots),), np.int32)
+    def step(self) -> List[TokenEvent]:
+        """One hybrid iteration: the policy picks the slab shape, the
+        compiled step advances every live slot and samples their next
+        tokens on device.  Returns the TokenEvents this iteration emitted."""
+        self._claim(self.policy.assign(self.slots, self.queue))
+        remaining = [None if s.free
+                     else max(len(s.req.prompt) - s.prompt_cursor, 0)
+                     for s in self.slots]
+        t, takes = self.policy.widths(remaining, self.chunk)
+        # clamp whatever the policy returned: self.chunk already encodes the
+        # sliding-window ring bound, and a wider slab would let a chunk's
+        # ring writes overwrite keys its own earlier queries still need
+        t = max(1, min(int(t), self.chunk))
+        b = len(self.slots)
+        toks = np.full((b, t), self.pad, np.int32)
+        poss = np.zeros((b,), np.int32)
+        lens = np.zeros((b,), np.int32)
+        seeds = np.zeros((b,), np.int32)
+        sidx = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        tks = np.zeros((b,), np.int32)
+        tps = np.ones((b,), np.float32)
         for i, s in enumerate(self.slots):
             if s.free:
                 continue                      # lens=0: fully masked
             r = s.req
-            remaining = len(r.prompt) - s.prompt_cursor
-            if remaining > 0:
-                take = min(remaining, t)
+            rem = len(r.prompt) - s.prompt_cursor
+            if rem > 0:
+                take = min(int(takes[i]), rem, t)
+                if take <= 0:
+                    continue                  # policy deferred this slot
                 toks[i, :take] = r.prompt[s.prompt_cursor:
                                           s.prompt_cursor + take]
             else:
@@ -175,41 +255,69 @@ class ContinuousBatcher:
                 toks[i, 0] = r.tokens[-1] if r.tokens else r.prompt[-1]
             poss[i] = s.pos
             lens[i] = take
+            sp = r.params if r.params is not None else self.default_params
+            seeds[i] = (sp.seed if sp.seed is not None else r.rid) \
+                & 0x7FFFFFFF
+            sidx[i] = len(r.tokens)
+            temps[i] = sp.temperature
+            tks[i] = sp.top_k
+            tps[i] = sp.top_p
             if self.pages is not None:
                 # grant every block the chunk will touch up front
                 self.pages.ensure(i, s.pos + take - 1)
         if self.pages is not None and self.pages.dirty:
             self.cache["table"] = self.pages.device_table()
-        logits, self.cache = self._step(
+        nxt, self.cache = self._step(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
-            jnp.asarray(lens))
-        nxt = np.asarray(jnp.argmax(logits, -1)) if self.greedy else None
+            jnp.asarray(lens), jnp.asarray(seeds), jnp.asarray(sidx),
+            jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
+        nxt = np.asarray(nxt)
+        events: List[TokenEvent] = []
         for i, s in enumerate(self.slots):
-            if s.free:
+            if s.free or lens[i] == 0:
                 continue
             r = s.req
             take = int(lens[i])
             s.pos += take
+            tok = None
             if s.prompt_cursor < len(r.prompt):
                 s.prompt_cursor += take
                 if s.prompt_cursor == len(r.prompt):
-                    r.tokens.append(int(nxt[i]))   # first generated token
+                    tok = int(nxt[i])          # first generated token
             else:
-                r.tokens.append(int(nxt[i]))
-            if len(r.tokens) >= r.max_new or s.pos >= self.s_cache:
+                tok = int(nxt[i])
+            if tok is None:
+                continue                       # still mid-prompt
+            r.tokens.append(tok)
+            reason = self._done_reason(r, s, tok)
+            if reason is not None:
                 r.done = True
+                r.done_reason = reason
                 self.finished[r.rid] = r
-                self.slots[i] = _Slot()            # slot recycled at pos 0
+                self.slots[i] = _Slot()        # slot recycled at pos 0
                 if self.pages is not None:
-                    self.pages.release(i)          # blocks back to the pool
+                    self.pages.release(i)      # blocks back to the pool
+            events.append(TokenEvent(rid=r.rid, token=tok,
+                                     index=len(r.tokens) - 1, done=r.done,
+                                     done_reason=r.done_reason))
+        return events
 
-    def _assign_slots(self):
-        for i, s in enumerate(self.slots):
-            if s.free and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = _Slot(req=req, pos=0, prompt_cursor=0)
-                if self._recurrent:
-                    # a retired request's conv window / hidden state must not
-                    # leak into the new occupant
-                    self.cache = self._reset(self.cache,
-                                             jnp.asarray(i, jnp.int32))
+    def _done_reason(self, r: Request, s: _Slot, tok: int) -> Optional[str]:
+        sp = r.params if r.params is not None else self.default_params
+        if tok in sp.stop_token_ids or tok in self.engine_config.stop_tokens:
+            return DONE_STOP
+        limit = sp.max_tokens if sp.max_tokens is not None else r.max_new
+        if len(r.tokens) >= limit:
+            return DONE_LENGTH
+        if s.pos >= self.s_cache:
+            return DONE_CACHE_FULL
+        return None
+
+    def _claim(self, assignments):
+        for i, req in assignments:
+            self.slots[i] = _Slot(req=req, pos=0, prompt_cursor=0)
+            if self._recurrent:
+                # a retired request's conv window / hidden state must not
+                # leak into the new occupant
+                self.cache = self._reset(self.cache,
+                                         jnp.asarray(i, jnp.int32))
