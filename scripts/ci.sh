@@ -31,6 +31,13 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_chunked.py tests/test_serving_api.py -k "tp and not subprocess"
 
+# Fused paged-attention: force the pallas backend (interpret mode off-TPU)
+# through the kernel + engine parity suite so the fused path can't rot
+# behind the platform default.
+REPRO_ATTN_BACKEND=pallas \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_attention_kernel.py -k "not subprocess"
+
 # ServingEngine smoke: the new front door end to end — EngineConfig,
 # in-graph sampling (temperature/top-k/seed), streamed TokenEvents, stop
 # tokens, and the Sarathi token-budget packer.
@@ -50,4 +57,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.kvcache \
     --smoke --out "$SMOKE_DIR/BENCH_kvcache.json"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving \
     --smoke --out "$SMOKE_DIR/BENCH_serving.json"
+# attention smoke also asserts the fused-vs-unfused modeled-HBM-bytes bar
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.attention \
+    --smoke --out "$SMOKE_DIR/BENCH_attention.json"
 echo "[ci] benchmark smoke OK"

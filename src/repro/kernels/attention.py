@@ -1,0 +1,434 @@
+"""Fused paged-attention kernels: block gather + dequant + flash SDPA.
+
+The serving attention path reads a slot's paged KV history (``kernels.
+kv_cache`` block pools, int8 / mu-law codes for the quantized kinds) and
+runs masked SDPA over it.  Done as separate ops that moves the DEQUANTIZED
+cache through HBM twice per step: gather materializes a dense
+``[B, S, KV, hd]`` slab, attention reads it back.  The fused Pallas kernel
+here walks the per-slot block table with scalar prefetch and streams each
+block through VMEM — dequant + online-softmax (running max / denominator,
+flash-attention style) happen in registers, so neither the dense slab nor
+the dequantized cache ever exists in HBM; per decode token the cache moves
+once, as codes.
+
+One kernel family covers both program widths of the unified serving step:
+
+  * decode (T=1) and chunk (T>1) — the query grid packs ``n_rep * T`` rows
+    per KV head (GQA head-group mapping), each row masked by its own
+    absolute position;
+  * global layers (causal prefix masking over the appended history) and
+    sliding-window layers (ring semantics: the pre-append ring is attended
+    together with the chunk's in-flight keys, exactly mirroring
+    ``models.layers`` — a grid step past the last table block handles the
+    in-flight chunk);
+  * all paged cache kinds: ``paged`` (cast only), ``paged_q8`` (int8 +
+    per-token-per-head scale), ``paged_q8c`` (mu-law companded int8) — the
+    dequant math is ``kv_cache.kv_dequantize``, shared with the unfused
+    path.
+
+Backends mirror the ``kernels.kv_cache`` registry: ``pallas`` (the fused
+kernel; interpret mode off-TPU) and ``xla`` (gather-then-SDPA, today's
+path, kept as the parity oracle).  Selection: explicit arg >
+``REPRO_ATTN_BACKEND`` env > platform default (pallas on TPU, xla
+elsewhere).  With a tensor-parallel ``mesh`` the call shard_maps over the
+"model" axis: heads (and the KV-head dim of the pools) shard, the block
+table / positions stay replicated, and no collective is needed — each
+shard owns whole (kv-head, query-group) pairs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import kv_cache
+
+__all__ = ["NEG_INF", "register_attn_backend", "attn_backends",
+           "resolve_attn_backend", "ring_positions", "window_chunk_masks",
+           "masked_sdpa", "paged_attention"]
+
+NEG_INF = -1e30
+
+_ENV_BACKEND = "REPRO_ATTN_BACKEND"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+_ATTN_BACKENDS: Dict[str, type] = {}
+
+
+def register_attn_backend(name: str):
+    """Decorator: register a namespace with a ``paged_attention`` staticmethod."""
+    def deco(obj):
+        _ATTN_BACKENDS[name] = obj
+        return obj
+    return deco
+
+
+def attn_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_ATTN_BACKENDS))
+
+
+def resolve_attn_backend(backend: Optional[str] = None) -> str:
+    """explicit arg > REPRO_ATTN_BACKEND env > platform default."""
+    if backend is None:
+        backend = os.environ.get(_ENV_BACKEND, "").strip() or None
+    if backend is None:
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in _ATTN_BACKENDS:
+        raise ValueError(f"unknown attention backend {backend!r}; "
+                         f"available: {attn_backends()}")
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Mask math + masked SDPA (shared by the oracle, the dense path, and tests)
+# ---------------------------------------------------------------------------
+
+def ring_positions(last, size: int, modulus: int):
+    """Absolute position stored at each ring index after the newest write
+    landed at position ``last`` (ring slot = pos % modulus).  Entries that
+    were never written (stored position would be negative, or index >=
+    modulus) come back negative."""
+    idx = jnp.arange(size)[None, :]
+    stored = last[:, None] - (last[:, None] - idx) % modulus
+    return jnp.where(idx < modulus, stored, -1)
+
+
+def window_chunk_masks(pos, apos, t: int, size: int, window: int):
+    """Key-validity masks for a chunked sliding-window step.
+
+    The ring is read BEFORE the chunk's writes land (a chunk overwrites ring
+    slots that its own earlier queries still need — the token-by-token
+    oracle saw those keys), so attention runs over [pre-append ring ++
+    in-flight chunk keys].  Returns (hist [B,T,size], intra [1,T,T])."""
+    aq = apos[:, :, None]                                     # [B, T, 1]
+    stored = ring_positions(pos - 1, size, window)[:, None, :]
+    hist = (stored >= 0) & (stored <= aq) & (stored > aq - window)
+    intra = (jnp.arange(t)[None, None, :] <= jnp.arange(t)[None, :, None])
+    return hist, intra
+
+
+def masked_sdpa(q, ck, cv, valid, *, n_rep: int, scale: float):
+    """Masked attention over gathered history.
+    q [B,Sq,H,hd]; ck/cv [B,Sk,KV,hd]; valid [B,Sk] (shared by all queries)
+    or [B,Sq,Sk] (per-query) bool -> out [B,Sq,H*hd]."""
+    b, sq, _, hd = q.shape
+    kv = ck.shape[2]
+    scores = jnp.einsum("bsgrd,btgd->bgrst",
+                        q.reshape(b, sq, kv, n_rep, hd),
+                        ck).astype(jnp.float32) * scale
+    vm = valid[:, None, None, :, :] if valid.ndim == 3 \
+        else valid[:, None, None, None, :]
+    scores = jnp.where(vm, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    return jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, sq, -1)
+
+
+# ---------------------------------------------------------------------------
+# XLA oracle backend: gather-then-SDPA (the pre-fusion serving path)
+# ---------------------------------------------------------------------------
+
+@register_attn_backend("xla")
+class _XlaAttn:
+    @staticmethod
+    def paged_attention(q, cache, table, pos, lens, *, mode, window,
+                        k_chunk, v_chunk, kv_backend, out_dtype):
+        b, t, h, hd = q.shape
+        kv = cache["kp"].shape[2]
+        bs = cache["kp"].shape[1]
+        nb = table.shape[1]
+        n_rep = h // kv
+        ck, cv = kv_cache.gather(cache, table, mode=mode, backend=kv_backend,
+                                 out_dtype=out_dtype)
+        apos = pos[:, None] + jnp.arange(t)[None]             # [B, T]
+        if window:
+            hist, intra = window_chunk_masks(pos, apos, t, nb * bs, window)
+            kk = jnp.concatenate([ck, k_chunk], axis=1)
+            vv = jnp.concatenate([cv, v_chunk], axis=1)
+            valid = jnp.concatenate(
+                [hist, jnp.broadcast_to(intra, (b, t, t))], axis=-1)
+        else:
+            kk, vv = ck, cv
+            valid = jnp.arange(nb * bs)[None, None, :] <= apos[:, :, None]
+        out = masked_sdpa(q, kk, vv, valid, n_rep=n_rep, scale=hd ** -0.5)
+        return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas backend
+# ---------------------------------------------------------------------------
+
+def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
+                       t: int, bs: int, nb: int, scale: float,
+                       has_chunk: bool):
+    """Grid (B, KV, nb [+1]): one program per (slot, kv head, table block).
+
+    The query block holds all ``n_rep * T`` rows of one (slot, kv head) —
+    row ``rep * T + tq`` is query token ``tq`` of GQA group member ``rep``.
+    Online softmax state (running max / denominator / accumulator) lives in
+    VMEM scratch across the sequential block walk; with ``has_chunk`` the
+    final grid step attends the in-flight chunk keys (sliding-window layers
+    read the pre-append ring, so the chunk's own keys arrive separately)."""
+    quant = mode != "paged"
+    n_in = (4 if quant else 2) + (2 if has_chunk else 0)
+    q_ref = refs[0]
+    ins = refs[1:1 + n_in]
+    o_ref, m_ref, l_ref, acc_ref = refs[1 + n_in:]
+    if quant:
+        kp_ref, vp_ref, ksc_ref, vsc_ref = ins[:4]
+        rest = ins[4:]
+    else:
+        kp_ref, vp_ref = ins[:2]
+        rest = ins[2:]
+
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    r = q_ref.shape[2]                           # padded n_rep * T rows
+    tq = jax.lax.broadcasted_iota(jnp.int32, (r, 1), 0) % t
+    aq = pos_ref[b] + tq                         # [R, 1] absolute query pos
+
+    def _accumulate(k, v, valid):
+        """One online-softmax update.  k/v [S, hd] f32; valid [R, S]."""
+        qf = q_ref[0, 0].astype(jnp.float32)                     # [R, hd]
+        s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        # masked keys must contribute EXACTLY zero: while every key so far
+        # is masked m_new is still NEG_INF and exp(s - m_new) = exp(0) = 1
+        # would poison the denominator
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j < nb)
+    def _history_block():
+        ck = kp_ref[0, :, 0, :]
+        cv = vp_ref[0, :, 0, :]
+        if quant:
+            k = kv_cache.kv_dequantize(ck, ksc_ref[0, :, 0], mode,
+                                       jnp.float32)
+            v = kv_cache.kv_dequantize(cv, vsc_ref[0, :, 0], mode,
+                                       jnp.float32)
+        else:
+            k = ck.astype(jnp.float32)
+            v = cv.astype(jnp.float32)
+        o = jax.lax.broadcasted_iota(jnp.int32, (r, k.shape[0]), 1)
+        in_blk = o < bs                          # tile-padded rows are dead
+        if window:
+            # ring semantics: which absolute position does ring index
+            # j*bs + o hold, given the newest pre-chunk write landed at
+            # pos - 1?  (mirrors ring_positions + window_chunk_masks)
+            idx = j * bs + o
+            lastp = pos_ref[b] - 1
+            stored = jnp.where(idx < window,
+                               lastp - (lastp - idx) % window, -1)
+            valid = in_blk & (stored >= 0) & (stored <= aq) \
+                & (stored > aq - window)
+        else:
+            valid = in_blk & (j * bs + o <= aq)
+        _accumulate(k, v, valid)
+
+    if has_chunk:
+        kc_ref, vc_ref = rest[0], rest[1]
+
+        @pl.when(j == nb)
+        def _chunk_block():
+            k = kc_ref[0, 0].astype(jnp.float32)
+            v = vc_ref[0, 0].astype(jnp.float32)
+            tk = jax.lax.broadcasted_iota(jnp.int32, (r, k.shape[0]), 1)
+            _accumulate(k, v, (tk < t) & (tk <= tq))
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, 0] = jnp.where(l > 0.0, acc_ref[...] / l,
+                                0.0).astype(o_ref.dtype)
+
+
+@register_attn_backend("pallas")
+class _PallasAttn:
+    @staticmethod
+    def paged_attention(q, cache, table, pos, lens, *, mode, window,
+                        k_chunk, v_chunk, kv_backend, out_dtype):
+        # lens is part of the uniform backend signature: pad-query outputs
+        # are garbage the caller masks (same contract as the chunk step),
+        # so the kernel never needs it.  kv_backend routes the unfused
+        # gather only — the fused path never gathers.
+        del lens, kv_backend
+        b, t, h, hd = q.shape
+        bs, kv = cache["kp"].shape[1:3]
+        nb = table.shape[1]
+        n_rep = h // kv
+        quant = mode != "paged"
+        has_chunk = k_chunk is not None
+        r = n_rep * t
+
+        # [B, T, H, hd] -> [B, KV, n_rep*T, hd]: row rep*T + tq of group g
+        # is head g*n_rep + rep at query token tq
+        qr = q.reshape(b, t, kv, n_rep, hd).transpose(0, 2, 3, 1, 4) \
+              .reshape(b, kv, r, hd)
+        kp, vp = cache["kp"], cache["vp"]
+        ksc, vsc = cache.get("ksc"), cache.get("vsc")
+        kc = vc = None
+        if has_chunk:
+            kc = k_chunk.transpose(0, 2, 1, 3)           # [B, KV, T, hd]
+            vc = v_chunk.transpose(0, 2, 1, 3)
+
+        r_p, t_p, hd_p = r, t, hd
+        if kv_cache.tile_pad_enabled():
+            # Mosaic wants tile-aligned trailing dims on VMEM blocks; the
+            # in-kernel masks (o < bs, tk < t) keep padded rows dead and
+            # padded query rows are sliced off the output
+            bs_p, hd_p = kv_cache.padded_block_geom(bs, hd)
+            r_p = -(-r // 8) * 8
+            t_p = -(-t // 8) * 8
+            qr = kv_cache.pad_to(kv_cache.pad_to(qr, 2, 8), 3, 128)
+            kp = kv_cache.pad_to(kv_cache.pad_to(kp, 1, 8), 3, 128)
+            vp = kv_cache.pad_to(kv_cache.pad_to(vp, 1, 8), 3, 128)
+            if quant:
+                ksc = kv_cache.pad_to(ksc, 1, 8)
+                vsc = kv_cache.pad_to(vsc, 1, 8)
+            if has_chunk:
+                kc = kv_cache.pad_to(kv_cache.pad_to(kc, 2, 8), 3, 128)
+                vc = kv_cache.pad_to(kv_cache.pad_to(vc, 2, 8), 3, 128)
+        bs_p = kp.shape[1]
+
+        # index maps see (grid..., *scalar_prefetch_refs); the table walk is
+        # the scalar-prefetch trick: block j of slot i streams pool block
+        # table[i, j] through VMEM.  The chunk step (j == nb) re-points the
+        # pool specs at the last table block — its data is ignored there.
+        def q_spec():
+            return pl.BlockSpec((1, 1, r_p, hd_p),
+                                lambda i, g, j, tbl, ps: (i, g, 0, 0))
+
+        def pool_spec(nd4: bool):
+            if nd4:
+                return pl.BlockSpec(
+                    (1, bs_p, 1, hd_p),
+                    lambda i, g, j, tbl, ps:
+                    (tbl[i * nb + jnp.minimum(j, nb - 1)], 0, g, 0))
+            return pl.BlockSpec(
+                (1, bs_p, 1),
+                lambda i, g, j, tbl, ps:
+                (tbl[i * nb + jnp.minimum(j, nb - 1)], 0, g))
+
+        def chunk_spec():
+            return pl.BlockSpec((1, 1, t_p, hd_p),
+                                lambda i, g, j, tbl, ps: (i, g, 0, 0))
+
+        ins = [qr, kp, vp]
+        in_specs = [q_spec(), pool_spec(True), pool_spec(True)]
+        if quant:
+            ins += [ksc, vsc]
+            in_specs += [pool_spec(False), pool_spec(False)]
+        if has_chunk:
+            ins += [kc, vc]
+            in_specs += [chunk_spec(), chunk_spec()]
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kv, nb + (1 if has_chunk else 0)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, r_p, hd_p),
+                                   lambda i, g, j, tbl, ps: (i, g, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((r_p, 1), jnp.float32),
+                            pltpu.VMEM((r_p, 1), jnp.float32),
+                            pltpu.VMEM((r_p, hd_p), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            functools.partial(_fused_attn_kernel, mode=mode, window=window,
+                              t=t, bs=bs, nb=nb, scale=hd ** -0.5,
+                              has_chunk=has_chunk),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, kv, r_p, hd_p), out_dtype),
+            interpret=not _on_tpu(),
+        )(table.reshape(-1).astype(jnp.int32), pos.astype(jnp.int32), *ins)
+        if (r_p, hd_p) != (r, hd):
+            out = out[:, :, :r, :hd]
+        return out.reshape(b, kv, n_rep, t, hd).transpose(0, 3, 1, 2, 4) \
+                  .reshape(b, t, h * hd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point (mode-aware, backend-dispatched, TP-composable)
+# ---------------------------------------------------------------------------
+
+def _dispatch(impl, has_chunk, q, pools, table, pos, lens, *chunk, mode,
+              window, kv_backend, out_dtype):
+    kc, vc = chunk if has_chunk else (None, None)
+    return impl.paged_attention(q, pools, table, pos, lens, mode=mode,
+                                window=window, k_chunk=kc, v_chunk=vc,
+                                kv_backend=kv_backend, out_dtype=out_dtype)
+
+
+def paged_attention(q, cache, table, pos, lens, *, mode: str,
+                    window: int = 0, k_chunk=None, v_chunk=None,
+                    kv_backend: Optional[str] = None,
+                    backend: Optional[str] = None, mesh=None,
+                    out_dtype=None):
+    """Attention over a slot's paged KV history -> out [B, T, H*hd].
+
+    q [B, T, H, hd] post-RoPE queries; ``cache`` this layer's pools
+    (``kp``/``vp`` + scales for the quantized kinds); table [B, nb] the
+    slot's pool blocks in logical order; pos [B] first absolute position of
+    each slot's slab; lens [B] valid slab tokens (outputs of pad queries
+    are garbage the caller masks — uniform with the chunk-step contract).
+
+    window > 0 switches to sliding-window ring semantics: the pools hold
+    the PRE-append ring (call before ``append_chunk``) and
+    ``k_chunk``/``v_chunk`` [B, T, KV, hd] carry the in-flight chunk keys,
+    already roundtripped through the cache codec.  window == 0 attends the
+    appended history (call after ``append_chunk``), causally masked per
+    query position.
+
+    With ``mesh`` (a Mesh with a "model" axis that divides the KV heads)
+    the call runs under shard_map: q / pools / chunk keys shard their head
+    dim, table / pos / lens replicate, and no collective is needed.
+    """
+    out_dtype = q.dtype if out_dtype is None else out_dtype
+    impl = _ATTN_BACKENDS[resolve_attn_backend(backend)]
+    pools = {n: cache[n] for n in ("kp", "vp", "ksc", "vsc") if n in cache}
+    has_chunk = k_chunk is not None
+    call = functools.partial(_dispatch, impl, has_chunk, mode=mode,
+                             window=window, kv_backend=kv_backend,
+                             out_dtype=out_dtype)
+    args = (q, pools, table, pos, lens)
+    if has_chunk:
+        args += (k_chunk, v_chunk)
+    kv = cache["kp"].shape[2]
+    if (mesh is not None and "model" in mesh.axis_names
+            and kv % mesh.shape["model"] == 0):
+        from repro.optim.compression import shard_map_fn
+        smap = shard_map_fn()
+        if smap is not None:
+            from repro.parallel import sharding
+            in_specs, out_spec = sharding.paged_attn_specs(
+                pools, chunked=has_chunk)
+            return smap(call, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_spec)(*args)
+    return call(*args)

@@ -41,8 +41,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import companding
 
 __all__ = ["MODES", "KV_MU", "PageLayout", "kv_quantize", "kv_dequantize",
-           "register_kv_backend", "kv_backends", "resolve_kv_backend",
-           "pool_init", "append", "append_chunk", "gather"]
+           "chunk_roundtrip", "tile_pad_enabled", "padded_block_geom",
+           "pad_to", "register_kv_backend", "kv_backends",
+           "resolve_kv_backend", "pool_init", "append", "append_chunk",
+           "gather"]
 
 MODES = ("paged", "paged_q8", "paged_q8c")
 
@@ -52,10 +54,40 @@ MODES = ("paged", "paged_q8", "paged_q8c")
 KV_MU = 15.0
 
 _ENV_BACKEND = "REPRO_KV_BACKEND"
+_ENV_FORCE_PAD = "REPRO_KV_FORCE_TILE_PAD"
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def tile_pad_enabled() -> bool:
+    """Should Pallas block shapes be padded to Mosaic tile boundaries?
+
+    The Mosaic validator rejects VMEM blocks whose trailing dims aren't
+    tile-aligned ((8, 128) for f32); interpret mode doesn't care.  Padding
+    therefore engages on TPU (where aligned geometries skip it entirely —
+    no copies) and via ``REPRO_KV_FORCE_TILE_PAD=1`` so CPU tests can
+    exercise the pad path."""
+    return _on_tpu() or os.environ.get(_ENV_FORCE_PAD, "") not in ("", "0")
+
+
+def padded_block_geom(block_size: int, hd: int) -> Tuple[int, int]:
+    """Tile-aligned (block_size, hd) a padded pool block uses: the token dim
+    rounds up to the f32 sublane count (8), the head dim to the lane count
+    (128)."""
+    return -(-block_size // 8) * 8, -(-hd // 128) * 128
+
+
+def pad_to(x, axis: int, mult: int):
+    """Zero-pad ``x`` so ``shape[axis]`` becomes a multiple of ``mult``
+    (identity when already aligned — no copy)."""
+    short = -x.shape[axis] % mult
+    if short == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, short)
+    return jnp.pad(x, widths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +132,25 @@ def kv_dequantize(codes, amax, mode: str, dtype) -> jax.Array:
     if mode == "paged_q8c":
         u = companding.expand(u, KV_MU)
     return (u * amax.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def chunk_roundtrip(k, v, *, mode: str, store_dtype,
+                    out_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Roundtrip a chunk's in-flight K/V through the cache codec.
+
+    Sliding-window chunk attention reads the chunk's own keys before they
+    land in the pools, so they must read back exactly what a later gather
+    would return.  For the quantized kinds that is quantize -> dequantize;
+    for ``paged`` the codec is a dtype cast — and when the pool stores the
+    compute dtype already, an identity (the arrays are returned untouched,
+    no casts)."""
+    if mode == "paged":
+        if jnp.dtype(store_dtype) == jnp.dtype(out_dtype):
+            return k, v
+        return (k.astype(store_dtype).astype(out_dtype),
+                v.astype(store_dtype).astype(out_dtype))
+    return (kv_dequantize(*kv_quantize(k, mode), mode, out_dtype),
+            kv_dequantize(*kv_quantize(v, mode), mode, out_dtype))
 
 
 def pool_init(num_blocks: int, block_size: int, n_kv: int, hd: int, dtype,
@@ -201,6 +252,21 @@ class _XlaKV:
 # Pallas backend
 # ---------------------------------------------------------------------------
 
+def _pad_pool_leaf(name: str, arr):
+    """Tile-align one pool leaf: token dim (1) to x8, head dim (kp/vp) to
+    x128.  Offsets stay valid (< block_size) and gathered pad rows are
+    sliced off before anything reads them."""
+    if name in ("kp", "vp"):
+        return pad_to(pad_to(arr, 1, 8), 3, 128)
+    return pad_to(arr, 1, 8)
+
+
+def _unpad_pool_leaf(name: str, arr, bs: int, hd: int):
+    if name in ("kp", "vp"):
+        return arr[:, :bs, :, :hd]
+    return arr[:, :bs]
+
+
 def _append_kernel(bids_ref, offs_ref, *refs, quant: bool):
     """Grid (B,): read-modify-write slot b's current block, one token row."""
     b = pl.program_id(0)
@@ -253,7 +319,12 @@ class _PallasKV:
         pools = ("kp", "vp", "ksc", "vsc") if quant else ("kp", "vp")
         ins = tuple(cache[p] for p in pools)
         b = kq.shape[0]
-        bs = cache["kp"].shape[1]
+        bs, _, hd = cache["kp"].shape[1:]
+        padded = tile_pad_enabled() and padded_block_geom(bs, hd) != (bs, hd)
+        if padded:
+            ins = tuple(_pad_pool_leaf(n, a) for n, a in zip(pools, ins))
+            news = tuple(pad_to(a, 2, 128) if a.ndim == 3 else a
+                         for a in news)
 
         def tok_spec(arr):
             nd = arr.ndim - 1
@@ -281,6 +352,9 @@ class _PallasKV:
             input_output_aliases=aliases,
             interpret=not _on_tpu(),
         )(bids, offs, *news, *ins)
+        if padded:
+            outs = tuple(_unpad_pool_leaf(n, a, bs, hd)
+                         for n, a in zip(pools, outs))
         new = dict(cache)
         new.update(dict(zip(pools, outs)))
         return new
@@ -293,6 +367,12 @@ class _PallasKV:
         ins = tuple(cache[p] for p in pools)
         b, t = bids.shape
         nb = prog_bids.shape[1]
+        bs, _, hd = cache["kp"].shape[1:]
+        padded = tile_pad_enabled() and padded_block_geom(bs, hd) != (bs, hd)
+        if padded:
+            ins = tuple(_pad_pool_leaf(n, a) for n, a in zip(pools, ins))
+            news = tuple(pad_to(a, 3, 128) if a.ndim == 4 else a
+                         for a in news)
 
         def tok_spec(arr):
             nd = arr.ndim - 1
@@ -321,6 +401,9 @@ class _PallasKV:
             interpret=not _on_tpu(),
         )(prog_bids.reshape(-1), bids.reshape(-1), offs.reshape(-1), *news,
           *ins)
+        if padded:
+            outs = tuple(_unpad_pool_leaf(n, a, bs, hd)
+                         for n, a in zip(pools, outs))
         new = dict(cache)
         new.update(dict(zip(pools, outs)))
         return new
@@ -332,6 +415,10 @@ class _PallasKV:
         quant = mode != "paged"
         pools = (("kp", "ksc", "vp", "vsc") if quant else ("kp", "vp"))
         ins = tuple(cache[p] for p in pools)
+        padded = tile_pad_enabled() and padded_block_geom(bs, hd) != (bs, hd)
+        if padded:
+            ins = tuple(_pad_pool_leaf(n, a) for n, a in zip(pools, ins))
+        bs_p, _, hd_p = ins[0].shape[1:]
 
         def pool_spec(arr):
             nd = arr.ndim - 1
@@ -340,7 +427,7 @@ class _PallasKV:
                 lambda i, j, tbl, _nd=nd:
                 (tbl[i * nb + j],) + (0,) * _nd)
 
-        out_spec = pl.BlockSpec((1, 1, bs, kv, hd),
+        out_spec = pl.BlockSpec((1, 1, bs_p, kv, hd_p),
                                 lambda i, j, tbl: (i, j, 0, 0, 0))
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -348,13 +435,15 @@ class _PallasKV:
             in_specs=[pool_spec(a) for a in ins],
             out_specs=(out_spec, out_spec),
         )
-        out_sds = jax.ShapeDtypeStruct((b, nb, bs, kv, hd), out_dtype)
+        out_sds = jax.ShapeDtypeStruct((b, nb, bs_p, kv, hd_p), out_dtype)
         gk, gv = pl.pallas_call(
             functools.partial(_gather_kernel, mode=mode, out_dtype=out_dtype),
             grid_spec=grid_spec,
             out_shape=(out_sds, out_sds),
             interpret=not _on_tpu(),
         )(table.reshape(-1), *ins)
+        if padded:
+            gk, gv = gk[:, :, :bs, :, :hd], gv[:, :, :bs, :, :hd]
         return gk.reshape(b, nb * bs, kv, hd), gv.reshape(b, nb * bs, kv, hd)
 
 

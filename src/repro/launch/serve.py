@@ -156,6 +156,15 @@ def main(argv=None):
     ap.add_argument("--kv-block-size", type=int, default=16)
     ap.add_argument("--kv-backend", default=None,
                     help="paged-cache kernel backend (pallas | xla)")
+    ap.add_argument("--attn-backend", default=None,
+                    help="paged-attention kernel backend: pallas = fused "
+                         "block-walk + dequant + flash SDPA (one HBM pass), "
+                         "xla = gather-then-SDPA oracle (default: pallas on "
+                         "TPU, xla elsewhere)")
+    ap.add_argument("--logprobs", type=int, default=0,
+                    help="attach the sampled token's logprob to every "
+                         "TokenEvent plus this many top-k alternatives "
+                         "(0 = just the sampled token's)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel size: shard packed payloads over "
                          "the model axis of a (dp, tp) mesh and run every "
@@ -191,9 +200,10 @@ def main(argv=None):
     ecfg = EngineConfig(dtype=jnp.float32, qmeta=qmeta, backend=args.backend,
                         cache_kind=args.cache,
                         block_size=args.kv_block_size,
-                        kv_backend=args.kv_backend, mesh=mesh,
+                        kv_backend=args.kv_backend,
+                        attn_backend=args.attn_backend, mesh=mesh,
                         chunk_size=args.chunk_size, s_cache=s_cache,
-                        slots=args.batch)
+                        slots=args.batch, topk_logprobs=args.logprobs)
     if args.policy == "token_budget":
         budget = args.token_budget or args.batch * max(args.chunk_size, 1)
         policy = TokenBudgetPolicy(budget)
@@ -218,7 +228,8 @@ def main(argv=None):
         n_events += 1
         if args.stream:
             tail = f" done[{ev.done_reason}]" if ev.done else ""
-            print(f"[serve] rid={ev.rid} #{ev.index}: {ev.token}{tail}")
+            lp = f" lp={ev.logprob:.3f}" if ev.logprob is not None else ""
+            print(f"[serve] rid={ev.rid} #{ev.index}: {ev.token}{lp}{tail}")
     dt = time.time() - t0
     done = engine.batcher.finished
     toks = sum(len(r.tokens) for r in done.values())

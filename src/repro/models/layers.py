@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import qtensor
 from repro.core.qtensor import QuantTensor
+from repro.kernels import attention as attn_kernels
 from repro.kernels import kv_cache
 
 Params = Dict[str, Any]
@@ -259,41 +260,15 @@ def _decode_attend(q, ck, cv, valid, cfg: ModelConfig):
     """Masked attention over gathered history.
     q [B,Sq,H,hd]; ck/cv [B,Sk,KV,hd]; valid [B,Sk] (shared by all queries)
     or [B,Sq,Sk] (per-query) bool -> out [B,Sq,H*hd]."""
-    b, sq = q.shape[:2]
-    hd = cfg.hd
-    n_rep = cfg.n_heads // cfg.n_kv_heads
-    scores = jnp.einsum("bsgrd,btgd->bgrst",
-                        q.reshape(b, sq, cfg.n_kv_heads, n_rep, hd),
-                        ck).astype(jnp.float32) * (hd ** -0.5)
-    vm = valid[:, None, None, :, :] if valid.ndim == 3 \
-        else valid[:, None, None, None, :]
-    scores = jnp.where(vm, scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
-    return jnp.einsum("bgrst,btgd->bsgrd", probs, cv).reshape(b, sq, -1)
+    return attn_kernels.masked_sdpa(q, ck, cv, valid,
+                                 n_rep=cfg.n_heads // cfg.n_kv_heads,
+                                 scale=cfg.hd ** -0.5)
 
 
-def _ring_positions(last, size: int, modulus: int):
-    """Absolute position stored at each ring index after the newest write
-    landed at position ``last`` (ring slot = pos % modulus).  Entries that
-    were never written (stored position would be negative, or index >=
-    modulus) come back negative."""
-    idx = jnp.arange(size)[None, :]
-    stored = last[:, None] - (last[:, None] - idx) % modulus
-    return jnp.where(idx < modulus, stored, -1)
-
-
-def _window_chunk_masks(pos, apos, t: int, size: int, window: int):
-    """Key-validity masks for a chunked sliding-window step.
-
-    The ring is read BEFORE the chunk's writes land (a chunk overwrites ring
-    slots that its own earlier queries still need — the token-by-token
-    oracle saw those keys), so attention runs over [pre-append ring ++
-    in-flight chunk keys].  Returns (hist [B,T,size], intra [1,T,T])."""
-    aq = apos[:, :, None]                                     # [B, T, 1]
-    stored = _ring_positions(pos - 1, size, window)[:, None, :]
-    hist = (stored >= 0) & (stored <= aq) & (stored > aq - window)
-    intra = (jnp.arange(t)[None, None, :] <= jnp.arange(t)[None, :, None])
-    return hist, intra
+# the mask math lives with the attention kernels now (the fused Pallas path
+# replicates it in-kernel); the dense-cache path here keeps using it
+_ring_positions = attn_kernels.ring_positions
+_window_chunk_masks = attn_kernels.window_chunk_masks
 
 
 def attention_chunk(p, x, cfg: ModelConfig, cache, pos, lens, *,
@@ -390,7 +365,7 @@ def paged_attn_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
                           window: int = 0, kind: str = "paged",
-                          kv_backend=None):
+                          kv_backend=None, attn_backend=None, mesh=None):
     """Variable-width serving step against the paged cache.
 
     cache holds this layer's pools (``kp``/``vp`` + scales); table [B, nb]
@@ -398,7 +373,11 @@ def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
     writes land in one ``append_chunk`` kernel call — whole blocks per step
     instead of one token at a time.  Window > 0 writes ring-style at
     ``pos % window``, touching only the slot's first ceil(window/bs) table
-    entries, exactly mirroring the dense ring buffer (T <= window)."""
+    entries, exactly mirroring the dense ring buffer (T <= window).
+
+    Attention itself dispatches through ``kernels.attention``
+    (``attn_backend``: fused Pallas block-walk vs. the gather-then-SDPA
+    oracle; ``mesh`` shard_maps it over TP head shards)."""
     b, t, _ = x.shape
     q, k, v = _chunk_qkv(p, x, cfg, pos)
     bs = cache["kp"].shape[1]
@@ -423,55 +402,44 @@ def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
     prog_bids = jnp.take_along_axis(table, pj, axis=1)
     if not window:
         prog_bids = jnp.where(pj_raw < nb_l, prog_bids, 0)
-    aq = apos[:, :, None]                                     # [B, T, 1]
     if window:
-        # read the ring BEFORE this chunk's writes land (they overwrite
-        # slots earlier queries still need), then attend over [pre-append
-        # history ++ in-flight chunk keys] — the chunk keys roundtrip the
-        # cache codec so intra-chunk reads match what a gather would return
-        ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
-                                 backend=kv_backend, out_dtype=x.dtype)
-        if kind == "paged":
-            store = cache["kp"].dtype
-            k_rt = k.astype(store).astype(x.dtype)
-            v_rt = v.astype(store).astype(x.dtype)
-        else:
-            k_rt = kv_cache.kv_dequantize(*kv_cache.kv_quantize(k, kind),
-                                          kind, x.dtype)
-            v_rt = kv_cache.kv_dequantize(*kv_cache.kv_quantize(v, kind),
-                                          kind, x.dtype)
+        # attend BEFORE this chunk's writes land (they overwrite ring slots
+        # earlier queries still need): [pre-append ring ++ in-flight chunk
+        # keys], the chunk keys roundtripped through the cache codec so
+        # intra-chunk reads match what a later gather would return
+        k_rt, v_rt = kv_cache.chunk_roundtrip(
+            k, v, mode=kind, store_dtype=cache["kp"].dtype, out_dtype=x.dtype)
+        out = attn_kernels.paged_attention(
+            q, cache, table[:, :nb_l], pos, lens, mode=kind, window=window,
+            k_chunk=k_rt, v_chunk=v_rt, kv_backend=kv_backend,
+            backend=attn_backend, mesh=mesh, out_dtype=x.dtype)
         cache = kv_cache.append_chunk(cache, k, v, bids,
                                       (p_eff % bs).astype(jnp.int32),
                                       valid_q, prog_bids,
                                       mode=kind, backend=kv_backend)
-        hist, intra = _window_chunk_masks(pos, apos, t, nb_l * bs, window)
-        kk = jnp.concatenate([ck, k_rt], axis=1)
-        vv = jnp.concatenate([cv, v_rt], axis=1)
-        valid = jnp.concatenate(
-            [hist, jnp.broadcast_to(intra, (b, t, t))], axis=-1)
-        out = _decode_attend(q, kk, vv, valid, cfg)
     else:
         cache = kv_cache.append_chunk(cache, k, v, bids,
                                       (p_eff % bs).astype(jnp.int32),
                                       valid_q, prog_bids,
                                       mode=kind, backend=kv_backend)
-        ck, cv = kv_cache.gather(cache, table[:, :nb_l], mode=kind,
-                                 backend=kv_backend, out_dtype=x.dtype)
-        valid = jnp.arange(nb_l * bs)[None, None, :] <= aq
-        out = _decode_attend(q, ck, cv, valid, cfg)
+        out = attn_kernels.paged_attention(
+            q, cache, table[:, :nb_l], pos, lens, mode=kind, window=0,
+            kv_backend=kv_backend, backend=attn_backend, mesh=mesh,
+            out_dtype=x.dtype)
     return linear(out, p["wo"], x.dtype), cache
 
 
 def paged_attention_decode(p, x, cfg: ModelConfig, cache, table, pos, *,
                            window: int = 0, kind: str = "paged",
-                           kv_backend=None):
+                           kv_backend=None, attn_backend=None, mesh=None):
     """One-token decode — the T=1 specialization of
     ``paged_attention_chunk``."""
     b = x.shape[0]
     pos_v = pos if pos.ndim else jnp.broadcast_to(pos[None], (b,))
     return paged_attention_chunk(p, x, cfg, cache, table, pos_v,
                                  jnp.ones((b,), jnp.int32), window=window,
-                                 kind=kind, kv_backend=kv_backend)
+                                 kind=kind, kv_backend=kv_backend,
+                                 attn_backend=attn_backend, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------

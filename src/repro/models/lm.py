@@ -91,9 +91,10 @@ def block_chunk(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, lens,
     absolute position; lens [B] valid slab tokens per slot; valid [B, T] the
     matching mask.  ``pages`` is None for the dense cache, else a dict with
     the shared block ``table`` [B, blocks_per_slot] plus static ``kind`` /
-    ``backend`` routing the attention layers through the paged KV kernels
-    (sliding-window layers use their layer-private ``cache["lt"]`` ring
-    table instead of the shared one)."""
+    ``backend`` / ``attn_backend`` / ``mesh`` routing the attention layers
+    through the paged KV + attention kernel registries (sliding-window
+    layers use their layer-private ``cache["lt"]`` ring table instead of
+    the shared one)."""
     if kind in ("attn", "attn_local", "attn_moe"):
         h = rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
         if pages is not None:
@@ -106,7 +107,9 @@ def block_chunk(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, lens,
                 else pages["table"]
             out, cache = layers.paged_attention_chunk(
                 p["attn"], h, cfg, cache, table, pos, lens, window=win,
-                kind=pages["kind"], kv_backend=pages["backend"])
+                kind=pages["kind"], kv_backend=pages["backend"],
+                attn_backend=pages.get("attn_backend"),
+                mesh=pages.get("mesh"))
         else:
             win = min(cfg.window, cache["k"].shape[1]) \
                 if kind == "attn_local" else 0
@@ -304,7 +307,7 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
                cfg: ModelConfig, *, engine=None, dtype=jnp.bfloat16,
                qmeta=None, unroll: int = 1, backend=None,
                cache_kind: str = "dense", kv_backend=None,
-               s_cache: Optional[int] = None, mesh=None):
+               attn_backend=None, s_cache: Optional[int] = None, mesh=None):
     """One variable-width serving step: the unified prefill/decode program.
 
     ``engine`` (a ``serving.engine.EngineConfig``, duck-typed here to keep
@@ -328,12 +331,14 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
         backend, cache_kind = engine.backend, engine.cache_kind
         kv_backend, s_cache, mesh = (engine.kv_backend, engine.s_cache,
                                      engine.mesh)
+        attn_backend = engine.attn_backend
     if qmeta:
         params = _quantized_view(params, qmeta, backend, mesh)
     pages = None
     if cache_kind != "dense":
         pages = dict(table=cache["table"], kind=cache_kind,
-                     backend=kv_backend, s_cache=s_cache)
+                     backend=kv_backend, attn_backend=attn_backend,
+                     mesh=mesh, s_cache=s_cache)
     b, t = tokens.shape
     valid = jnp.arange(t)[None] < lens[:, None]
     x = params["embed"].astype(dtype)[tokens]               # [B,T,D]
@@ -368,7 +373,8 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
 def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                 *, engine=None, dtype=jnp.bfloat16, qmeta=None,
                 unroll: int = 1, backend=None, cache_kind: str = "dense",
-                kv_backend=None, s_cache: Optional[int] = None, mesh=None):
+                kv_backend=None, attn_backend=None,
+                s_cache: Optional[int] = None, mesh=None):
     """One-token decode — the T=1 specialization of ``chunk_step``.
     token [B] int32, pos [B] (or scalar) int32 -> (logits [B, V], cache).
 
@@ -388,4 +394,4 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                       jnp.ones((b,), jnp.int32), cfg, dtype=dtype,
                       qmeta=qmeta, unroll=unroll, backend=backend,
                       cache_kind=cache_kind, kv_backend=kv_backend,
-                      s_cache=s_cache, mesh=mesh)
+                      attn_backend=attn_backend, s_cache=s_cache, mesh=mesh)

@@ -283,6 +283,27 @@ def cache_specs_tree(cache, mesh: Mesh, cfg=None):
     return jax.tree_util.tree_map_with_path(spec_for, cache)
 
 
+def paged_attn_specs(pools, *, chunked: bool = False):
+    """shard_map specs for the fused paged-attention call
+    (``kernels.attention.paged_attention``).
+
+    Heads shard over "model": q [B, T, H, hd] and the pools' KV-head dim
+    (kp/vp [nb, bs, KV, hd], ksc/vsc [nb, bs, KV]) split, the block table /
+    positions / lens replicate (matching ``cache_specs_tree``), and the
+    in-flight chunk keys [B, T, KV, hd] split with the pools.  Each shard
+    owns whole (kv-head, query-group) pairs, so no collective is needed;
+    the [B, T, H*hd] output concatenates head shards along its flattened
+    last dim.  Returns (in_specs, out_spec) matching the positional args
+    (q, pools, table, pos, lens[, k_chunk, v_chunk])."""
+    head4 = P(None, None, "model", None)
+    pool_specs = {n: head4 if pools[n].ndim == 4 else P(None, None, "model")
+                  for n in pools}
+    in_specs = (head4, pool_specs, P(None, None), P(None), P(None))
+    if chunked:
+        in_specs = in_specs + (head4, head4)
+    return in_specs, P(None, None, "model")
+
+
 def logits_spec(vocab: int, mesh: Mesh, batch: int):
     axes = dp_axes(mesh)
     n = dp_size(mesh)

@@ -54,14 +54,18 @@ class EngineConfig:
     Attention cache: ``cache_kind`` (dense | paged | paged_q8 | paged_q8c),
     ``block_size`` / ``num_blocks`` (paged pool geometry; ``num_blocks``
     None = planned from ``s_cache`` x ``slots``), ``kv_backend`` (name from
-    ``kernels.kv_cache.kv_backends()``), ``s_cache`` (cache positions per
-    slot; None lets model-level calls infer capacity, the scheduler defaults
-    it to 64).
+    ``kernels.kv_cache.kv_backends()``), ``attn_backend`` (name from
+    ``kernels.attention.attn_backends()``: ``pallas`` = fused block-walk +
+    dequant + flash SDPA, ``xla`` = gather-then-SDPA; None = platform
+    default), ``s_cache`` (cache positions per slot; None lets model-level
+    calls infer capacity, the scheduler defaults it to 64).
 
     Scheduling: ``slots`` (concurrent batch lanes), ``chunk_size`` (max
     prompt tokens one iteration may consume per slot), ``pad_token``,
     ``stop_tokens`` (engine-wide default stop ids, merged with each
-    request's ``SamplingParams.stop_token_ids``).
+    request's ``SamplingParams.stop_token_ids``), ``topk_logprobs`` (attach
+    the top-k alternative logprobs to every ``TokenEvent``; the sampled
+    token's own logprob always rides along).
     """
     # model execution
     dtype: Any = jnp.bfloat16
@@ -74,23 +78,34 @@ class EngineConfig:
     block_size: int = 16
     num_blocks: Optional[int] = None
     kv_backend: Optional[str] = None
+    attn_backend: Optional[str] = None
     s_cache: Optional[int] = None
     # scheduling
     slots: int = 4
     chunk_size: int = 1
     pad_token: int = 0
     stop_tokens: Tuple[int, ...] = ()
+    topk_logprobs: int = 0
 
     def __post_init__(self):
         if self.cache_kind not in kvcache.CACHE_KINDS:
             raise ValueError(f"unknown cache_kind {self.cache_kind!r}; "
                              f"available: {kvcache.CACHE_KINDS}")
+        if self.attn_backend is not None:
+            from repro.kernels.attention import attn_backends
+            if self.attn_backend not in attn_backends():
+                raise ValueError(
+                    f"unknown attn_backend {self.attn_backend!r}; "
+                    f"available: {attn_backends()}")
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
         if self.chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
         if self.block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.topk_logprobs < 0:
+            raise ValueError(f"topk_logprobs must be >= 0, "
+                             f"got {self.topk_logprobs}")
         object.__setattr__(self, "stop_tokens",
                            tuple(int(t) for t in self.stop_tokens))
 
@@ -100,12 +115,20 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class TokenEvent:
-    """One generated token, surfaced per engine iteration per live slot."""
+    """One generated token, surfaced per engine iteration per live slot.
+
+    ``logprob`` is the sampled token's log-probability under the model
+    distribution (raw chunk-final logits, independent of temperature /
+    top-k / top-p), gathered in-graph so only scalars cross the host
+    boundary.  ``top_logprobs`` carries the ``EngineConfig.topk_logprobs``
+    most likely (token_id, logprob) alternatives, or None when disabled."""
     rid: int
     token: int
     index: int                      # position in the request's output stream
     done: bool = False
     done_reason: Optional[str] = None
+    logprob: Optional[float] = None
+    top_logprobs: Optional[Tuple[Tuple[int, float], ...]] = None
 
 
 class RequestHandle:

@@ -29,7 +29,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingParams", "sample_tokens"]
+__all__ = ["SamplingParams", "sample_tokens", "token_logprobs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,3 +131,27 @@ def sample_tokens(logits, seeds, idx, temps, top_ks, top_ps):
     sampled = jax.lax.cond(jnp.any(temps > 0), _sampled,
                            lambda _: greedy_tok, operand=None)
     return jnp.where(temps > 0, sampled, greedy_tok)
+
+
+def token_logprobs(logits, tokens, n_top: int = 0):
+    """In-graph logprob gather for the sampled tokens.
+
+    logits [B, V] raw chunk-final logits; tokens [B] i32 the sampled ids;
+    ``n_top`` (static) adds the top-k alternatives.  Returns (lp [B] f32,
+    top_vals [B, n_top] f32, top_ids [B, n_top] i32) — still ``[B]``-scale,
+    so riding the existing host boundary costs nothing vocab-sized.
+
+    Reported logprobs are under the MODEL distribution (log-softmax of the
+    raw logits, before temperature / top-k / top-p shaping): they stay
+    comparable across sampling params and match teacher-forced NLL.  One
+    logsumexp reduction, no [B, V] softmax materialization."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, tokens[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    lp = picked - lse
+    b = logits.shape[0]
+    if n_top:
+        tv, ti = jax.lax.top_k(logits, n_top)
+        return lp, tv - lse[:, None], ti.astype(jnp.int32)
+    return (lp, jnp.zeros((b, 0), jnp.float32), jnp.zeros((b, 0), jnp.int32))

@@ -50,7 +50,8 @@ from repro.models import registry
 from repro.serving import kvcache
 from repro.serving.engine import EngineConfig, TokenEvent
 from repro.serving.policy import FCFSPolicy, SchedulerPolicy
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import (SamplingParams, sample_tokens,
+                                    token_logprobs)
 
 __all__ = ["Request", "ContinuousBatcher",
            "DONE_LENGTH", "DONE_STOP", "DONE_CACHE_FULL"]
@@ -94,7 +95,7 @@ def _local_ring(cfg: ModelConfig, s_cache: int) -> Optional[int]:
 # handled separately: it shapes default_params, not the config)
 _LEGACY_KEYS = ("slots", "s_cache", "dtype", "qmeta", "backend", "pad_token",
                 "cache_kind", "block_size", "num_blocks", "kv_backend",
-                "mesh", "chunk_size")
+                "attn_backend", "mesh", "chunk_size")
 _LEGACY_DEFAULT_S_CACHE = 64
 _LEGACY_DEFAULT_DTYPE = jnp.float32
 
@@ -180,7 +181,10 @@ class ContinuousBatcher:
         def _step_fn(p, c, toks, poss, lens, seeds, sidx, temps, tks, tps):
             logits, c = registry.chunk_step(p, c, toks, poss, lens, cfg,
                                             engine=ecfg)
-            return sample_tokens(logits, seeds, sidx, temps, tks, tps), c
+            toks_out = sample_tokens(logits, seeds, sidx, temps, tks, tps)
+            lp, tv, ti = token_logprobs(logits, toks_out,
+                                        n_top=ecfg.topk_logprobs)
+            return (toks_out, lp, tv, ti), c
 
         self._step = jax.jit(_step_fn)
 
@@ -267,11 +271,13 @@ class ContinuousBatcher:
                 self.pages.ensure(i, s.pos + take - 1)
         if self.pages is not None and self.pages.dirty:
             self.cache["table"] = self.pages.device_table()
-        nxt, self.cache = self._step(
+        (nxt, lps, tvs, tis), self.cache = self._step(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
             jnp.asarray(lens), jnp.asarray(seeds), jnp.asarray(sidx),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
         nxt = np.asarray(nxt)
+        lps, tvs, tis = np.asarray(lps), np.asarray(tvs), np.asarray(tis)
+        n_top = tvs.shape[1]
         events: List[TokenEvent] = []
         for i, s in enumerate(self.slots):
             if s.free or lens[i] == 0:
@@ -297,9 +303,13 @@ class ContinuousBatcher:
                 self.slots[i] = _Slot()        # slot recycled at pos 0
                 if self.pages is not None:
                     self.pages.release(i)      # blocks back to the pool
+            top = tuple((int(tis[i, k]), float(tvs[i, k]))
+                        for k in range(n_top)) if n_top else None
             events.append(TokenEvent(rid=r.rid, token=tok,
                                      index=len(r.tokens) - 1, done=r.done,
-                                     done_reason=r.done_reason))
+                                     done_reason=r.done_reason,
+                                     logprob=float(lps[i]),
+                                     top_logprobs=top))
         return events
 
     def _done_reason(self, r: Request, s: _Slot, tok: int) -> Optional[str]:

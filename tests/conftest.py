@@ -1,0 +1,19 @@
+"""Shared pytest config.
+
+The autouse fixture below clears JAX's trace/executable caches after each
+test MODULE.  The suite compiles hundreds of distinct programs across the
+families x cache_kinds x backends matrix; on some CPU containers the XLA
+compiler segfaults deep into a single long-lived process (reproducible at
+the seed commit, mid-`backend_compile`, independent of which tests ran) —
+dropping the accumulated executables between modules keeps the per-process
+compile history short without changing any test's semantics.  Within a
+module, caches persist, so compile-count spy tests are unaffected.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

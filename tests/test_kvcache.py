@@ -330,3 +330,91 @@ def test_window_caps_local_layer_accounting():
     lengths = kvcache.attn_layer_lengths(cfg, 8192)
     assert set(lengths) == {min(cfg.window, 8192)}
     assert len(lengths) == cfg.n_repeats  # one local-attn layer per repeat
+
+
+# ---------------------------------------------------------------------------
+# tile padding (non-(8,128)-aligned block shapes) + chunk codec roundtrip
+# ---------------------------------------------------------------------------
+
+def test_padded_block_geom_units():
+    assert kvk.padded_block_geom(12, 96) == (16, 128)
+    assert kvk.padded_block_geom(8, 128) == (8, 128)
+    assert kvk.padded_block_geom(16, 256) == (16, 256)
+    # pad_to is the identity (same object) when already aligned
+    x = jnp.zeros((2, 8, 4))
+    assert kvk.pad_to(x, 1, 8) is x
+    assert kvk.pad_to(x, 1, 16).shape == (2, 16, 4)
+
+
+@pytest.mark.parametrize("mode", PAGED_KINDS)
+def test_kv_kernel_parity_unaligned_blocks(mode, monkeypatch):
+    """Regression: pallas append/append_chunk/gather on block_size=12,
+    hd=96 (neither a multiple of the (8, 128) f32 tile) with forced tile
+    padding must match the xla backend exactly."""
+    monkeypatch.setenv("REPRO_KV_FORCE_TILE_PAD", "1")
+    rng = np.random.default_rng(9)
+    b, bps, bs, kv, hd, t = 2, 2, 12, 2, 96, 5
+    table = _disjoint_table(rng, b, bps)
+    caches = {be: kvk.pool_init(1 + b * bps, bs, kv, hd, jnp.float32, mode)
+              for be in KV_BACKENDS}
+    # single-token appends into the first block
+    for tok in range(3):
+        k = jnp.asarray(rng.normal(size=(b, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, kv, hd)), jnp.float32)
+        for be in KV_BACKENDS:
+            caches[be] = kvk.append(caches[be], k, v, table[:, 0],
+                                    jnp.full((b,), tok, jnp.int32),
+                                    mode=mode, backend=be)
+    # chunked append straddling into the second block, with a pad slot
+    k = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, hd)), jnp.float32)
+    idx = 3 + np.arange(t)
+    bids = jnp.asarray(np.stack([np.asarray(table[s, idx // bs])
+                                 for s in range(b)]), jnp.int32)
+    offs = jnp.asarray(np.broadcast_to(idx % bs, (b, t)), jnp.int32)
+    valid = jnp.asarray([[True] * t, [True] * (t - 1) + [False]])
+    for be in KV_BACKENDS:
+        caches[be] = kvk.append_chunk(caches[be], k, v, bids, offs, valid,
+                                      table, mode=mode, backend=be)
+    outs = {be: kvk.gather(caches[be], table, mode=mode, backend=be,
+                           out_dtype=jnp.float32) for be in KV_BACKENDS}
+    for i in range(2):
+        np.testing.assert_allclose(np.asarray(outs["xla"][i]),
+                                   np.asarray(outs["pallas"][i]), atol=1e-6)
+    assert outs["pallas"][0].shape == (b, bps * bs, kv, hd)
+
+
+def test_chunk_roundtrip_paged_is_identity():
+    """cache_kind="paged" stores raw values: the in-flight chunk keys need
+    no quantize->dequantize roundtrip, and the helper must return the very
+    same arrays (no copy, no cast) when dtypes already match."""
+    k = jnp.ones((2, 3, 2, 8), jnp.float32)
+    v = jnp.zeros((2, 3, 2, 8), jnp.float32)
+    rk, rv = kvk.chunk_roundtrip(k, v, mode="paged",
+                                 store_dtype=jnp.float32,
+                                 out_dtype=jnp.float32)
+    assert rk is k and rv is v
+    # differing store dtype: cast chain, still no quantization error
+    rk2, _ = kvk.chunk_roundtrip(k, v, mode="paged",
+                                 store_dtype=jnp.bfloat16,
+                                 out_dtype=jnp.float32)
+    assert rk2.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(rk2), np.asarray(k))
+
+
+def test_chunk_roundtrip_quantized_matches_cache_codec():
+    """The quantized kinds must see the chunk keys exactly as the cache
+    would return them (quantize -> dequantize), or the window path's
+    in-flight keys would disagree with their post-append reads."""
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(2, 3, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 3, 2, 8)), jnp.float32)
+    for mode in ("paged_q8", "paged_q8c"):
+        rk, rv = kvk.chunk_roundtrip(k, v, mode=mode,
+                                     store_dtype=jnp.int8,
+                                     out_dtype=jnp.float32)
+        codes, amax = kvk.kv_quantize(k, mode)
+        want = kvk.kv_dequantize(codes, amax, mode, jnp.float32)
+        np.testing.assert_allclose(np.asarray(rk), np.asarray(want),
+                                   atol=1e-6)
+        assert float(jnp.abs(rk - k).max()) > 1e-6  # not the identity
