@@ -1,8 +1,12 @@
-"""Shared benchmark harness: tiny trained LM + timing + CSV emission."""
+"""Shared benchmark harness: tiny trained LM + timing + CSV emission.
+
+Timing goes through ``repro.serving.metrics.Timer`` (the same monotonic
+clock the serving path records with) and ``best_of`` (best-of-N retry: the
+min / max of N full runs, shaving OS-scheduling noise off steady-state
+numbers) — the per-benchmark ad-hoc loops all route here."""
 from __future__ import annotations
 
 import functools
-import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -16,6 +20,7 @@ from repro.data.synthetic import make_batch, markov_tokens, token_batches
 from repro.launch.train import make_train_step, opt_init
 from repro.models import registry
 from repro.optim import AdamWConfig
+from repro.serving.metrics import Timer
 
 ROWS: List[str] = []
 
@@ -29,11 +34,20 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    with Timer() as tm:
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    return tm.elapsed / iters * 1e6  # us
+
+
+def best_of(fn: Callable, trials: int = 3, key=None, pick=min):
+    """Best-of-N measurement: run ``fn()`` ``trials`` times and keep the
+    best result — ``pick=min`` for latencies (default), ``pick=max`` for
+    throughputs; ``key`` selects the comparison field when ``fn`` returns a
+    tuple (the whole best tuple is returned)."""
+    results = [fn() for _ in range(trials)]
+    return pick(results, key=key) if key is not None else pick(results)
 
 
 @functools.lru_cache(maxsize=1)
@@ -76,8 +90,7 @@ def quantize_and_ppl(method: str, bits: float, *, d: int = 8,
     h_acc = calibration_h() if use_h else None
     qcfg = GLVQConfig(d=d, bits=int(np.ceil(bits)), iters=iters, lr=1e-2,
                       group_size=32, **(qcfg_extra or {}))
-    t0 = time.perf_counter()
+    tm = Timer()
     q, _ = quantize_model(params, cfg, method=method, qcfg=qcfg,
                           h_acc=h_acc, bits=bits)
-    dt = time.perf_counter() - t0
-    return eval_ppl(q, cfg), dt
+    return eval_ppl(q, cfg), tm.total

@@ -38,16 +38,44 @@ REPRO_ATTN_BACKEND=pallas \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_attention_kernel.py -k "not subprocess"
 
-# ServingEngine smoke: the new front door end to end — EngineConfig,
-# in-graph sampling (temperature/top-k/seed), streamed TokenEvents, stop
-# tokens, and the Sarathi token-budget packer.
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
-    --requests 3 --batch 2 --prompt-len 9 --max-new 4 --chunk-size 4 \
-    --policy token_budget --token-budget 6 \
-    --temperature 0.8 --top-k 8 --seed 0 --stop-token 3 --stream
+# Timing/logging lint: no new bare print( / time.time() in src/repro —
+# Timer + log_event (repro.serving.metrics) are the sanctioned spellings.
+python scripts/lint_timing.py
 
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
+
+# ServingEngine smoke: the front door end to end — EngineConfig, in-graph
+# sampling (temperature/top-k/seed), streamed TokenEvents, stop tokens, the
+# Sarathi token-budget packer, and the telemetry subsystem (metrics snapshot
+# + per-iteration trace log).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --requests 3 --batch 2 --prompt-len 9 --max-new 4 --chunk-size 4 \
+    --policy token_budget --token-budget 6 \
+    --temperature 0.8 --top-k 8 --seed 0 --stop-token 3 --stream \
+    --metrics-json "$SMOKE_DIR/metrics.json" \
+    --trace-log "$SMOKE_DIR/trace.jsonl"
+# metrics smoke: the snapshot must carry the core serving series and a
+# non-empty TTFT histogram (every request got a first token)
+python - "$SMOKE_DIR/metrics.json" "$SMOKE_DIR/trace.jsonl" <<'PYEOF'
+import json, sys
+snap = json.load(open(sys.argv[1]))
+for key, name in (("counters", "serving_requests_submitted_total"),
+                  ("counters", "serving_requests_finished_total"),
+                  ("counters", "serving_tokens_generated_total"),
+                  ("counters", "serving_compile_events_total"),
+                  ("histograms", "serving_ttft_seconds"),
+                  ("histograms", "serving_queue_wait_seconds"),
+                  ("histograms", "serving_inter_token_seconds"),
+                  ("gauges", "serving_slab_padded_fraction")):
+    assert name in snap[key], f"metrics snapshot missing {key}/{name}"
+ttft = snap["histograms"]["serving_ttft_seconds"][""]
+assert ttft["count"] == 3, f"expected 3 TTFT samples, got {ttft['count']}"
+n = sum(1 for _ in open(sys.argv[2]))
+assert n > 0, "trace log is empty"
+print(f"[ci] metrics smoke OK ({ttft['count']} TTFT samples, "
+      f"{n} trace records)")
+PYEOF
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
     --smoke --out "$SMOKE_DIR/BENCH_engine.json"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

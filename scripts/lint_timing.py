@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Repo lint: no new bare ``print(`` / ``time.time()`` in ``src/repro``.
+
+``repro.serving.metrics`` is the sanctioned timing + CLI-logging surface
+(``Timer`` for spans, ``log_event`` for structured ``[tag] k=v`` lines,
+histograms for distributions); ``repro.serving.trace`` owns the wall-clock
+``ts`` stamp of the JSONL event log.  Everything else should route through
+them — this lint pins the existing CLI surfaces at their current counts so
+new ad-hoc prints / timers fail CI instead of accreting.
+
+Run:  python scripts/lint_timing.py        (exit 1 on violation)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+
+# the telemetry modules themselves: log_event's print and TraceLog's
+# wall-clock ts stamp live here by design
+EXEMPT = {"serving/metrics.py", "serving/trace.py"}
+
+# existing surfaces, pinned at their current counts — shrinking is fine,
+# growing fails.  print: CLI drivers' non-timing output (tables, stream
+# echo); time.time: the checkpoint manifest's wall-clock stamp (a real
+# timestamp, not a duration — perf_counter would be wrong there).
+ALLOWED = {
+    "launch/roofline.py": {"print": 2, "time.time": 0},
+    "launch/dryrun.py": {"print": 1, "time.time": 0},
+    "launch/serve.py": {"print": 7, "time.time": 0},
+    "ckpt/manager.py": {"print": 0, "time.time": 1},
+}
+
+PATTERNS = {
+    "print": re.compile(r"(?<![\w.])print\("),
+    "time.time": re.compile(r"\btime\.time\(\)"),
+}
+
+
+def main() -> int:
+    bad = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC).as_posix()
+        if rel in EXEMPT:
+            continue
+        text = path.read_text(encoding="utf-8")
+        budget = ALLOWED.get(rel, {})
+        for name, pat in PATTERNS.items():
+            n = len(pat.findall(text))
+            cap = budget.get(name, 0)
+            if n > cap:
+                bad.append(f"src/repro/{rel}: {n} bare {name}( calls "
+                           f"(allowed {cap}) — use repro.serving.metrics."
+                           f"{'log_event' if name == 'print' else 'Timer'} "
+                           "instead")
+    if bad:
+        print("\n".join(["[lint_timing] FAIL:"] + [f"  {b}" for b in bad]))
+        return 1
+    print("[lint_timing] ok: no stray print()/time.time() in src/repro")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -421,14 +421,16 @@ def paged_attention(q, cache, table, pos, lens, *, mode: str,
     if has_chunk:
         args += (k_chunk, v_chunk)
     kv = cache["kp"].shape[2]
-    if (mesh is not None and "model" in mesh.axis_names
-            and kv % mesh.shape["model"] == 0):
-        from repro.optim.compression import shard_map_fn
-        smap = shard_map_fn()
-        if smap is not None:
-            from repro.parallel import sharding
-            in_specs, out_spec = sharding.paged_attn_specs(
-                pools, chunked=has_chunk)
-            return smap(call, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_spec)(*args)
-    return call(*args)
+    from repro.serving import trace      # lazy: tracing-time only, no cycle
+    with trace.annotate(f"paged_attention[{mode}]"):
+        if (mesh is not None and "model" in mesh.axis_names
+                and kv % mesh.shape["model"] == 0):
+            from repro.optim.compression import shard_map_fn
+            smap = shard_map_fn()
+            if smap is not None:
+                from repro.parallel import sharding
+                in_specs, out_spec = sharding.paged_attn_specs(
+                    pools, chunked=has_chunk)
+                return smap(call, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_spec)(*args)
+        return call(*args)

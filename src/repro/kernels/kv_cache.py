@@ -456,13 +456,15 @@ def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
     """Write one token per slot.  k_new/v_new [B, KV, hd]; bids/offs [B] int32
     (the slot's current block id / in-block offset).  Returns the new cache."""
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
-    if mode == "paged":
-        store = cache["kp"].dtype
-        return be.append(cache, k_new.astype(store), v_new.astype(store),
-                         None, None, bids, offs)
-    kq, ks = kv_quantize(k_new, mode)
-    vq, vs = kv_quantize(v_new, mode)
-    return be.append(cache, kq, vq, ks, vs, bids, offs)
+    from repro.serving import trace      # lazy: tracing-time only, no cycle
+    with trace.annotate(f"kv_append[{mode}]"):
+        if mode == "paged":
+            store = cache["kp"].dtype
+            return be.append(cache, k_new.astype(store), v_new.astype(store),
+                             None, None, bids, offs)
+        kq, ks = kv_quantize(k_new, mode)
+        vq, vs = kv_quantize(v_new, mode)
+        return be.append(cache, kq, vq, ks, vs, bids, offs)
 
 
 def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
@@ -479,16 +481,18 @@ def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
     Returns the new cache."""
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
     num_blocks = cache["kp"].shape[0]
-    bids = jnp.where(valid, bids, num_blocks).astype(jnp.int32)
-    offs = offs.astype(jnp.int32)
-    if mode == "paged":
-        store = cache["kp"].dtype
-        return be.append_chunk(cache, k_new.astype(store),
-                               v_new.astype(store), None, None, bids, offs,
-                               prog_bids)
-    kq, ks = kv_quantize(k_new, mode)
-    vq, vs = kv_quantize(v_new, mode)
-    return be.append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids)
+    from repro.serving import trace      # lazy: tracing-time only, no cycle
+    with trace.annotate(f"kv_append_chunk[{mode}]"):
+        bids = jnp.where(valid, bids, num_blocks).astype(jnp.int32)
+        offs = offs.astype(jnp.int32)
+        if mode == "paged":
+            store = cache["kp"].dtype
+            return be.append_chunk(cache, k_new.astype(store),
+                                   v_new.astype(store), None, None, bids,
+                                   offs, prog_bids)
+        kq, ks = kv_quantize(k_new, mode)
+        vq, vs = kv_quantize(v_new, mode)
+        return be.append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids)
 
 
 def gather(cache: Dict[str, jax.Array], table, *, mode: str,
@@ -497,4 +501,6 @@ def gather(cache: Dict[str, jax.Array], table, *, mode: str,
     """Read blocks ``table`` [B, nb] back as dense dequantized history:
     (k, v) each [B, nb * block_size, KV, hd] in logical token order."""
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
-    return be.gather(cache, table, mode, out_dtype)
+    from repro.serving import trace      # lazy: tracing-time only, no cycle
+    with trace.annotate(f"kv_gather[{mode}]"):
+        return be.gather(cache, table, mode, out_dtype)

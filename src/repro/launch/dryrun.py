@@ -16,7 +16,6 @@ tests or benchmarks (they want the real 1-CPU backend).
 import argparse
 import json
 import re
-import time
 import traceback
 from pathlib import Path
 
@@ -27,6 +26,7 @@ from repro.configs import ARCHS, ASSIGNED, get_config
 from repro.configs.base import SHAPES
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models import registry
+from repro.serving.metrics import Timer, log_event
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -207,14 +207,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = 512 if multi_pod else 256
-    t0 = time.time()
+    tm = Timer()
     kw = dict(quant_bits=quant_bits, quant_d=quant_d, zero=zero, remat=remat,
               grad_compression=grad_compression)
     try:
         lowered = _lower_one(cfg, shape, mesh, unroll=1, **kw)
-        t_lower = time.time() - t0
+        t_lower = tm.lap()
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = tm.lap()
         a1 = _analyses(lowered, compiled)
         # second compile at unroll=2 to expose the per-scan-repeat cost
         lowered2 = _lower_one(cfg, shape, mesh, unroll=2, **kw)
@@ -297,7 +297,7 @@ def main(argv=None):
                 elif st == "error":
                     extra = rec["error"][:160]
                 print(f"[dryrun] {tag:55s} {st:7s} {extra}", flush=True)
-    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    log_event("dryrun", ok=n_ok, skipped=n_skip, errors=n_err)
     return 1 if n_err else 0
 
 

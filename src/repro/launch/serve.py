@@ -4,8 +4,6 @@ with AOT lowering entry points used by the multi-pod dry-run, plus the
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -107,10 +105,13 @@ def lower_prefill(cfg: ModelConfig, mesh: Mesh, batch_sds, *,
 # ---------------------------------------------------------------------------
 
 def main(argv=None):
+    import json
+
     import numpy as np
 
-    from repro.serving import kvcache
+    from repro.serving import kvcache, metrics
     from repro.serving.engine import ServingEngine
+    from repro.serving.metrics import log_event
     from repro.serving.policy import FCFSPolicy, TokenBudgetPolicy
     from repro.serving.sampling import SamplingParams
 
@@ -169,6 +170,24 @@ def main(argv=None):
                     help="tensor-parallel size: shard packed payloads over "
                          "the model axis of a (dp, tp) mesh and run every "
                          "quantized matmul per-shard (shard_map)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus text) + /metrics.json "
+                         "on this port from a daemon thread (0 = pick free)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the final metrics snapshot as JSON here "
+                         "('-' = stdout)")
+    ap.add_argument("--no-metrics", action="store_true",
+                    help="disable telemetry recording entirely "
+                         "(EngineConfig.metrics=False)")
+    ap.add_argument("--trace-log", default=None, metavar="PATH",
+                    help="append one JSONL record per engine iteration "
+                         "(slab shape, padding, step timings, events)")
+    ap.add_argument("--trace", action="store_true",
+                    help="xprof trace annotations around chunk_step / "
+                         "paged_attention / kv appends + host spans")
+    ap.add_argument("--sync-timing", action="store_true",
+                    help="block_until_ready inside the per-iteration "
+                         "dispatch timer (honest latencies, no pipelining)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -203,7 +222,9 @@ def main(argv=None):
                         kv_backend=args.kv_backend,
                         attn_backend=args.attn_backend, mesh=mesh,
                         chunk_size=args.chunk_size, s_cache=s_cache,
-                        slots=args.batch, topk_logprobs=args.logprobs)
+                        slots=args.batch, topk_logprobs=args.logprobs,
+                        metrics=not args.no_metrics, trace=args.trace,
+                        sync_timing=args.sync_timing)
     if args.policy == "token_budget":
         budget = args.token_budget or args.batch * max(args.chunk_size, 1)
         policy = TokenBudgetPolicy(budget)
@@ -211,7 +232,13 @@ def main(argv=None):
               f"widths={policy.program_widths(args.chunk_size)}")
     else:
         policy = FCFSPolicy()
-    engine = ServingEngine(params, cfg, ecfg, policy=policy)
+    engine = ServingEngine(params, cfg, ecfg, policy=policy,
+                           trace_log=args.trace_log)
+    http_server = None
+    if args.metrics_port is not None:
+        http_server = metrics.serve_http(engine.metrics, args.metrics_port)
+        log_event("serve", metrics_port=http_server.server_address[1],
+                  endpoints="/metrics,/metrics.json")
     if args.cache != "dense":
         print(f"[serve] cache={args.cache} block_size={args.kv_block_size}")
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
@@ -222,7 +249,7 @@ def main(argv=None):
     for i in range(args.requests):
         prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
         engine.submit(prompt, sp, rid=i)
-    t0 = time.time()
+    tm = metrics.Timer()
     n_events = 0
     for ev in engine.stream():
         n_events += 1
@@ -230,7 +257,7 @@ def main(argv=None):
             tail = f" done[{ev.done_reason}]" if ev.done else ""
             lp = f" lp={ev.logprob:.3f}" if ev.logprob is not None else ""
             print(f"[serve] rid={ev.rid} #{ev.index}: {ev.token}{lp}{tail}")
-    dt = time.time() - t0
+    dt = tm.total
     done = engine.batcher.finished
     toks = sum(len(r.tokens) for r in done.values())
     assert toks == n_events, "every generated token must stream as an event"
@@ -239,10 +266,20 @@ def main(argv=None):
         reasons[r.done_reason] = reasons.get(r.done_reason, 0) + 1
     mode = "greedy" if sp.greedy else (
         f"T={sp.temperature} top_k={sp.top_k} top_p={sp.top_p}")
-    print(f"[serve] {len(done)} requests (prompt {args.prompt_len}, "
-          f"chunk {engine.batcher.chunk}, {mode}): {toks} tokens in "
-          f"{dt:.2f}s ({toks / dt:.1f} tok/s; CPU, tiny model); "
-          f"done reasons: {reasons}")
+    log_event("serve", requests=len(done), prompt_len=args.prompt_len,
+              chunk=engine.batcher.chunk, mode=mode, tokens=toks,
+              elapsed_s=dt, tok_per_s=toks / dt,
+              done_reasons=reasons)
+    if args.metrics_json:
+        snap = json.dumps(engine.metrics_snapshot(), indent=1)
+        if args.metrics_json == "-":
+            print(snap)
+        else:
+            with open(args.metrics_json, "w", encoding="utf-8") as f:
+                f.write(snap + "\n")
+            log_event("serve", metrics_json=args.metrics_json)
+    if http_server is not None:
+        http_server.shutdown()
 
 
 if __name__ == "__main__":

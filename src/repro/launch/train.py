@@ -4,7 +4,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -17,6 +16,7 @@ from repro.models import registry
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import ef_round
 from repro.parallel import sharding
+from repro.serving.metrics import Timer, log_event
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
@@ -127,23 +127,22 @@ def main(argv=None):
     start = mgr.latest_step()
     if start is not None:
         params, opt_state = mgr.restore(start, (params, opt_state))
-        print(f"[train] resumed from step {start}")
+        log_event("train", resumed_from_step=start)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False,
                                       dtype=jnp.float32))
-    t0 = time.time()
+    tm = Timer()
     for step, batch in enumerate(token_batches(cfg, args.batch, args.seq,
                                                args.steps, seed=0)):
         if start is not None and step <= start:
             continue
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         if step % 10 == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"({(time.time()-t0):.1f}s)")
+            log_event("train", step=step, loss=float(metrics["loss"]),
+                      lr=float(metrics["lr"]), elapsed_s=tm.total)
         if step and step % args.ckpt_every == 0:
             mgr.save(step, (params, opt_state))
     mgr.save(args.steps - 1, (params, opt_state))
-    print("[train] done")
+    log_event("train", done=True, total_s=tm.total)
 
 
 if __name__ == "__main__":

@@ -96,7 +96,10 @@ def chunk_step(params, cache, tokens, pos, lens, cfg: ModelConfig, *,
         raise ValueError(f"{cfg.arch}: the encoder-decoder family has no "
                          "chunked serving step (its decoder contexts are "
                          "short; drive it token-by-token via decode_step)")
-    return lm.chunk_step(params, cache, tokens, pos, lens, cfg, engine=engine)
+    from repro.serving import trace      # lazy: tracing-time only, no cycle
+    with trace.annotate("chunk_step"):
+        return lm.chunk_step(params, cache, tokens, pos, lens, cfg,
+                             engine=engine)
 
 
 def cache_init(cfg: ModelConfig, batch: int, s_cache: Optional[int] = None,

@@ -66,6 +66,16 @@ class EngineConfig:
     request's ``SamplingParams.stop_token_ids``), ``topk_logprobs`` (attach
     the top-k alternative logprobs to every ``TokenEvent``; the sampled
     token's own logprob always rides along).
+
+    Observability: ``metrics`` (record request/iteration/cache telemetry
+    into the batcher's ``serving.metrics.MetricsRegistry``; host-side only,
+    on by default — ``metrics=False`` skips every recording call and leaves
+    the jitted step byte-identical), ``trace`` (turn on
+    ``serving.trace`` xprof annotations: named scopes around ``chunk_step``
+    / ``paged_attention`` / ``append_chunk`` dispatch plus host spans per
+    engine iteration), ``sync_timing`` (``block_until_ready`` inside the
+    per-iteration dispatch timer, trading pipelining for honest host-side
+    step latencies).
     """
     # model execution
     dtype: Any = jnp.bfloat16
@@ -86,6 +96,10 @@ class EngineConfig:
     pad_token: int = 0
     stop_tokens: Tuple[int, ...] = ()
     topk_logprobs: int = 0
+    # observability
+    metrics: bool = True
+    trace: bool = False
+    sync_timing: bool = False
 
     def __post_init__(self):
         if self.cache_kind not in kvcache.CACHE_KINDS:
@@ -193,19 +207,37 @@ class ServingEngine:
 
     def __init__(self, params, cfg, engine: Optional[EngineConfig] = None, *,
                  policy: Optional[SchedulerPolicy] = None,
-                 default_params: Optional[SamplingParams] = None):
+                 default_params: Optional[SamplingParams] = None,
+                 trace_log=None):
         # local import: scheduler imports this module for EngineConfig
         from repro.serving.scheduler import ContinuousBatcher
         self.config = engine if engine is not None else EngineConfig()
         self.batcher = ContinuousBatcher(params, cfg, self.config,
                                          policy=policy,
-                                         default_params=default_params)
+                                         default_params=default_params,
+                                         trace_log=trace_log)
         self._next_rid = 0
         self.handles: dict = {}
 
     @property
     def policy(self) -> SchedulerPolicy:
         return self.batcher.policy
+
+    @property
+    def metrics(self):
+        """The batcher's ``serving.metrics.MetricsRegistry``."""
+        return self.batcher.metrics
+
+    def metrics_snapshot(self) -> dict:
+        """Nested plain-dict view of every serving metric (counters /
+        gauges / histograms incl. TTFT, queue wait, inter-token latency,
+        block-pool occupancy, done_reason and compile-event counts)."""
+        return self.batcher.metrics.snapshot()
+
+    def render_prometheus(self) -> str:
+        """Prometheus text-format rendering of the same registry (what
+        ``launch/serve.py --metrics-port`` serves at ``/metrics``)."""
+        return self.batcher.metrics.render_prometheus()
 
     def submit(self, prompt: Sequence[int],
                params: Optional[SamplingParams] = None,

@@ -45,7 +45,14 @@ _ATTN_KINDS = ("attn", "attn_local", "attn_moe")
 
 
 class BlockAllocator:
-    """Free-list allocator over pool block ids; id 0 is reserved scratch."""
+    """Free-list allocator over pool block ids; id 0 is reserved scratch.
+
+    Beyond the free list it keeps the telemetry the serving metrics read
+    each iteration: ``high_water`` (max blocks ever live at once — the
+    capacity-planning number), cumulative ``total_allocs`` / ``total_frees``,
+    ``pool_exhausted`` (failed allocs), and ``double_free_rejected`` (the
+    PR-3 guard fired — counted *and* raised, so a crash-looping caller is
+    visible in the metrics, not just in its own traceback)."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
@@ -53,6 +60,11 @@ class BlockAllocator:
         self._free_set: set[int] = set(self._free)
         self._ever_used: set[int] = set()
         self.recycled = 0                       # re-allocations of freed blocks
+        self.high_water = 0                     # max used_blocks ever seen
+        self.total_allocs = 0
+        self.total_frees = 0
+        self.pool_exhausted = 0                 # allocs that failed
+        self.double_free_rejected = 0           # frees the guard refused
 
     @property
     def free_blocks(self) -> int:
@@ -64,6 +76,7 @@ class BlockAllocator:
 
     def alloc(self) -> int:
         if not self._free:
+            self.pool_exhausted += 1
             raise RuntimeError(
                 "KV block pool exhausted: all "
                 f"{self.num_blocks - 1} blocks are live. Retire requests, "
@@ -73,6 +86,9 @@ class BlockAllocator:
         if bid in self._ever_used:
             self.recycled += 1
         self._ever_used.add(bid)
+        self.total_allocs += 1
+        if self.used_blocks > self.high_water:
+            self.high_water = self.used_blocks
         return bid
 
     def free(self, ids: Iterable[int]):
@@ -94,6 +110,7 @@ class BlockAllocator:
             if bid in self._free_set or bid in add:
                 # also catches freeing a block that was never handed out:
                 # every non-live block sits on the free list by invariant
+                self.double_free_rejected += 1
                 raise RuntimeError(
                     f"double free of KV block {bid}: it is already on the "
                     "free list; freeing it again would alias two slots onto "
@@ -101,6 +118,7 @@ class BlockAllocator:
             add.append(bid)
         self._free.extend(add)
         self._free_set.update(add)
+        self.total_frees += len(add)
 
 
 class SlotPages:

@@ -1,0 +1,362 @@
+"""Zero-dependency serving telemetry: counters, gauges, histograms + export.
+
+One ``MetricsRegistry`` is threaded through the whole serving path
+(``ContinuousBatcher`` owns one, ``ServingEngine.metrics_snapshot()``
+surfaces it); everything here is stdlib-only and host-side — recording a
+sample never touches a traced value or a compiled program, so metrics can
+stay on by default (the ``benchmarks/serving.py`` overhead gate asserts
+< 2% tokens/s cost).
+
+Three metric kinds:
+
+  * ``Counter``   — monotone event count, optionally mirroring an external
+    cumulative source (``set_cumulative``, used for the ``BlockAllocator``
+    alloc/free totals).
+  * ``Gauge``     — last-set value + high-water mark (block-pool occupancy,
+    modeled resident cache bytes).
+  * ``Histogram`` — fixed log-spaced buckets (latency-shaped by default:
+    100 us .. ~100 s) with count / sum / min / max and bucket-interpolated
+    percentiles (``p50``/``p95``/``p99`` in every snapshot — the serving
+    bench records tail inter-token latency from here, not from its own
+    timers).
+
+Export surfaces: ``snapshot()`` (nested plain dict, JSON-ready),
+``render_prometheus()`` (text exposition format), ``serve_http()`` (stdlib
+``http.server`` thread serving ``/metrics`` + ``/metrics.json`` — the
+``launch/serve.py --metrics-port`` endpoint).
+
+``Timer`` + ``log_event`` are the shared timing/structured-logging helpers
+the launch drivers use instead of ad-hoc ``time.time()`` prints (a repo
+lint pins that: ``scripts/lint_timing.py``).
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["log_buckets", "LATENCY_BUCKETS", "Counter", "Gauge", "Histogram",
+           "MetricsRegistry", "Timer", "log_event", "serve_http"]
+
+
+def log_buckets(lo: float, hi: float, per_decade: int = 3) -> Tuple[float, ...]:
+    """Log-spaced bucket upper bounds: ``per_decade`` per power of ten,
+    from ``lo`` up to the first bound >= ``hi``."""
+    if not (0 < lo < hi):
+        raise ValueError(f"need 0 < lo < hi, got ({lo}, {hi})")
+    n = 0
+    out: List[float] = []
+    while True:
+        b = lo * 10.0 ** (n / per_decade)
+        out.append(b)
+        if b >= hi:
+            return tuple(out)
+        n += 1
+
+
+# 100 us .. ~100 s, 3 buckets per decade: wide enough for a compile-included
+# first iteration at the top and a fused decode step at the bottom.
+LATENCY_BUCKETS = log_buckets(1e-4, 100.0, 3)
+
+
+class Counter:
+    """Monotone event counter."""
+
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0):
+        self.value += n
+
+    def set_cumulative(self, total: float):
+        """Mirror an external monotone total (e.g. ``BlockAllocator.
+        total_allocs``) — never moves backwards."""
+        self.value = max(self.value, float(total))
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Last-set value, plus the high-water mark since creation."""
+
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = 0.0
+        self.high_water = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+        if self.value > self.high_water:
+            self.high_water = self.value
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated percentile estimates."""
+
+    kind = "histogram"
+
+    def __init__(self, buckets: Sequence[float] = LATENCY_BUCKETS):
+        self.bounds = tuple(sorted(float(b) for b in buckets))
+        if not self.bounds:
+            raise ValueError("histogram needs at least one bucket bound")
+        self.counts = [0] * (len(self.bounds) + 1)   # +1: the +Inf bucket
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float):
+        v = float(v)
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Bucket-interpolated p-th percentile (p in [0, 100]); exact-ish
+        for anything the bucket resolution can see, clamped to observed
+        min/max so a one-sample histogram reports that sample."""
+        if not self.count:
+            return None
+        rank = p / 100.0 * self.count
+        seen = 0.0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            if seen + c >= rank:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i] if i < len(self.bounds) else self.max
+                frac = (rank - seen) / c
+                est = lo + (hi - lo) * max(min(frac, 1.0), 0.0)
+                return max(min(est, self.max), self.min)
+            seen += c
+        return self.max
+
+    def snapshot(self) -> Dict[str, Any]:
+        return dict(
+            count=self.count, sum=self.sum,
+            min=self.min if self.count else None,
+            max=self.max if self.count else None,
+            mean=self.sum / self.count if self.count else None,
+            p50=self.percentile(50), p95=self.percentile(95),
+            p99=self.percentile(99),
+            buckets={("+Inf" if i == len(self.bounds)
+                      else repr(self.bounds[i])): c
+                     for i, c in enumerate(self.counts)},
+        )
+
+
+_LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, Any]) -> _LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Name + labels -> metric instance; the one store every serving layer
+    records into.  Metric creation is get-or-create (idempotent), so call
+    sites never coordinate; a name must keep one kind for its lifetime."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Dict[_LabelKey, Any]] = {}
+        self._kinds: Dict[str, str] = {}
+        self._help: Dict[str, str] = {}
+        self._lock = threading.Lock()    # the HTTP exporter reads cross-thread
+
+    def _get(self, name: str, labels: Dict[str, Any], factory, kind: str):
+        with self._lock:
+            have = self._kinds.get(name)
+            if have is not None and have != kind:
+                raise ValueError(f"metric {name!r} is a {have}, not a {kind}")
+            self._kinds[name] = kind
+            fam = self._metrics.setdefault(name, {})
+            key = _label_key(labels)
+            m = fam.get(key)
+            if m is None:
+                m = fam[key] = factory()
+            return m
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        if help:
+            self._help.setdefault(name, help)
+        return self._get(name, labels, Counter, "counter")
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        if help:
+            self._help.setdefault(name, help)
+        return self._get(name, labels, Gauge, "gauge")
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = LATENCY_BUCKETS,
+                  **labels) -> Histogram:
+        if help:
+            self._help.setdefault(name, help)
+        return self._get(name, labels, lambda: Histogram(buckets), "histogram")
+
+    # -- export ---------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Nested plain dict (JSON-ready): kind -> name -> {label-string ->
+        value/stats}.  Label string is ``k=v,k2=v2`` ("" for no labels)."""
+        out: Dict[str, Any] = dict(counters={}, gauges={}, histograms={})
+        with self._lock:
+            for name, fam in sorted(self._metrics.items()):
+                kind = self._kinds[name]
+                dst = out[{"counter": "counters", "gauge": "gauges",
+                           "histogram": "histograms"}[kind]]
+                dst[name] = {
+                    ",".join(f"{k}={v}" for k, v in key): m.snapshot()
+                    for key, m in sorted(fam.items())}
+                if kind == "gauge":
+                    dst[name + "__high_water"] = {
+                        ",".join(f"{k}={v}" for k, v in key): m.high_water
+                        for key, m in sorted(fam.items())}
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format (v0.0.4)."""
+        def esc(v: str) -> str:
+            return v.replace("\\", r"\\").replace('"', r'\"') \
+                    .replace("\n", r"\n")
+
+        def labelstr(key: _LabelKey, extra: Tuple[Tuple[str, str], ...] = ()):
+            items = key + extra
+            if not items:
+                return ""
+            return "{" + ",".join(f'{k}="{esc(v)}"' for k, v in items) + "}"
+
+        lines: List[str] = []
+        with self._lock:
+            for name, fam in sorted(self._metrics.items()):
+                kind = self._kinds[name]
+                if name in self._help:
+                    lines.append(f"# HELP {name} {esc(self._help[name])}")
+                lines.append(f"# TYPE {name} {kind}")
+                for key, m in sorted(fam.items()):
+                    if kind in ("counter", "gauge"):
+                        lines.append(f"{name}{labelstr(key)} {m.value:g}")
+                        continue
+                    cum = 0
+                    for i, c in enumerate(m.counts):
+                        cum += c
+                        le = "+Inf" if i == len(m.bounds) \
+                            else f"{m.bounds[i]:g}"
+                        lines.append(
+                            f"{name}_bucket{labelstr(key, (('le', le),))} "
+                            f"{cum}")
+                    lines.append(f"{name}_sum{labelstr(key)} {m.sum:g}")
+                    lines.append(f"{name}_count{labelstr(key)} {m.count}")
+        return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Timing + structured logging helpers (the launch drivers' shared clock)
+# ---------------------------------------------------------------------------
+
+class Timer:
+    """Monotonic wall-clock timer: one object for elapsed-so-far, split
+    laps, and (as a context manager) recording a span into a histogram.
+
+        tm = Timer()
+        ...lower...
+        t_lower = tm.lap()
+        ...compile...
+        t_compile = tm.lap()          # since the previous lap
+
+        with Timer(hist):             # observes the span on exit
+            step()
+    """
+
+    def __init__(self, hist: Optional[Histogram] = None):
+        self._hist = hist
+        self.start = time.perf_counter()
+        self._last = self.start
+        self.elapsed = 0.0
+
+    @property
+    def total(self) -> float:
+        return time.perf_counter() - self.start
+
+    def lap(self) -> float:
+        now = time.perf_counter()
+        dt = now - self._last
+        self._last = now
+        return dt
+
+    def __enter__(self) -> "Timer":
+        self.start = time.perf_counter()
+        self._last = self.start
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.start
+        if self._hist is not None:
+            self._hist.observe(self.elapsed)
+        return False
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        a = abs(v)
+        if a and (a < 1e-3 or a >= 1e5):
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+def log_event(tag: str, **fields):
+    """The one sanctioned CLI print: a structured ``[tag] k=v ...`` line.
+    Launch drivers log timings through this (fed by ``Timer``), so every
+    driver's output is grep-able the same way."""
+    print(f"[{tag}] " + " ".join(f"{k}={_fmt(v)}" for k, v in fields.items()),
+          flush=True)
+
+
+# ---------------------------------------------------------------------------
+# HTTP exporter (stdlib-only; the --metrics-port endpoint)
+# ---------------------------------------------------------------------------
+
+def serve_http(registry: MetricsRegistry, port: int, host: str = ""):
+    """Serve ``/metrics`` (Prometheus text) + ``/metrics.json`` (snapshot)
+    from a daemon thread.  Returns the ``HTTPServer`` — call ``shutdown()``
+    to stop it; port 0 picks a free port (``server_address[1]`` has it)."""
+    import http.server
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.split("?")[0] == "/metrics":
+                body = registry.render_prometheus().encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif self.path.split("?")[0] == "/metrics.json":
+                body = json.dumps(registry.snapshot(), indent=1).encode()
+                ctype = "application/json"
+            else:
+                self.send_error(404)
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):      # scrapes are not CLI output
+            pass
+
+    server = http.server.ThreadingHTTPServer((host, port), Handler)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="metrics-http", daemon=True)
+    thread.start()
+    return server

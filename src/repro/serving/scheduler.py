@@ -37,6 +37,7 @@ tokens instead of worst-case length.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from collections import deque
 from typing import Dict, List, Optional
@@ -47,8 +48,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
-from repro.serving import kvcache
+from repro.serving import kvcache, trace
 from repro.serving.engine import EngineConfig, TokenEvent
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.policy import FCFSPolicy, SchedulerPolicy
 from repro.serving.sampling import (SamplingParams, sample_tokens,
                                     token_logprobs)
@@ -70,6 +72,12 @@ class Request:
     done: bool = False
     params: Optional[SamplingParams] = None   # None -> batcher default
     done_reason: Optional[str] = None
+    # lifecycle timestamps (perf_counter clock), stamped by the batcher;
+    # the metrics histograms (queue wait / TTFT / inter-token) read these
+    t_submit: Optional[float] = None
+    t_first_sched: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -105,12 +113,17 @@ class ContinuousBatcher:
                  engine: Optional[EngineConfig] = None, *,
                  policy: Optional[SchedulerPolicy] = None,
                  default_params: Optional[SamplingParams] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace_log=None,
                  **legacy):
         """``engine`` consolidates every execution knob (see
         ``serving.engine.EngineConfig``); ``policy`` plugs the slab-packing
         strategy (default ``FCFSPolicy``); ``default_params`` is the
         ``SamplingParams`` applied to requests that carry none (default:
-        greedy).  The PR-4 loose-kwarg signature
+        greedy).  ``metrics`` injects a shared ``MetricsRegistry`` (one is
+        created when None and ``engine.metrics`` is on); ``trace_log`` is a
+        ``serving.trace.TraceLog`` (or file path) receiving one structured
+        record per engine iteration.  The PR-4 loose-kwarg signature
         (``ContinuousBatcher(params, cfg, slots=..., qmeta=..., ...)``)
         still works through a deprecation shim."""
         greedy = legacy.pop("greedy", None)
@@ -174,11 +187,18 @@ class ContinuousBatcher:
         self._recurrent = registry.has_recurrent(cfg)
         self._reset = jax.jit(
             lambda c, i: registry.reset_slot(c, cfg, i))
+        if engine.trace:
+            trace.enable(True)
+        self._init_telemetry(metrics, trace_log)
         # ONE jitted program family over the policy's slab widths; sampling
         # is traced into the same program, so only [B] ids reach the host
         ecfg = self.engine_config
 
         def _step_fn(p, c, toks, poss, lens, seeds, sidx, temps, tks, tps):
+            # this body only runs while JAX traces a NEW slab shape, so it
+            # is the compile-event hook: one increment per compiled program
+            # (the spy tests intercept registry.chunk_step the same way)
+            self._compiles += 1
             logits, c = registry.chunk_step(p, c, toks, poss, lens, cfg,
                                             engine=ecfg)
             toks_out = sample_tokens(logits, seeds, sidx, temps, tks, tps)
@@ -187,6 +207,128 @@ class ContinuousBatcher:
             return (toks_out, lp, tv, ti), c
 
         self._step = jax.jit(_step_fn)
+
+    # -- telemetry ------------------------------------------------------------
+    def _init_telemetry(self, metrics: Optional[MetricsRegistry], trace_log):
+        """Resolve the metrics registry + trace log and pre-bind the
+        per-event metric handles (so the hot step path never pays a
+        name/label lookup).  With ``engine.metrics`` off nothing is ever
+        recorded — ``self.metrics`` stays an empty registry."""
+        ecfg = self.engine_config
+        self._compiles = 0                     # bumped by the trace hook
+        self._iterations = 0
+        if not isinstance(trace_log, trace.TraceLog) and trace_log is not None:
+            trace_log = trace.TraceLog(trace_log)
+        self._trace_log = trace_log
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if not ecfg.metrics:
+            self._mx = None
+            return
+        mx = self.metrics
+        self._mx = mx
+        self._m_submitted = mx.counter(
+            "serving_requests_submitted_total",
+            "requests accepted by submit()")
+        self._m_tokens = mx.counter(
+            "serving_tokens_generated_total", "tokens sampled and emitted")
+        self._m_queue_wait = mx.histogram(
+            "serving_queue_wait_seconds", "submit -> first scheduled")
+        self._m_ttft = mx.histogram(
+            "serving_ttft_seconds", "submit -> first generated token")
+        self._m_itl = mx.histogram(
+            "serving_inter_token_seconds", "gap between a request's tokens")
+        self._m_step = mx.histogram(
+            "serving_step_seconds", "one whole engine iteration (host)")
+        self._m_dispatch = mx.histogram(
+            "serving_dispatch_seconds",
+            "jitted step dispatch (block_until_ready'd when sync_timing)")
+        self._m_valid = mx.counter("serving_slab_tokens_total",
+                                   "slab positions by kind", kind="valid")
+        self._m_pad = mx.counter("serving_slab_tokens_total", kind="pad")
+        self._m_pad_frac = mx.gauge(
+            "serving_slab_padded_fraction",
+            "padded fraction of the last iteration's [B, T] slab")
+        self._m_compile = mx.counter(
+            "serving_compile_events_total",
+            "distinct slab programs traced (one per compile)")
+        self._policy_name = getattr(self.policy, "name",
+                                    type(self.policy).__name__)
+        self._m_width: Dict[int, object] = {}   # iteration counter per rung
+        self._dtype_bytes = jnp.dtype(ecfg.dtype).itemsize
+        if self.pages is not None:
+            self._m_blocks_used = mx.gauge(
+                "kv_blocks_used", "live pool blocks (excl. scratch)")
+            self._m_blocks_free = mx.gauge("kv_blocks_free")
+            self._m_blocks_hw = mx.gauge(
+                "kv_blocks_high_water", "max blocks ever live at once")
+            self._m_allocs = mx.counter("kv_block_allocs_total")
+            self._m_frees = mx.counter("kv_block_frees_total")
+            self._m_dfree = mx.counter(
+                "kv_block_double_free_rejected_total",
+                "frees the double-free guard refused")
+            self._m_exhaust = mx.counter(
+                "kv_pool_exhausted_total", "allocs that found no free block")
+        self._m_resident = mx.gauge(
+            "kv_cache_resident_bytes",
+            "modeled resident cache bytes over live slots "
+            "(serving.kvcache.cache_bytes)", kind=ecfg.cache_kind)
+
+    def _record_iteration(self, t: int, valid_toks: int, live_events:
+                          List[TokenEvent], step_s: float, dispatch_s: float):
+        """Per-iteration bookkeeping: slab shape / padding counters, KV pool
+        gauges, and the JSONL trace record."""
+        slab = len(self.slots) * t
+        pad = slab - valid_toks
+        mx = self._mx
+        if mx is not None:
+            self._m_step.observe(step_s)
+            self._m_dispatch.observe(dispatch_s)
+            self._m_valid.inc(valid_toks)
+            self._m_pad.inc(pad)
+            self._m_pad_frac.set(pad / slab if slab else 0.0)
+            w = self._m_width.get(t)
+            if w is None:
+                w = self._m_width[t] = mx.counter(
+                    "serving_iterations_total",
+                    "engine iterations by slab width (policy rung)",
+                    width=t, policy=self._policy_name)
+            w.inc()
+            self._m_compile.set_cumulative(self._compiles)
+            self._m_resident.set(self._resident_bytes())
+            if self.pages is not None:
+                al = self.pages.alloc
+                self._m_blocks_used.set(al.used_blocks)
+                self._m_blocks_free.set(al.free_blocks)
+                self._m_blocks_hw.set(al.high_water)
+                self._m_allocs.set_cumulative(al.total_allocs)
+                self._m_frees.set_cumulative(al.total_frees)
+                self._m_dfree.set_cumulative(al.double_free_rejected)
+                self._m_exhaust.set_cumulative(al.pool_exhausted)
+        if self._trace_log is not None:
+            rec = dict(kind="iteration", iter=self._iterations, width=t,
+                       slots=len(self.slots), valid_tokens=valid_toks,
+                       padded_fraction=pad / slab if slab else 0.0,
+                       step_s=step_s, dispatch_s=dispatch_s,
+                       compiles=self._compiles,
+                       events=[dict(rid=e.rid, token=e.token, index=e.index,
+                                    done=e.done, done_reason=e.done_reason)
+                               for e in live_events])
+            if self.pages is not None:
+                al = self.pages.alloc
+                rec["kv_blocks_used"] = al.used_blocks
+                rec["kv_blocks_high_water"] = al.high_water
+            self._trace_log.write(rec)
+
+    def _resident_bytes(self) -> int:
+        """Modeled resident attention-cache bytes across live slots at their
+        current positions (the analytic ``kvcache.cache_bytes`` model — the
+        same source of truth the capacity benchmarks use)."""
+        ecfg = self.engine_config
+        return sum(
+            kvcache.cache_bytes(self.cfg, ecfg.cache_kind, s.pos,
+                                self.s_cache, ecfg.block_size,
+                                self._dtype_bytes)
+            for s in self.slots if not s.free)
 
     @property
     def greedy(self) -> bool:
@@ -208,6 +350,9 @@ class ContinuousBatcher:
                 f"cannot fit the serving cache (s_cache={self.s_cache}); at "
                 "least one position must remain for generation — raise "
                 "s_cache or truncate the prompt")
+        req.t_submit = time.perf_counter()
+        if self._mx is not None:
+            self._m_submitted.inc()
         self.queue.append(req)
 
     def pending(self) -> bool:
@@ -225,6 +370,11 @@ class ContinuousBatcher:
         """One hybrid iteration: the policy picks the slab shape, the
         compiled step advances every live slot and samples their next
         tokens on device.  Returns the TokenEvents this iteration emitted."""
+        with trace.host_span("engine_step"):
+            return self._step_iteration()
+
+    def _step_iteration(self) -> List[TokenEvent]:
+        t_iter = time.perf_counter()
         self._claim(self.policy.assign(self.slots, self.queue))
         remaining = [None if s.free
                      else max(len(s.req.prompt) - s.prompt_cursor, 0)
@@ -271,13 +421,19 @@ class ContinuousBatcher:
                 self.pages.ensure(i, s.pos + take - 1)
         if self.pages is not None and self.pages.dirty:
             self.cache["table"] = self.pages.device_table()
-        (nxt, lps, tvs, tis), self.cache = self._step(
+        t_dispatch = time.perf_counter()
+        out, self.cache = self._step(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
             jnp.asarray(lens), jnp.asarray(seeds), jnp.asarray(sidx),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
-        nxt = np.asarray(nxt)
-        lps, tvs, tis = np.asarray(lps), np.asarray(tvs), np.asarray(tis)
+        if self.engine_config.sync_timing:
+            # honest host-side step latency: wait out the async dispatch
+            # before stopping the clock (costs pipelining; off by default)
+            jax.block_until_ready(out)
+        dispatch_s = time.perf_counter() - t_dispatch
+        nxt, lps, tvs, tis = (np.asarray(a) for a in out)
         n_top = tvs.shape[1]
+        now = time.perf_counter()
         events: List[TokenEvent] = []
         for i, s in enumerate(self.slots):
             if s.free or lens[i] == 0:
@@ -295,6 +451,15 @@ class ContinuousBatcher:
             if tok is None:
                 continue                       # still mid-prompt
             r.tokens.append(tok)
+            if r.t_first_token is None:
+                r.t_first_token = now
+                if self._mx is not None and r.t_submit is not None:
+                    self._m_ttft.observe(now - r.t_submit)
+            elif self._mx is not None and r.t_last_token is not None:
+                self._m_itl.observe(now - r.t_last_token)
+            r.t_last_token = now
+            if self._mx is not None:
+                self._m_tokens.inc()
             reason = self._done_reason(r, s, tok)
             if reason is not None:
                 r.done = True
@@ -303,6 +468,10 @@ class ContinuousBatcher:
                 self.slots[i] = _Slot()        # slot recycled at pos 0
                 if self.pages is not None:
                     self.pages.release(i)      # blocks back to the pool
+                if self._mx is not None:
+                    self._mx.counter("serving_requests_finished_total",
+                                     "retired requests by done_reason",
+                                     reason=reason).inc()
             top = tuple((int(tis[i, k]), float(tvs[i, k]))
                         for k in range(n_top)) if n_top else None
             events.append(TokenEvent(rid=r.rid, token=tok,
@@ -310,6 +479,10 @@ class ContinuousBatcher:
                                      done_reason=r.done_reason,
                                      logprob=float(lps[i]),
                                      top_logprobs=top))
+        self._iterations += 1
+        if self._mx is not None or self._trace_log is not None:
+            self._record_iteration(t, int(np.sum(lens)), events,
+                                   time.perf_counter() - t_iter, dispatch_s)
         return events
 
     def _done_reason(self, r: Request, s: _Slot, tok: int) -> Optional[str]:
@@ -324,7 +497,12 @@ class ContinuousBatcher:
         return None
 
     def _claim(self, assignments):
+        now = time.perf_counter()
         for i, req in assignments:
+            if req.t_first_sched is None:
+                req.t_first_sched = now
+                if self._mx is not None and req.t_submit is not None:
+                    self._m_queue_wait.observe(now - req.t_submit)
             self.slots[i] = _Slot(req=req, pos=0, prompt_cursor=0)
             if self._recurrent:
                 # a retired request's conv window / hidden state must not

@@ -1,0 +1,103 @@
+"""Kernel + engine trace hooks: xprof annotations and a JSONL event log.
+
+Two host-cheap instrumentation primitives, both gated by one process-level
+flag (``EngineConfig.trace=True`` or ``REPRO_TRACE=1``) so the default
+serving path pays nothing:
+
+  * ``annotate(name)`` — wraps a *traced* region (kernel dispatch inside a
+    jitted step) in ``jax.named_scope``: the scope lands in the op metadata,
+    so an xprof capture attributes HBM/compute time to named kernels
+    (``chunk_step``, ``paged_attention[...]``, ``kv_append_chunk[...]``).
+    It runs only while JAX is tracing a new program shape — zero per-step
+    cost once compiled, and it never changes the computation.
+  * ``host_span(name)`` — wraps a *host* region (one scheduler iteration)
+    in ``jax.profiler.TraceAnnotation`` so the same capture shows where
+    host wall-clock went between dispatches.
+
+The kernel modules import this lazily at call time (tracing only), keeping
+``repro.kernels`` import-light and cycle-free.
+
+``TraceLog`` is the structured per-iteration event log behind
+``launch/serve.py --trace-log``: one JSON object per line, schema documented
+in the README Observability section.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Any, Dict, IO, Optional, Union
+
+__all__ = ["enabled", "enable", "annotate", "host_span", "TraceLog"]
+
+_ENV_TRACE = "REPRO_TRACE"
+_enabled: Optional[bool] = None        # None -> read the env on first use
+
+
+def enabled() -> bool:
+    global _enabled
+    if _enabled is None:
+        _enabled = os.environ.get(_ENV_TRACE, "") not in ("", "0")
+    return _enabled
+
+
+def enable(flag: bool = True):
+    """Turn trace annotations on/off process-wide (EngineConfig.trace does
+    this at batcher construction).  Off overrides the env."""
+    global _enabled
+    _enabled = bool(flag)
+
+
+def annotate(name: str):
+    """Named scope for a traced region; no-op context when tracing is off."""
+    if not enabled():
+        return contextlib.nullcontext()
+    import jax
+    return jax.named_scope(name)
+
+
+def host_span(name: str):
+    """Host-timeline span (xprof TraceAnnotation); no-op when off."""
+    if not enabled():
+        return contextlib.nullcontext()
+    import jax
+    return jax.profiler.TraceAnnotation(name)
+
+
+class TraceLog:
+    """Append-only JSONL event sink (one dict per line, flushed per write
+    so a killed server loses at most the in-flight line).
+
+    The scheduler writes one record per engine iteration; anything
+    JSON-serializable can ride along.  A ``ts`` wall-clock field is stamped
+    here so every consumer sees the same clock."""
+
+    def __init__(self, path_or_file: Union[str, "os.PathLike[str]", IO[str]]):
+        if hasattr(path_or_file, "write"):
+            self._f: IO[str] = path_or_file          # type: ignore[assignment]
+            self._owns = False
+            self.path = getattr(path_or_file, "name", None)
+        else:
+            self.path = os.fspath(path_or_file)
+            self._f = open(self.path, "a", encoding="utf-8")
+            self._owns = True
+        self.records = 0
+
+    def write(self, record: Dict[str, Any]):
+        rec = dict(record)
+        rec.setdefault("ts", time.time())
+        self._f.write(json.dumps(rec, default=str) + "\n")
+        self._f.flush()
+        self.records += 1
+
+    def close(self):
+        if self._owns:
+            self._f.close()
+
+    def __enter__(self) -> "TraceLog":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

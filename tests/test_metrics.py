@@ -1,0 +1,437 @@
+"""Serving telemetry subsystem: registry/histogram units, trace hooks, and
+the instrumented engine against hand-computed oracles.
+
+The engine-level tests use EXACT oracles wherever the clock allows it: the
+request lifecycle timestamps (``t_submit`` / ``t_first_sched`` /
+``t_first_token``) are the same floats the histograms observed, so sums
+match bit-for-bit; slab valid/pad token totals come from the analytic
+packing identity (each request consumes ``len(prompt) + generated - 1``
+valid positions) rather than re-reading the scheduler's own counters.
+"""
+import io
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import registry
+from repro.serving import (ContinuousBatcher, EngineConfig, FCFSPolicy,
+                           Request, SamplingParams, ServingEngine,
+                           TokenBudgetPolicy, kvcache)
+from repro.serving import metrics as M
+from repro.serving import trace as T
+
+S_CACHE, BLOCK, CHUNK = 32, 4, 5
+
+
+def _params(arch="llama2-7b", seed=0):
+    cfg = reduced(get_config(arch))
+    return cfg, registry.init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _ecfg(**kw):
+    kw.setdefault("dtype", jnp.float32)
+    kw.setdefault("s_cache", S_CACHE)
+    kw.setdefault("slots", 2)
+    kw.setdefault("block_size", BLOCK)
+    return EngineConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# metric primitives
+# ---------------------------------------------------------------------------
+
+def test_log_buckets_cover_range_log_spaced():
+    b = M.log_buckets(1e-3, 10.0, 3)
+    assert b[0] == pytest.approx(1e-3)
+    assert b[-1] >= 10.0
+    ratios = [b[i + 1] / b[i] for i in range(len(b) - 1)]
+    assert all(r == pytest.approx(10 ** (1 / 3), rel=1e-9) for r in ratios)
+    with pytest.raises(ValueError):
+        M.log_buckets(1.0, 0.5)
+
+
+def test_counter_inc_and_cumulative_mirror():
+    c = M.Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.snapshot() == 3.5
+    c.set_cumulative(10)
+    assert c.snapshot() == 10
+    c.set_cumulative(4)                   # external totals never move it back
+    assert c.snapshot() == 10
+
+
+def test_gauge_tracks_high_water():
+    g = M.Gauge()
+    g.set(3)
+    g.set(7)
+    g.set(2)
+    assert g.snapshot() == 2
+    assert g.high_water == 7
+
+
+def test_histogram_counts_sum_minmax_and_percentiles():
+    h = M.Histogram(buckets=(1.0, 10.0, 100.0))
+    assert h.percentile(50) is None       # empty
+    for v in (0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(56.0)
+    assert (h.min, h.max) == (0.5, 50.0)
+    snap = h.snapshot()
+    assert snap["buckets"] == {"1.0": 2, "10.0": 1, "100.0": 1, "+Inf": 0}
+    assert snap["mean"] == pytest.approx(14.0)
+    # p50 falls in the first bucket; interpolation stays within its bounds
+    # (clamped to the observed min), p99 clamps to the observed max
+    assert h.min <= snap["p50"] <= 1.0
+    assert snap["p99"] == 50.0
+    # one-sample histogram reports that sample at every percentile
+    h1 = M.Histogram(buckets=(1.0,))
+    h1.observe(0.25)
+    assert h1.percentile(50) == 0.25 and h1.percentile(99) == 0.25
+
+
+def test_registry_get_or_create_labels_and_kind_collision():
+    mx = M.MetricsRegistry()
+    a = mx.counter("reqs", "help text", reason="length")
+    b = mx.counter("reqs", reason="length")
+    assert a is b                          # idempotent per (name, labels)
+    mx.counter("reqs", reason="stop_token").inc(2)
+    a.inc()
+    with pytest.raises(ValueError, match="counter"):
+        mx.gauge("reqs")
+    snap = mx.snapshot()
+    assert snap["counters"]["reqs"] == {"reason=length": 1.0,
+                                        "reason=stop_token": 2.0}
+
+
+def test_prometheus_rendering_format():
+    mx = M.MetricsRegistry()
+    mx.counter("events_total", "things that happened").inc(3)
+    mx.gauge("depth", kind="q").set(2)
+    h = mx.histogram("lat_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = mx.render_prometheus()
+    assert "# HELP events_total things that happened" in text
+    assert "# TYPE events_total counter" in text
+    assert "events_total 3" in text
+    assert 'depth{kind="q"} 2' in text
+    # histogram buckets are CUMULATIVE counts, closed by +Inf == _count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "lat_seconds_count 3" in text
+    assert "lat_seconds_sum 5.55" in text
+
+
+def test_timer_laps_and_histogram_context():
+    h = M.Histogram(buckets=(10.0,))
+    with M.Timer(h) as tm:
+        pass
+    assert tm.elapsed >= 0 and h.count == 1
+    t2 = M.Timer()
+    a = t2.lap()
+    b = t2.lap()
+    assert a >= 0 and b >= 0 and t2.total >= a + b
+
+
+def test_log_event_format(capsys):
+    M.log_event("tag", step=3, loss=0.1234567, note="hi")
+    out = capsys.readouterr().out
+    assert out.startswith("[tag] ")
+    assert "step=3" in out and "loss=0.1235" in out and "note=hi" in out
+
+
+def test_trace_log_jsonl_roundtrip():
+    buf = io.StringIO()
+    with T.TraceLog(buf) as tl:
+        tl.write(dict(kind="iteration", width=4))
+        tl.write(dict(kind="iteration", width=1))
+    assert tl.records == 2
+    recs = [json.loads(l) for l in buf.getvalue().splitlines()]
+    assert [r["width"] for r in recs] == [4, 1]
+    assert all("ts" in r for r in recs)
+
+
+def test_trace_annotate_is_nullcontext_when_disabled():
+    T.enable(False)
+    try:
+        import contextlib
+        assert isinstance(T.annotate("x"), contextlib.nullcontext)
+        assert isinstance(T.host_span("x"), contextlib.nullcontext)
+        T.enable(True)
+        with T.annotate("named"):      # jax.named_scope outside a trace: ok
+            pass
+    finally:
+        T.enable(False)
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator telemetry
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_telemetry_counters():
+    al = kvcache.BlockAllocator(num_blocks=4)       # usable ids: 1, 2, 3
+    a, b = al.alloc(), al.alloc()
+    assert (al.total_allocs, al.high_water) == (2, 2)
+    al.free([a])
+    assert al.total_frees == 1 and al.used_blocks == 1
+    c, d = al.alloc(), al.alloc()
+    assert al.high_water == 3                       # new peak
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.alloc()
+    assert al.pool_exhausted == 1
+    al.free([b, c, d])
+    assert al.high_water == 3                       # peak survives the frees
+    assert al.total_allocs == 4 and al.total_frees == 4
+
+
+def test_block_allocator_double_free_counts_and_raises():
+    al = kvcache.BlockAllocator(num_blocks=4)
+    a = al.alloc()
+    al.free([a])
+    with pytest.raises(RuntimeError, match="double free"):
+        al.free([a])
+    assert al.double_free_rejected == 1
+    # batch validation: nothing from the bad batch was released
+    b = al.alloc()
+    with pytest.raises(RuntimeError, match="double free"):
+        al.free([b, b])
+    assert al.double_free_rejected == 2
+    assert al.used_blocks == 1                      # b still live
+    al.free([b])                                    # clean free still works
+    assert al.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# instrumented engine vs hand-computed oracles
+# ---------------------------------------------------------------------------
+
+def test_ttft_and_queue_wait_match_request_timestamps():
+    """2-request greedy run: the TTFT / queue-wait histograms must hold
+    exactly the per-request timestamp deltas (same floats, so the sums
+    match bit-for-bit), bracketed by our own wall clock."""
+    cfg, params = _params()
+    eng = ServingEngine(params, cfg, _ecfg(chunk_size=CHUNK))
+    tm = M.Timer()
+    hs = [eng.submit([1, 2, 3, 4, 5, 6], SamplingParams(max_tokens=3)),
+          eng.submit([7, 8, 9], SamplingParams(max_tokens=3))]
+    eng.run()
+    wall = tm.total
+    reqs = [h.request for h in hs]
+    assert all(r.t_submit <= r.t_first_sched <= r.t_first_token
+               for r in reqs)
+    snap = eng.metrics_snapshot()
+    ttft = snap["histograms"]["serving_ttft_seconds"][""]
+    qw = snap["histograms"]["serving_queue_wait_seconds"][""]
+    assert ttft["count"] == 2 and qw["count"] == 2
+    assert ttft["sum"] == sum(r.t_first_token - r.t_submit for r in reqs)
+    assert qw["sum"] == sum(r.t_first_sched - r.t_submit for r in reqs)
+    assert 0 < ttft["max"] <= wall and 0 <= qw["max"] <= ttft["max"]
+    # inter-token: each request emits 3 tokens -> 2 gaps each
+    itl = snap["histograms"]["serving_inter_token_seconds"][""]
+    assert itl["count"] == 4
+    assert snap["counters"]["serving_tokens_generated_total"][""] == 6
+    assert snap["counters"]["serving_requests_submitted_total"][""] == 2
+
+
+def test_done_reason_counters_match_handles():
+    """One request per retirement path — length / stop_token / cache_full —
+    and the ``serving_requests_finished_total{reason=}`` counters must
+    mirror the handles' ``done_reason``."""
+    cfg, params = _params()
+    rng = np.random.default_rng(5)
+    prompt = list(map(int, rng.integers(1, cfg.vocab, 4)))
+    # discover what greedy generates so a stop token is guaranteed to land
+    probe = ServingEngine(params, cfg, _ecfg(chunk_size=CHUNK))
+    toks = probe.generate(prompt, SamplingParams(max_tokens=4)).tokens
+    stop = toks[2]
+
+    eng = ServingEngine(params, cfg, _ecfg(chunk_size=CHUNK, slots=3))
+    hs = [
+        eng.submit(prompt, SamplingParams(max_tokens=2)),          # length
+        eng.submit(prompt, SamplingParams(max_tokens=8,
+                                          stop_token_ids=(stop,))),
+        eng.submit(prompt, SamplingParams(max_tokens=None)),       # cache
+    ]
+    eng.run()
+    reasons = [h.done_reason for h in hs]
+    assert reasons == ["length", "stop_token", "cache_full"]
+    got = eng.metrics_snapshot()["counters"][
+        "serving_requests_finished_total"]
+    want = {}
+    for r in reasons:
+        want[f"reason={r}"] = want.get(f"reason={r}", 0) + 1.0
+    assert got == want
+
+
+class _WidthRecorder:
+    """Record every slab width the scheduler actually ran."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.plans = []                   # one width per engine iteration
+
+    @property
+    def name(self):
+        return self.inner.name            # the width-label the metrics use
+
+    def assign(self, slots, queue):
+        return self.inner.assign(slots, queue)
+
+    def widths(self, remaining, chunk):
+        t, takes = self.inner.widths(remaining, chunk)
+        self.plans.append(t)
+        return t, takes
+
+    def program_widths(self, chunk):
+        return self.inner.program_widths(chunk)
+
+
+@pytest.mark.parametrize("make_policy", [FCFSPolicy,
+                                         lambda: TokenBudgetPolicy(6)])
+def test_slab_padding_counters_match_packing_oracle(make_policy):
+    """Valid-token totals follow the analytic identity (each request
+    consumes ``len(prompt) + generated - 1`` valid slab positions); pad is
+    the recorded per-iteration ``slots * width`` minus that.  Holds for
+    both packers — only the split between valid and pad moves."""
+    cfg, params = _params(seed=1)
+    rec = _WidthRecorder(make_policy())
+    cb = ContinuousBatcher(params, cfg, _ecfg(chunk_size=CHUNK), policy=rec)
+    rng = np.random.default_rng(3)
+    plens = (9, 3, 6)
+    max_new = 3
+    for i, n in enumerate(plens):
+        cb.submit(Request(rid=i, prompt=list(
+            map(int, rng.integers(1, cfg.vocab, n))), max_new=max_new))
+    done = cb.run()
+    gen = sum(len(r.tokens) for r in done.values())
+    valid_oracle = sum(plens) + gen - len(plens)
+    slab_oracle = len(cb.slots) * sum(rec.plans)
+    snap = cb.metrics.snapshot()
+    slab = snap["counters"]["serving_slab_tokens_total"]
+    assert slab["kind=valid"] == valid_oracle
+    assert slab["kind=pad"] == slab_oracle - valid_oracle
+    # per-rung iteration counters partition the iterations exactly
+    iters = snap["counters"]["serving_iterations_total"]
+    name = rec.inner.name
+    for w in set(rec.plans):
+        assert iters[f"policy={name},width={w}"] == rec.plans.count(w)
+    assert sum(iters.values()) == len(rec.plans)
+
+
+def _spy_compiled_widths(monkeypatch):
+    real = registry.chunk_step
+    widths = []
+
+    def spy(params, cache, tokens, pos, lens, cfg, **kw):
+        widths.append(tokens.shape[1])
+        return real(params, cache, tokens, pos, lens, cfg, **kw)
+
+    monkeypatch.setattr(registry, "chunk_step", spy)
+    return widths
+
+
+def test_compile_event_counter_matches_trace_spy(monkeypatch):
+    cfg, params = _params()
+    widths = _spy_compiled_widths(monkeypatch)
+    eng = ServingEngine(params, cfg, _ecfg(chunk_size=CHUNK))
+    eng.submit([1, 2, 3, 4, 5, 6, 7], SamplingParams(max_tokens=3))
+    eng.run()
+    compiles = eng.metrics_snapshot()["counters"][
+        "serving_compile_events_total"][""]
+    assert compiles == len(widths) > 0    # one hook hit per traced program
+
+
+def test_metrics_off_is_noop_same_compiled_programs(monkeypatch):
+    """EngineConfig(metrics=False) must leave the jitted step untouched:
+    the chunk_step spy sees the same program family, and nothing is ever
+    recorded into the registry."""
+    cfg, params = _params(seed=1)
+
+    def run(metrics_on):
+        widths = _spy_compiled_widths(monkeypatch)
+        eng = ServingEngine(params, cfg,
+                            _ecfg(chunk_size=CHUNK, metrics=metrics_on))
+        for i, n in enumerate((6, 3)):
+            eng.submit(list(range(1, n + 1)), SamplingParams(max_tokens=3),
+                       rid=i)
+        done = eng.run()
+        toks = {i: r.tokens for i, r in done.items()}
+        monkeypatch.undo()
+        return widths, toks, eng.metrics_snapshot()
+
+    w_on, toks_on, snap_on = run(True)
+    w_off, toks_off, snap_off = run(False)
+    assert w_on == w_off                  # identical compiled-call pattern
+    assert toks_on == toks_off            # identical outputs
+    assert snap_off == dict(counters={}, gauges={}, histograms={})
+    assert snap_on["counters"]["serving_tokens_generated_total"][""] == 6
+
+
+def test_paged_run_block_pool_gauges_and_prometheus():
+    cfg, params = _params()
+    eng = ServingEngine(params, cfg,
+                        _ecfg(chunk_size=CHUNK, cache_kind="paged"))
+    eng.submit([1, 2, 3, 4, 5], SamplingParams(max_tokens=3))
+    eng.run()
+    snap = eng.metrics_snapshot()
+    al = eng.batcher.pages.alloc
+    assert snap["gauges"]["kv_blocks_used"][""] == al.used_blocks == 0
+    assert snap["gauges"]["kv_blocks_used__high_water"][""] \
+        == al.high_water > 0
+    assert snap["gauges"]["kv_blocks_high_water"][""] == al.high_water
+    assert snap["counters"]["kv_block_allocs_total"][""] == al.total_allocs
+    assert snap["counters"]["kv_block_frees_total"][""] == al.total_frees
+    assert al.total_allocs == al.total_frees > 0
+    # live-slot resident bytes went up then back to 0 at retirement
+    res = snap["gauges"]["kv_cache_resident_bytes"]["kind=paged"]
+    hw = snap["gauges"]["kv_cache_resident_bytes__high_water"]["kind=paged"]
+    assert res == 0 and hw > 0
+    text = eng.render_prometheus()
+    assert "kv_blocks_used 0" in text
+    assert 'serving_ttft_seconds_bucket{le="+Inf"} 1' in text
+    assert "serving_requests_finished_total" in text
+
+
+def test_trace_log_iteration_records_from_engine(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    cfg, params = _params()
+    eng = ServingEngine(params, cfg, _ecfg(chunk_size=CHUNK),
+                        trace_log=str(path))
+    eng.submit([1, 2, 3, 4], SamplingParams(max_tokens=2))
+    eng.run()
+    recs = [json.loads(l) for l in path.read_text().splitlines()]
+    assert recs and all(r["kind"] == "iteration" for r in recs)
+    assert [r["iter"] for r in recs] == list(range(1, len(recs) + 1))
+    assert all(r["slots"] == 2 and r["step_s"] > 0 for r in recs)
+    emitted = [e for r in recs for e in r["events"]]
+    assert len(emitted) == 2 and emitted[-1]["done"]
+    assert emitted[-1]["done_reason"] == "length"
+
+
+def test_http_exporter_serves_prometheus_and_json():
+    mx = M.MetricsRegistry()
+    mx.counter("up_total", "liveness").inc()
+    server = M.serve_http(mx, port=0)
+    try:
+        port = server.server_address[1]
+        text = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5).read().decode()
+        assert "up_total 1" in text
+        snap = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics.json", timeout=5).read())
+        assert snap["counters"]["up_total"][""] == 1.0
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/nope",
+                                   timeout=5)
+    finally:
+        server.shutdown()
