@@ -240,6 +240,65 @@ def bench_metrics_overhead(smoke: bool = False):
                  overhead_pct=overhead_pct)]
 
 
+def bench_debug_overhead(smoke: bool = False):
+    """Sanitizer cost gate for ``EngineConfig.debug_checks``.
+
+    The hard assertion is STRUCTURAL, not a timing race: with
+    debug_checks=False the scheduler jits the raw step closure, so its
+    jaxpr must contain zero checkify primitives — the disabled sanitizer
+    is graph-free and tokens/s is unchanged by construction.  The enabled
+    engine must show the checks in-graph (the feature is live), and its
+    measured overhead is recorded for the perf trajectory."""
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    n_req, p_len, max_new, chunk = (4, 12, 8, 8) if smoke \
+        else (8, 32, 16, 16)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab, p_len)))
+               for _ in range(n_req)]
+    trials = 3 if smoke else 5
+    tps, cbs = {}, {}
+    for label, on in (("on", True), ("off", False)):
+        ecfg = EngineConfig(dtype=jnp.float32, s_cache=p_len + max_new + 8,
+                            slots=2, chunk_size=chunk, cache_kind="paged",
+                            block_size=4, debug_checks=on)
+        cb = cbs[label] = ContinuousBatcher(params, cfg, ecfg)
+
+        def _once():
+            cb.finished.clear()
+            return _hybrid_tokens_per_s(cb, prompts, max_new)[0]
+
+        tps[label] = best_of(_once, trials, pick=max)
+
+    def _step_prims(cb):
+        b = len(cb.slots)
+        vi = jnp.zeros((b,), jnp.int32)
+        vf = jnp.zeros((b,), jnp.float32)
+        jaxpr = jax.make_jaxpr(cb._step_fn)(
+            cb.params, cb.cache, jnp.zeros((b, 1), jnp.int32),
+            vi, vi, vi, vi, vf, vi, jnp.ones((b,), jnp.float32))
+        return {e.primitive.name for e in jaxpr.jaxpr.eqns}
+
+    off_prims = _step_prims(cbs["off"])
+    assert not any("check" in p for p in off_prims), (
+        f"debug_checks=off traced checkify primitives into the step "
+        f"(graph must be unchanged): {sorted(off_prims)}")
+    assert cbs["off"]._debug is False \
+        and not hasattr(cbs["off"], "_checked_step")
+    assert cbs["on"]._debug is True and hasattr(cbs["on"], "_checked_step")
+    overhead_pct = (1.0 - tps["on"] / tps["off"]) * 100.0
+    print(f"[serving] debug_checks overhead: on {tps['on']:.1f} tok/s, "
+          f"off {tps['off']:.1f} tok/s ({overhead_pct:+.2f}%); "
+          "off-graph checkify-free")
+    return [dict(kind="debug_overhead", arch="llama2-7b(reduced)",
+                 requests=n_req, prompt_len=p_len, chunk_size=chunk,
+                 cache_kind="paged",
+                 tokens_per_s_debug_on=tps["on"],
+                 tokens_per_s_debug_off=tps["off"],
+                 overhead_pct=overhead_pct,
+                 off_graph_checkify_free=True)]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=str(Path(__file__).parent
@@ -256,7 +315,8 @@ def main(argv=None):
         best_ttft_speedup=best,
         rows=ttft + bench_hybrid_throughput(smoke=args.smoke)
         + bench_policies(smoke=args.smoke)
-        + bench_metrics_overhead(smoke=args.smoke),
+        + bench_metrics_overhead(smoke=args.smoke)
+        + bench_debug_overhead(smoke=args.smoke),
     )
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[serving] wrote {args.out}")

@@ -38,9 +38,12 @@ REPRO_ATTN_BACKEND=pallas \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
     tests/test_attention_kernel.py -k "not subprocess"
 
-# Timing/logging lint: no new bare print( / time.time() in src/repro —
-# Timer + log_event (repro.serving.metrics) are the sanctioned spellings.
-python scripts/lint_timing.py
+# Static analysis gate: rules R1-R8 (timing/logging hygiene, host syncs,
+# recompile hazards, Pallas tile lint, sharding completeness, dtype
+# hygiene, frozen-config mutation, untraced RNG) against the checked-in
+# (empty) baseline.  Includes R5's semantic pass over every config's
+# param tree.  Exit 1 on any new finding.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
 
 SMOKE_DIR="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_DIR"' EXIT
@@ -76,6 +79,16 @@ assert n > 0, "trace log is empty"
 print(f"[ci] metrics smoke OK ({ttft['count']} TTFT samples, "
       f"{n} trace records)")
 PYEOF
+
+# Runtime-sanitizer smoke: debug_checks=on serving across ALL cache kinds
+# (in-graph checkify assertions + allocator aliasing + recompile monitor
+# must pass clean on every KV layout, quantized blocks included).
+for kind in dense paged paged_q8 paged_q8c; do
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+        --requests 2 --batch 2 --prompt-len 7 --max-new 3 --chunk-size 4 \
+        --cache "$kind" --debug-checks --no-metrics
+done
+echo "[ci] debug_checks smoke OK (all cache kinds)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
     --smoke --out "$SMOKE_DIR/BENCH_engine.json"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

@@ -1,0 +1,20 @@
+"""Correctness tooling for the serving stack.
+
+Two layers:
+
+* **Static lint** (``repro.analysis.lint`` + ``repro.analysis.rules``) —
+  AST rules R1-R8 for the JAX bug classes that fail silently: host syncs
+  in hot paths, recompile hazards, Mosaic tile violations, incomplete
+  sharding rules, dtype drift, frozen-config mutation, untraced RNG.
+  Run via ``python -m repro.analysis`` (or the ``repro-lint`` entry).
+
+* **Runtime sanitizer** (``repro.analysis.runtime``) — checkify-based
+  in-graph assertions plus host-side allocator/compile-counter checks,
+  enabled per-engine with ``EngineConfig(debug_checks=True)``.  Off by
+  default and graph-free when off.
+"""
+from repro.analysis.lint import (Finding, Rule, all_rules, get_rule,
+                                 lint_paths, lint_source)
+
+__all__ = ["Finding", "Rule", "all_rules", "get_rule", "lint_paths",
+           "lint_source"]

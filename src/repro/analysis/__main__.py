@@ -1,0 +1,82 @@
+"""CLI: ``python -m repro.analysis [paths...]`` (also the ``repro-lint``
+console entry).
+
+Exit codes match the old ``scripts/lint_timing.py`` contract so
+``scripts/ci.sh`` gates on it unchanged: 0 clean, 1 violations, 2 usage.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import lint
+
+
+def main(argv=None) -> int:
+    root = lint.repo_root()
+    default_baseline = Path(__file__).resolve().parent / "baseline.txt"
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX-aware static lint for the repro serving stack "
+                    "(rules R1-R8; see repro.analysis.rules)")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    default=[root / "src" / "repro"],
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--baseline", type=Path, default=default_baseline,
+                    help="tolerated-findings file (default: the checked-in "
+                         "src/repro/analysis/baseline.txt, which is empty)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current findings as the new baseline "
+                         "instead of failing on them")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated subset, e.g. R1,R4 (default: all)")
+    ap.add_argument("--no-project-checks", action="store_true",
+                    help="skip whole-project semantic checks (R5 config "
+                         "loading); AST rules only")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = lint.all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.name}  {r.title}")
+        return 0
+    if args.rules:
+        want = {s.strip() for s in args.rules.split(",") if s.strip()}
+        unknown = want - {r.name for r in rules}
+        if unknown:
+            print(f"unknown rule(s): {sorted(unknown)}", file=sys.stderr)
+            return 2
+        rules = tuple(r for r in rules if r.name in want)
+    for p in args.paths:
+        if not Path(p).exists():
+            print(f"no such path: {p}", file=sys.stderr)
+            return 2
+
+    findings = lint.lint_paths(args.paths, rules,
+                               project_checks=not args.no_project_checks)
+    if args.write_baseline:
+        lint.write_baseline(findings, args.baseline)
+        print(f"[repro-lint] wrote {len(findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    fresh, stale = lint.apply_baseline(
+        findings, lint.load_baseline(args.baseline))
+    for f in sorted(fresh, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    for key, n in sorted(stale.items()):
+        print(f"[repro-lint] note: baseline entry {key!r} x{n} no longer "
+              "matches anything — debt paid down, remove it")
+    if fresh:
+        print(f"[repro-lint] {len(fresh)} violation(s) "
+              f"(baseline: {args.baseline})")
+        return 1
+    print(f"[repro-lint] clean: {len(rules)} rule(s) over "
+          f"{', '.join(str(p) for p in args.paths)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Rule framework for the repo's JAX-aware static lint suite.
+
+The serving stack's worst bugs are silent: a host sync inside the decode
+loop, a jitted body closing over mutable state (recompile storm), a Pallas
+``BlockSpec`` whose index_map arity drifts from its grid, a sharding rule
+bound to a weight name that no config produces.  Each of those is a *rule*
+here (``repro.analysis.rules``); this module owns the machinery:
+
+  * ``Rule`` — an AST-visitor check over one file (``check``) or a
+    whole-project semantic check (``check_project``), with a per-rule
+    ``scope`` (path prefixes) and ``allow`` list.
+  * Allowlists — ``{(path, symbol): (count, reason)}``: up to ``count``
+    findings of ``symbol`` in ``path`` are sanctioned (``None`` = any
+    number).  Growth beyond the cap FAILS — the same pinned-count semantics
+    ``scripts/lint_timing.py`` used; every entry carries a human reason.
+  * Baseline — a checked-in text file of tolerated finding keys
+    (``rule|path|symbol`` with a count), so the suite can land on a codebase
+    with known debt and still gate NEW violations.  This repo ships an empty
+    baseline for ``src/repro``: every real finding was fixed or explicitly
+    allowlisted with a reason.
+
+CLI: ``python -m repro.analysis`` (see ``__main__``).  Exit 0 = clean,
+1 = violations, 2 = usage error — the same contract the old timing lint had
+so ``scripts/ci.sh`` gates on it directly.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from collections import Counter
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["Finding", "Rule", "register_rule", "all_rules", "get_rule",
+           "lint_file", "lint_source", "lint_paths", "apply_allowlist",
+           "load_baseline", "write_baseline", "apply_baseline", "repo_root"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation.  ``symbol`` is the stable machine tag (what the
+    allowlist and baseline key on — line numbers drift, symbols don't)."""
+    rule: str
+    path: str                   # posix path relative to the scanned root
+    line: int
+    symbol: str
+    message: str
+
+    @property
+    def baseline_key(self) -> str:
+        return f"{self.rule}|{self.path}|{self.symbol}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """One lint rule.  Subclasses override ``check`` (per-file AST) and/or
+    ``check_project`` (whole-repo semantic checks that need imports)."""
+
+    name: str = ""
+    title: str = ""
+    # path prefixes (relative to the scanned root) this rule applies to;
+    # empty = every file
+    scope: Tuple[str, ...] = ()
+    # path prefixes (or exact rel paths) the rule never touches
+    exclude: Tuple[str, ...] = ()
+    # {(path, symbol): (max_count | None, reason)} — symbol "" matches any
+    allow: Dict[Tuple[str, str], Tuple[Optional[int], str]] = {}
+
+    def applies(self, rel: str) -> bool:
+        if any(rel.startswith(p) for p in self.exclude):
+            return False
+        return not self.scope or any(rel.startswith(p) for p in self.scope)
+
+    def check(self, rel: str, tree: ast.AST, text: str) -> List[Finding]:
+        return []
+
+    def check_project(self, root: Path) -> List[Finding]:
+        return []
+
+    # -- helpers -------------------------------------------------------------
+    def finding(self, rel: str, node: ast.AST, symbol: str,
+                message: str) -> Finding:
+        return Finding(rule=self.name, path=rel,
+                       line=getattr(node, "lineno", 0), symbol=symbol,
+                       message=message)
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register_rule(cls):
+    """Class decorator: instantiate + register a rule by its ``name``."""
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    _RULES[rule.name] = rule
+    return cls
+
+
+def all_rules() -> Tuple[Rule, ...]:
+    from repro.analysis import rules as _  # noqa: F401  (registers on import)
+    return tuple(_RULES[k] for k in sorted(_RULES))
+
+
+def get_rule(name: str) -> Rule:
+    from repro.analysis import rules as _  # noqa: F401
+    if name not in _RULES:
+        raise KeyError(f"unknown rule {name!r}; available: {sorted(_RULES)}")
+    return _RULES[name]
+
+
+# ---------------------------------------------------------------------------
+# Allowlist semantics (pinned counts, lint_timing-style)
+# ---------------------------------------------------------------------------
+
+def _allow_entry(rule: Rule, path: str, symbol: str):
+    """Match ``allow`` keys by exact rel path or path suffix (so the same
+    table works whether the scan root is ``src/repro`` or a parent dir)."""
+    for (p, s), v in rule.allow.items():
+        if s not in ("", symbol):
+            continue
+        if path == p or path.endswith("/" + p):
+            return v
+    return None
+
+
+def apply_allowlist(rule: Rule, findings: Sequence[Finding]) -> List[Finding]:
+    """Suppress up to the allowed count per (path, symbol); everything past
+    the cap is reported with the cap + reason attached."""
+    out: List[Finding] = []
+    groups: Dict[Tuple[str, str], List[Finding]] = {}
+    for f in findings:
+        groups.setdefault((f.path, f.symbol), []).append(f)
+    for (path, symbol), fs in groups.items():
+        entry = _allow_entry(rule, path, symbol)
+        if entry is None:
+            out.extend(fs)
+            continue
+        cap, reason = entry
+        if cap is None or len(fs) <= cap:
+            continue                       # within the pinned budget
+        for f in fs:
+            out.append(dataclasses.replace(
+                f, message=f"{f.message} — {len(fs)} found, {cap} allowed "
+                           f"({reason})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline (checked-in tolerated-findings file; ships empty)
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> Counter:
+    """Baseline line format: ``<count> <rule>|<path>|<symbol>``; ``#``
+    comments and blank lines ignored."""
+    counts: Counter = Counter()
+    if not Path(path).exists():
+        return counts
+    for raw in Path(path).read_text(encoding="utf-8").splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        n, _, key = line.partition(" ")
+        counts[key.strip()] += int(n)
+    return counts
+
+
+def write_baseline(findings: Sequence[Finding], path: Path):
+    counts = Counter(f.baseline_key for f in findings)
+    lines = ["# repro.analysis baseline — tolerated findings, one",
+             "# '<count> <rule>|<path>|<symbol>' per line.  Regenerate with:",
+             "#   python -m repro.analysis --write-baseline",
+             "# An empty baseline means src/repro is lint-clean."]
+    for key in sorted(counts):
+        lines.append(f"{counts[key]} {key}")
+    Path(path).write_text("\n".join(lines) + "\n", encoding="utf-8")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Counter) -> Tuple[List[Finding], Counter]:
+    """Subtract baselined findings; returns (new findings, stale entries —
+    baseline debt that no longer exists and should be dropped)."""
+    budget = Counter(baseline)
+    fresh: List[Finding] = []
+    for f in findings:
+        if budget[f.baseline_key] > 0:
+            budget[f.baseline_key] -= 1
+        else:
+            fresh.append(f)
+    stale = Counter({k: v for k, v in budget.items() if v > 0})
+    return fresh, stale
+
+
+# ---------------------------------------------------------------------------
+# Runners
+# ---------------------------------------------------------------------------
+
+def lint_source(rule: Rule, rel: str, text: str,
+                allowlist: bool = True) -> List[Finding]:
+    """Run ONE rule over one source string (the unit-test entry point)."""
+    if not rule.applies(rel):
+        return []
+    tree = ast.parse(text)
+    found = rule.check(rel, tree, text)
+    return apply_allowlist(rule, found) if allowlist else list(found)
+
+
+def lint_file(path: Path, rel: str, rules: Sequence[Rule]) -> List[Finding]:
+    text = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding(rule="parse", path=rel, line=e.lineno or 0,
+                        symbol="syntax-error", message=f"unparseable: {e}")]
+    out: List[Finding] = []
+    for rule in rules:
+        if rule.applies(rel):
+            out.extend(apply_allowlist(rule, rule.check(rel, tree, text)))
+    return out
+
+
+def lint_paths(paths: Iterable[Path], rules: Sequence[Rule], *,
+               project_checks: bool = True) -> List[Finding]:
+    """Lint every ``*.py`` under each path (files are scanned relative to
+    the given root so rule scopes like ``serving/`` match)."""
+    out: List[Finding] = []
+    for root in paths:
+        root = Path(root)
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        base = root.parent if root.is_file() else root
+        for f in files:
+            rel = f.relative_to(base).as_posix()
+            out.extend(lint_file(f, rel, rules))
+        if project_checks and root.is_dir():
+            for rule in rules:
+                out.extend(apply_allowlist(rule, rule.check_project(root)))
+    return out
+
+
+def repo_root() -> Path:
+    """The repo checkout root (this file lives at src/repro/analysis/)."""
+    return Path(__file__).resolve().parents[3]

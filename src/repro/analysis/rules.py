@@ -1,0 +1,725 @@
+"""The repo-specific lint rules (R1–R8).
+
+Every rule targets a bug class that is *silent* in JAX: nothing crashes,
+the serving loop just gets slower (host syncs, recompile storms), subtly
+wrong (float64 drift, frozen-config mutation), or falls over only on real
+TPUs (Mosaic tile constraints).  Deliberate exceptions live in each rule's
+``allow`` table with a pinned count and a reason — growth past the pin
+fails CI, exactly like the old ``scripts/lint_timing.py`` contract.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.lint import Finding, Rule, register_rule
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+#: mesh axis names every PartitionSpec in this repo may legally reference
+#: (see repro.launch.mesh: ("pod", "data", "model") / ("data", "model")).
+MESH_AXES = ("pod", "data", "model")
+
+
+def dotted(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _int_const(node) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _int_const(node.operand)
+        return -v if v is not None else None
+    return None
+
+
+def _nondefault_params(fn) -> Set[str]:
+    """Positional params WITHOUT defaults — in this codebase those are the
+    traced arguments; statics ride in as kw-only / defaulted captures
+    (``lambda i, tbl, _nd=nd: ...``)."""
+    args = fn.args
+    pos = list(args.posonlyargs) + list(args.args)
+    n_def = len(args.defaults)
+    names = {a.arg for a in (pos[:-n_def] if n_def else pos)}
+    names.discard("self")
+    names.discard("cls")
+    return names
+
+
+def _static_argnames(deco: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in deco.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+    return out
+
+
+class _TracedFunctions(ast.NodeVisitor):
+    """Find every function whose body JAX traces: jit-decorated defs,
+    defs wrapped at a ``jax.jit(f)`` call site, lambdas inside jit calls,
+    Pallas kernel bodies (first arg of ``pallas_call`` / ``*_kernel``
+    naming convention)."""
+
+    def __init__(self):
+        self.defs: Dict[str, List[ast.AST]] = {}
+        self.traced: List[Tuple[ast.AST, Set[str]]] = []  # (fn, static names)
+        self._wrapped: List[Tuple[str, Set[str]]] = []
+
+    def _record_def(self, node):
+        self.defs.setdefault(node.name, []).append(node)
+        statics: Optional[Set[str]] = None
+        for deco in node.decorator_list:
+            d = dotted(deco if not isinstance(deco, ast.Call) else deco.func)
+            if d in _JIT_NAMES:
+                statics = _static_argnames(deco) \
+                    if isinstance(deco, ast.Call) else set()
+            elif isinstance(deco, ast.Call) and d in _PARTIAL_NAMES \
+                    and deco.args and dotted(deco.args[0]) in _JIT_NAMES:
+                statics = _static_argnames(deco)
+        if statics is not None:
+            self.traced.append((node, statics))
+        elif node.name.endswith("_kernel"):
+            self.traced.append((node, set()))
+
+    def visit_FunctionDef(self, node):
+        self._record_def(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        d = dotted(node.func)
+        if d in _JIT_NAMES or d.endswith("pallas_call"):
+            statics = _static_argnames(node) if d in _JIT_NAMES else set()
+            if node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    self.traced.append((target, statics))
+                elif isinstance(target, ast.Name):
+                    self._wrapped.append((target.id, statics))
+        self.generic_visit(node)
+
+    def resolve(self, tree: ast.AST) -> List[Tuple[ast.AST, Set[str]]]:
+        self.visit(tree)
+        seen = {id(fn) for fn, _ in self.traced}
+        for name, statics in self._wrapped:
+            for fn in self.defs.get(name, []):
+                if id(fn) not in seen:
+                    self.traced.append((fn, statics))
+                    seen.add(id(fn))
+        return self.traced
+
+
+def traced_functions(tree: ast.AST) -> List[Tuple[ast.AST, Set[str]]]:
+    return _TracedFunctions().resolve(tree)
+
+
+def _body_nodes(fn) -> List[ast.AST]:
+    """All nodes in a traced body, nested defs included (they trace too)."""
+    if isinstance(fn, ast.Lambda):
+        return list(ast.walk(fn.body))
+    out: List[ast.AST] = []
+    for stmt in fn.body:
+        out.extend(ast.walk(stmt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R1 — timing/logging hygiene (migrated from scripts/lint_timing.py)
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R1TimingLint(Rule):
+    name = "R1"
+    title = "no bare print()/time.time() — use repro.serving.metrics"
+    # metrics/trace ARE the sanctioned implementations; the analysis CLI's
+    # job is printing its report
+    exclude = ("serving/metrics.py", "serving/trace.py", "analysis/")
+    # pinned counts carried over verbatim from scripts/lint_timing.py:
+    # launch drivers print their human-facing reports; ckpt manifests stamp
+    # a wall-clock save time.  Anything beyond these counts fails.
+    allow = {
+        ("launch/roofline.py", "print"):
+            (2, "roofline report is a human-facing CLI table"),
+        ("launch/dryrun.py", "print"):
+            (1, "dry-run summary line for operators"),
+        ("launch/serve.py", "print"):
+            (7, "serve demo CLI: banner + streamed token echo"),
+        ("ckpt/manager.py", "time.time"):
+            (1, "manifest save timestamp, not a measurement"),
+    }
+
+    def check(self, rel, tree, text):
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                out.append(self.finding(
+                    rel, node, "print",
+                    "bare print(): route through log_event/Timer "
+                    "(repro.serving.metrics)"))
+            elif dotted(node.func) == "time.time":
+                out.append(self.finding(
+                    rel, node, "time.time",
+                    "bare time.time(): use Timer (repro.serving.metrics) "
+                    "so measurements land in the registry"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R2 — host-sync hazards in the serving/kernel hot paths
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R2HostSync(Rule):
+    name = "R2"
+    title = "host syncs in hot paths (.item/.tolist/np.asarray/device_get)"
+    scope = ("serving/", "kernels/")
+    allow = {
+        ("serving/scheduler.py", "np.asarray"):
+            (1, "the ONE sanctioned device->host boundary per iteration: "
+                "sampled ids + logprobs come back as a single batch"),
+        ("serving/kvcache.py", ".tolist"):
+            (1, "frees block ids from the HOST numpy table mirror — no "
+                "device array involved"),
+        ("kernels/ops.py", "np.asarray"):
+            (2, "trace-time static gather-index build from host ints; "
+                "never sees a device array"),
+    }
+
+    def check(self, rel, tree, text):
+        out = []
+        traced = traced_functions(tree)
+        traced_nodes = {id(n) for fn, _ in traced for n in _body_nodes(fn)}
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist") \
+                    and not node.args:
+                out.append(self.finding(
+                    rel, node, f".{node.func.attr}",
+                    f".{node.func.attr}() forces a device sync; keep "
+                    "results on device or batch the transfer"))
+            elif d in ("np.asarray", "numpy.asarray", "jax.device_get"):
+                sym = "np.asarray" if d.endswith("asarray") else d
+                out.append(self.finding(
+                    rel, node, sym,
+                    f"{d}() on a device value blocks the dispatch "
+                    "pipeline; hot paths must stay async"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and id(node) in traced_nodes and len(node.args) == 1:
+                out.append(self.finding(
+                    rel, node, f"host-{node.func.id}",
+                    f"{node.func.id}() inside a traced body concretizes a "
+                    "tracer (ConcretizationError on abstract values, host "
+                    "sync otherwise)"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R3 — recompile hazards
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R3Recompile(Rule):
+    name = "R3"
+    title = "recompile hazards in jitted bodies"
+    allow = {
+        ("serving/scheduler.py", "mutable-closure"):
+            (1, "deliberate compile-event hook: self._compiles increments "
+                "at trace time only, one bump per compiled slab shape"),
+    }
+
+    def check(self, rel, tree, text):
+        out = []
+        for fn, statics in traced_functions(tree):
+            params = _nondefault_params(fn) - statics \
+                if not isinstance(fn, ast.Lambda) else set()
+            for node in _body_nodes(fn):
+                # (a) writes to closed-over mutable state: every re-trace
+                # repeats the side effect, and the write never lands in the
+                # compiled program — classic recompile-storm smell
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    tgts = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in tgts:
+                        if isinstance(t, ast.Attribute) \
+                                and dotted(t).startswith("self."):
+                            out.append(self.finding(
+                                rel, node, "mutable-closure",
+                                f"jitted body writes {dotted(t)}: traced "
+                                "functions must be pure (side effect runs "
+                                "only at trace time)"))
+                elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                    out.append(self.finding(
+                        rel, node, "mutable-closure",
+                        "global/nonlocal write inside a jitted body"))
+                # (b) Python branching on a traced argument value — forces
+                # concretization; branch on .shape/.ndim/.dtype instead
+                elif isinstance(node, (ast.If, ast.While)):
+                    for leaf in ast.walk(node.test):
+                        if isinstance(leaf, ast.Name) and leaf.id in params \
+                                and not self._shape_context(node.test, leaf):
+                            out.append(self.finding(
+                                rel, node, "traced-branch",
+                                f"Python if/while on traced arg "
+                                f"{leaf.id!r}: use jnp.where/lax.cond "
+                                "(shapes/dtypes are fine to branch on)"))
+                            break
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d in _JIT_NAMES and self._in_loop(tree, node):
+                out.append(self.finding(
+                    rel, node, "jit-in-loop",
+                    "jax.jit() inside a loop builds a fresh cache entry "
+                    "per iteration; hoist the wrap"))
+        # (c) mutable default on a static arg: unhashable -> every call
+        # misses the jit cache
+        for fn, statics in traced_functions(tree):
+            if isinstance(fn, ast.Lambda):
+                continue
+            args = fn.args
+            pos = list(args.posonlyargs) + list(args.args)
+            defaults = list(args.defaults)
+            for a, dflt in zip(pos[len(pos) - len(defaults):], defaults):
+                if a.arg in statics and isinstance(
+                        dflt, (ast.List, ast.Dict, ast.Set)):
+                    out.append(self.finding(
+                        rel, fn, "nonhashable-static",
+                        f"static arg {a.arg!r} defaults to a mutable "
+                        "literal: unhashable, so the jit cache never hits"))
+            for a, dflt in zip(args.kwonlyargs, args.kw_defaults):
+                if a.arg in statics and isinstance(
+                        dflt, (ast.List, ast.Dict, ast.Set)):
+                    out.append(self.finding(
+                        rel, fn, "nonhashable-static",
+                        f"static arg {a.arg!r} defaults to a mutable "
+                        "literal: unhashable, so the jit cache never hits"))
+        return out
+
+    @staticmethod
+    def _shape_context(test: ast.AST, leaf: ast.Name) -> bool:
+        """True if the param only appears under .shape/.ndim/.dtype/.size
+        (static metadata — branching on it is fine)."""
+        for node in ast.walk(test):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in ("shape", "ndim", "dtype", "size"):
+                if any(n is leaf for n in ast.walk(node.value)):
+                    return True
+        return False
+
+    @staticmethod
+    def _in_loop(tree: ast.AST, target: ast.Call) -> bool:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.For, ast.While)):
+                for inner in ast.walk(node):
+                    if inner is target:
+                        return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# R4 — Pallas tile / grid-spec lint
+# ---------------------------------------------------------------------------
+
+_SUBLANE, _LANE = 8, 128     # f32 Mosaic tile quantum (second-minor, minor)
+
+
+@register_rule
+class R4PallasTiles(Rule):
+    name = "R4"
+    title = "Pallas BlockSpec/grid/scratch consistency"
+    scope = ("kernels/",)
+
+    def check(self, rel, tree, text):
+        out = []
+        assigns = self._simple_assigns(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d.endswith("PrefetchScalarGridSpec"):
+                out.extend(self._check_gridspec(rel, node, assigns,
+                                                prefetched=True))
+            elif d.endswith("pallas_call"):
+                out.extend(self._check_gridspec(rel, node, assigns,
+                                                prefetched=False))
+            elif d.endswith("VMEM") and node.args:
+                out.extend(self._check_scratch(rel, node))
+        return out
+
+    @staticmethod
+    def _simple_assigns(tree) -> Dict[str, ast.AST]:
+        """name -> value for single-target ``name = <tuple/list literal>``
+        (used to resolve ``grid=grid`` / ``in_specs=specs`` indirections)."""
+        out: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                out[node.targets[0].id] = node.value
+        return out
+
+    def _check_gridspec(self, rel, call: ast.Call, assigns, *, prefetched):
+        out = []
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        grid = kw.get("grid")
+        if isinstance(grid, ast.Name):
+            grid = assigns.get(grid.id)
+        if not isinstance(grid, (ast.Tuple, ast.List)):
+            return out                      # grid rank not statically known
+        rank = len(grid.elts)
+        n_prefetch = _int_const(kw.get("num_scalar_prefetch")) or 0 \
+            if prefetched else 0
+        expect = rank + n_prefetch
+        specs = []
+        for key in ("in_specs", "out_specs"):
+            v = kw.get(key)
+            if isinstance(v, ast.Name):
+                v = assigns.get(v.id)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                specs.extend(v.elts)
+            elif v is not None:
+                specs.append(v)
+        for spec in specs:
+            if not (isinstance(spec, ast.Call)
+                    and dotted(spec.func).endswith("BlockSpec")):
+                continue
+            out.extend(self._check_blockspec(rel, spec, expect))
+        return out
+
+    def _check_blockspec(self, rel, spec: ast.Call, expect_arity: int):
+        out = []
+        shape = spec.args[0] if spec.args else None
+        imap = spec.args[1] if len(spec.args) > 1 else None
+        for k in spec.keywords:
+            if k.arg == "index_map":
+                imap = k.value
+            elif k.arg in ("block_shape", "shape"):
+                shape = k.value
+        if isinstance(imap, ast.Lambda):
+            args = imap.args
+            pos = list(args.posonlyargs) + list(args.args)
+            arity = len(pos) - len(args.defaults)  # defaults = static capture
+            if arity != expect_arity:
+                out.append(self.finding(
+                    rel, spec, "index-map-arity",
+                    f"index_map takes {arity} grid args but the grid spec "
+                    f"provides {expect_arity} (grid rank + scalar-prefetch "
+                    "operands); Mosaic will mis-slice"))
+        if isinstance(shape, (ast.Tuple, ast.List)) and len(shape.elts) >= 2:
+            minor = _int_const(shape.elts[-1])
+            sub = _int_const(shape.elts[-2])
+            if minor is not None and minor >= _LANE and minor % _LANE:
+                out.append(self.finding(
+                    rel, spec, "tile-shape",
+                    f"block minor dim {minor} is not a multiple of "
+                    f"{_LANE} (f32 lane tile); Mosaic pads or rejects"))
+            if sub is not None and sub >= _SUBLANE and sub % _SUBLANE:
+                out.append(self.finding(
+                    rel, spec, "tile-shape",
+                    f"block sublane dim {sub} is not a multiple of "
+                    f"{_SUBLANE} (f32 sublane tile)"))
+        return out
+
+    def _check_scratch(self, rel, call: ast.Call):
+        out = []
+        shape = call.args[0]
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            if not shape.elts:
+                out.append(self.finding(
+                    rel, call, "scratch-shape",
+                    "0-d VMEM scratch: allocate at least (1, 1)"))
+            for el in shape.elts:
+                v = _int_const(el)
+                if v is not None and v <= 0:
+                    out.append(self.finding(
+                        rel, call, "scratch-shape",
+                        f"VMEM scratch dim {v} <= 0"))
+            minor = _int_const(shape.elts[-1]) if shape.elts else None
+            if minor is not None and minor >= _LANE and minor % _LANE:
+                out.append(self.finding(
+                    rel, call, "scratch-shape",
+                    f"VMEM scratch minor dim {minor} not a multiple of "
+                    f"{_LANE}; wastes a partial lane tile"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R5 — sharding completeness
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R5Sharding(Rule):
+    name = "R5"
+    title = "PartitionSpec axes exist; sharding rule names resolve"
+
+    #: payload leaf names only quantized trees contain — classified by the
+    #: dedicated payload path in parallel/sharding.py, so not "dead" even
+    #: though plain param trees never produce them
+    PAYLOAD_NAMES = frozenset({"packed", "g", "mu", "scale", "bits"})
+    SPECIAL_NAMES = frozenset({"embed", "head", "conv"})
+
+    def check(self, rel, tree, text):
+        """Per-file half: every string literal inside a PartitionSpec
+        constructor must name a real mesh axis."""
+        out = []
+        aliases = self._spec_aliases(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            base = dotted(node.func)
+            if not (base in aliases or base.endswith("PartitionSpec")):
+                continue
+            for arg in node.args:
+                for leaf in ast.walk(arg):
+                    if isinstance(leaf, ast.Constant) \
+                            and isinstance(leaf.value, str) \
+                            and leaf.value not in MESH_AXES:
+                        out.append(self.finding(
+                            rel, node, "unknown-axis",
+                            f"PartitionSpec axis {leaf.value!r} is not a "
+                            f"mesh axis {MESH_AXES}; GSPMD raises at "
+                            "sharding time, not at build time"))
+        return out
+
+    @staticmethod
+    def _spec_aliases(tree) -> Set[str]:
+        """Local names PartitionSpec was imported as (P, _P, ...)."""
+        out: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if a.name == "PartitionSpec":
+                        out.add(a.asname or a.name)
+        return out
+
+    def check_project(self, root):
+        """Semantic half: load every config's param tree and verify the
+        sharding rule tables cover it — and contain no dead names."""
+        if not (root / "parallel" / "sharding.py").exists():
+            return []                      # not scanning the real package
+        try:
+            from repro.configs import ARCHS, get_config, reduced
+            from repro.models import registry
+            from repro.parallel import sharding
+            import jax
+        except Exception as e:                      # pragma: no cover
+            return [Finding(self.name, "parallel/sharding.py", 0,
+                            "import-error",
+                            f"cannot import repro for semantic check: {e}")]
+        classified = (set(sharding._COL_PARALLEL)
+                      | set(sharding._ROW_PARALLEL)
+                      | set(sharding._REPLICATED_1D)
+                      | self.PAYLOAD_NAMES | self.SPECIAL_NAMES)
+        seen: Set[str] = set()
+        out: List[Finding] = []
+        for arch in sorted(ARCHS):
+            cfg = reduced(get_config(arch))
+            shapes = registry.param_shapes(cfg)
+            leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+            for path, leaf in leaves:
+                name = str(getattr(path[-1], "key", path[-1]))
+                seen.add(name)
+                if name not in classified and getattr(leaf, "ndim", 0) >= 2:
+                    out.append(Finding(
+                        self.name, "parallel/sharding.py", 0,
+                        "unsharded-leaf",
+                        f"param leaf {name!r} ({arch}, ndim="
+                        f"{leaf.ndim}) matches no sharding rule: it "
+                        "replicates silently and eats HBM at TP>1"))
+        for name in sorted(set(sharding._COL_PARALLEL)
+                           | set(sharding._ROW_PARALLEL)):
+            if name not in seen:
+                out.append(Finding(
+                    self.name, "parallel/sharding.py", 0, "dead-rule-name",
+                    f"sharding rule binds weight name {name!r} but no "
+                    "config's param tree produces it (stale rule)"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R6 — dtype hygiene
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R6DtypeHygiene(Rule):
+    name = "R6"
+    title = "no float64 / builtin-float dtypes in hot-path code"
+    # offline calibration and lattice construction legitimately use f64;
+    # the serving/kernel/model hot path must not
+    scope = ("kernels/", "models/", "serving/")
+
+    _BAD_DOTTED = {"np.float64", "numpy.float64", "jnp.float64",
+                   "np.double", "jnp.double"}
+    _BAD_STR = {"float64", "f8", "double"}
+
+    def check(self, rel, tree, text):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) \
+                    and dotted(node) in self._BAD_DOTTED:
+                out.append(self.finding(
+                    rel, node, "float64",
+                    f"{dotted(node)} in hot-path code: JAX defaults to "
+                    "f32; f64 silently doubles bytes and falls off the "
+                    "fast path (enable_x64 is off)"))
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    # dotted float64 values are caught by the Attribute
+                    # walk above; here only the spellings it can't see
+                    if kw.arg == "dtype" and self._is_bad(kw.value) \
+                            and not isinstance(kw.value, ast.Attribute):
+                        out.append(self.finding(
+                            rel, node, "float64",
+                            "dtype=float/'float64' requests f64; spell "
+                            "the width explicitly (jnp.float32)"))
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "astype" and node.args \
+                        and self._is_bad(node.args[0]):
+                    out.append(self.finding(
+                        rel, node, "float64",
+                        ".astype(float) upcasts to f64 under x64 and is "
+                        "ambiguous without it; use an explicit dtype"))
+        return out
+
+    def _is_bad(self, node) -> bool:
+        if isinstance(node, ast.Name) and node.id == "float":
+            return True
+        if isinstance(node, ast.Constant) and node.value in self._BAD_STR:
+            return True
+        return dotted(node) in self._BAD_DOTTED
+
+
+# ---------------------------------------------------------------------------
+# R7 — frozen-EngineConfig mutation
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R7FrozenConfig(Rule):
+    name = "R7"
+    title = "no mutation of frozen configs (EngineConfig et al.)"
+    allow = {
+        ("serving/engine.py", "object.__setattr__"):
+            (1, "EngineConfig.__post_init__ canonicalizes stop_tokens to a "
+                "tuple — the one sanctioned frozen-dataclass write"),
+        ("serving/sampling.py", "object.__setattr__"):
+            (1, "SamplingParams.__post_init__ normalization, same pattern"),
+    }
+
+    def check(self, rel, tree, text):
+        out = []
+        cfg_vars = self._engineconfig_vars(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and dotted(node.func) == "object.__setattr__":
+                out.append(self.finding(
+                    rel, node, "object.__setattr__",
+                    "object.__setattr__ defeats frozen dataclasses; "
+                    "outside __post_init__ use .replace()"))
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "setattr" and node.args \
+                    and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in cfg_vars:
+                out.append(self.finding(
+                    rel, node, "config-mutation",
+                    f"setattr on EngineConfig {node.args[0].id!r}; use "
+                    ".replace() — the engine caches geometry off it"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in tgts:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id in cfg_vars:
+                        out.append(self.finding(
+                            rel, node, "config-mutation",
+                            f"assigning {dotted(t)}: EngineConfig is "
+                            "frozen; use .replace() to derive a new one"))
+        return out
+
+    @staticmethod
+    def _engineconfig_vars(tree) -> Set[str]:
+        """Names bound to EngineConfig(...) or annotated EngineConfig."""
+        out: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and dotted(node.value.func).split(".")[-1] \
+                    == "EngineConfig":
+                out.add(node.targets[0].id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for a in (list(node.args.posonlyargs) + list(node.args.args)
+                          + list(node.args.kwonlyargs)):
+                    if a.annotation is not None and "EngineConfig" in \
+                            ast.dump(a.annotation):
+                        out.add(a.arg)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# R8 — untraced randomness outside data/
+# ---------------------------------------------------------------------------
+
+@register_rule
+class R8UntracedRandom(Rule):
+    name = "R8"
+    title = "np.random/random outside data/: untraced, breaks replay"
+    exclude = ("data/",)
+    allow = {
+        ("launch/serve.py", "np.random"):
+            (1, "seeded demo-prompt generator; host-side, runs once before "
+                "serving starts — sampling itself is in-graph"),
+    }
+
+    def check(self, rel, tree, text):
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d.startswith(("np.random.", "numpy.random.")):
+                out.append(self.finding(
+                    rel, node, "np.random",
+                    f"{d}(): host-side RNG is invisible to jit and breaks "
+                    "seeded replay; thread a jax.random key (or move it "
+                    "to data/)"))
+            elif d.startswith("random.") and self._imports_random(tree):
+                out.append(self.finding(
+                    rel, node, "random",
+                    f"{d}(): stdlib RNG shares global state across "
+                    "requests; use jax.random with a per-request seed"))
+        return out
+
+    @staticmethod
+    def _imports_random(tree) -> bool:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import) \
+                    and any(a.name == "random" for a in node.names):
+                return True
+        return False

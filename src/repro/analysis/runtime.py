@@ -1,0 +1,224 @@
+"""Runtime sanitizer for the serving engine (``EngineConfig.debug_checks``).
+
+Layer 2 of the analysis subsystem: the invariants static lint cannot see
+because they depend on runtime DATA — a corrupted block table, NaN logits
+from a bad payload, an allocator handing one block to two slots.  Three
+mechanisms:
+
+* **In-graph checkify assertions** (``make_checked_step``): traced into
+  the jitted serving step, so they check the exact tensors the compiled
+  program consumes — block-table ids ``< num_blocks``, position bounds
+  ``pos + take <= s_cache``, finite sampled logprobs after ``chunk_step``
+  (the NaN guard).  Only built when ``debug_checks=True``; the disabled
+  engine jits the raw step function, so the compiled graph is untouched
+  (benchmarks/serving.py asserts this).
+
+* **Host-side structural checks**: ``check_block_aliasing`` walks the
+  ``SlotPages`` table each iteration and rejects any block referenced by
+  two slots or simultaneously live + free — the invariant prefix-caching's
+  copy-on-write sharing will relax *deliberately* via refcounts, so it
+  must hold everywhere today (see ROADMAP).  ``check_payload_alignment``
+  validates packed GLVQ payloads against their ``QuantLinearMeta`` once at
+  engine build (shapes are static; no per-step cost).
+
+* **RecompileMonitor**: trips when the PR-7 compile counter exceeds the
+  scheduler policy's program budget — the recompile-storm detector.
+
+Every trip raises ``DebugCheckError`` (``.check`` names the tripped
+check) after counting ``serving_debug_check_failures_total{check=}`` in
+the engine's metrics registry.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+__all__ = ["DebugCheckError", "RecompileMonitor", "make_checked_step",
+           "consume_error", "check_block_aliasing",
+           "check_payload_alignment", "FAILURE_COUNTER"]
+
+#: the Prometheus-visible trip counter (PR-7 metrics registry)
+FAILURE_COUNTER = "serving_debug_check_failures_total"
+
+_TAG_OPEN, _TAG_CLOSE = "[debug:", "]"
+
+
+class DebugCheckError(RuntimeError):
+    """A sanitizer invariant failed.  ``check`` is the short machine name
+    (block_table | bounds | nan_logits | block_aliasing | recompile_storm
+    | payload_alignment) — also the ``check=`` label on the counter."""
+
+    def __init__(self, check: str, message: str):
+        super().__init__(f"[debug:{check}] {message}")
+        self.check = check
+
+
+def _tag(check: str, message: str) -> str:
+    return f"{_TAG_OPEN}{check}{_TAG_CLOSE} {message}"
+
+
+def parse_failure(message: str) -> Tuple[str, str]:
+    """Recover (check, message) from a tagged checkify error string."""
+    i = message.find(_TAG_OPEN)
+    if i < 0:
+        return "unknown", message
+    j = message.find(_TAG_CLOSE, i)
+    if j < 0:
+        return "unknown", message
+    return message[i + len(_TAG_OPEN):j], message[j + 1:].strip()
+
+
+# ---------------------------------------------------------------------------
+# in-graph checks (checkify)
+# ---------------------------------------------------------------------------
+
+def make_checked_step(step_fn, *, s_cache: int, num_blocks: Optional[int]):
+    """Wrap the scheduler's step closure with in-graph assertions and jit.
+
+    The wrapped callable returns ``(err, (out, cache))`` — the scheduler
+    surfaces ``err`` through :func:`consume_error` right after the host
+    sync it already pays for the sampled ids.  ``num_blocks`` is None for
+    the dense cache kind (no block table to validate).
+    """
+
+    def body(p, c, toks, poss, lens, seeds, sidx, temps, tks, tps):
+        if num_blocks is not None and isinstance(c, dict) and "table" in c:
+            tbl = c["table"]
+            checkify.check(
+                jnp.all((tbl >= 0) & (tbl < num_blocks)),
+                _tag("block_table",
+                     f"block-table id outside [0, {num_blocks}): the step "
+                     "would gather/scatter a foreign slot's KV blocks"))
+        checkify.check(
+            jnp.all(lens >= 0) & jnp.all(poss >= 0)
+            & jnp.all(poss + lens <= s_cache),
+            _tag("bounds",
+                 f"slot positions escape the cache: need 0 <= pos and "
+                 f"pos + take <= s_cache ({s_cache})"))
+        out, c2 = step_fn(p, c, toks, poss, lens, seeds, sidx,
+                          temps, tks, tps)
+        toks_out, lp, tv, ti = out
+        live = lens > 0
+        finite = jnp.all(jnp.where(live, jnp.isfinite(lp), True))
+        if tv.ndim == 2 and tv.shape[1]:
+            finite = finite & jnp.all(
+                jnp.where(live[:, None], jnp.isfinite(tv), True))
+        checkify.check(
+            finite,
+            _tag("nan_logits",
+                 "non-finite logprob on a live slot after chunk_step: "
+                 "NaN/Inf reached the logits (payload corruption, overflow, "
+                 "or an unmasked pad lane)"))
+        return out, c2
+
+    return jax.jit(checkify.checkify(body, errors=checkify.user_checks))
+
+
+def consume_error(err) -> Optional[DebugCheckError]:
+    """Turn a checkify error (first failed check, if any) into a
+    DebugCheckError — or None on a clean step.  Calling ``err.get()``
+    syncs; debug mode accepts that."""
+    msg = err.get()
+    if not msg:
+        return None
+    check, detail = parse_failure(msg)
+    return DebugCheckError(check, detail)
+
+
+# ---------------------------------------------------------------------------
+# host-side structural checks
+# ---------------------------------------------------------------------------
+
+def check_block_aliasing(pages) -> int:
+    """No pool block may be referenced by two slots, nor be live in a
+    table while sitting on the free list.  This is THE precondition the
+    prefix-caching roadmap item will relax with refcounted copy-on-write
+    sharing; until then any aliasing is allocator corruption.  Returns the
+    number of live block references checked."""
+    owner = {}
+    free = getattr(pages.alloc, "_free_set", frozenset())
+    for slot in range(pages.table.shape[0]):
+        n = int(pages.counts[slot])
+        for b in pages.table[slot, :n]:
+            b = int(b)
+            prev = owner.get(b)
+            if prev is not None:
+                raise DebugCheckError(
+                    "block_aliasing",
+                    f"block {b} is referenced by slots {prev} and {slot}: "
+                    "appends to one slot would corrupt the other's KV")
+            if b in free:
+                raise DebugCheckError(
+                    "block_aliasing",
+                    f"block {b} is live in slot {slot}'s table AND on the "
+                    "free list: the next alloc would hand it out again")
+            owner[b] = slot
+    return len(owner)
+
+
+def check_payload_alignment(params, qmeta) -> int:
+    """Packed GLVQ payloads must agree with their ``QuantLinearMeta``:
+    ``packed`` is uint32 [lead..., K, n_words].  A mismatched word count
+    mis-strides every decode; wrong dtype breaks the bit unpack.  Static
+    shapes — runs once at engine build.  Returns payloads checked."""
+    if not qmeta:
+        return 0
+    checked = 0
+
+    def walk(node, names):
+        nonlocal checked
+        if isinstance(node, dict):
+            if "packed" in node and "scale" in node:
+                key = tuple(names[-2:])
+                meta = qmeta.get(key) if hasattr(qmeta, "get") else None
+                packed = node["packed"]
+                if str(packed.dtype) != "uint32":
+                    raise DebugCheckError(
+                        "payload_alignment",
+                        f"payload {key}: packed dtype {packed.dtype}, "
+                        "expected uint32 (bit-unpack reads 32-bit words)")
+                if meta is not None:
+                    k, words = packed.shape[-2], packed.shape[-1]
+                    if words != meta.n_words or k != meta.k:
+                        raise DebugCheckError(
+                            "payload_alignment",
+                            f"payload {key}: packed [..., {k}, {words}] "
+                            f"vs meta (k={meta.k}, n_words={meta.n_words})"
+                            " — decode would mis-stride every group")
+                checked += 1
+                return
+            for name, v in node.items():
+                walk(v, names + (name,))
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v, names)
+
+    walk(params, ())
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# recompile-storm detector
+# ---------------------------------------------------------------------------
+
+class RecompileMonitor:
+    """Trips when the compile-event counter (PR 7: one bump per traced
+    slab program) exceeds the policy's program budget.  A healthy engine
+    compiles one program per policy rung and then never again; unstable
+    input signatures (weak types, drifting shapes, non-hashable statics)
+    show up here as compiles growing with iterations."""
+
+    def __init__(self, max_programs: int):
+        self.max_programs = max(1, int(max_programs))
+
+    def observe(self, compiles: int, iterations: int):
+        if compiles > self.max_programs:
+            raise DebugCheckError(
+                "recompile_storm",
+                f"{compiles} step programs compiled in {iterations} "
+                f"iterations, over the policy budget of "
+                f"{self.max_programs}: the step input signature is "
+                "unstable (shape/dtype drift or non-hashable statics)")

@@ -188,6 +188,11 @@ def main(argv=None):
     ap.add_argument("--sync-timing", action="store_true",
                     help="block_until_ready inside the per-iteration "
                          "dispatch timer (honest latencies, no pipelining)")
+    ap.add_argument("--debug-checks", action="store_true",
+                    help="runtime sanitizer (repro.analysis.runtime): "
+                         "in-graph checkify assertions + allocator aliasing "
+                         "+ recompile-storm detection; trips raise and count "
+                         "serving_debug_check_failures_total")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -224,7 +229,8 @@ def main(argv=None):
                         chunk_size=args.chunk_size, s_cache=s_cache,
                         slots=args.batch, topk_logprobs=args.logprobs,
                         metrics=not args.no_metrics, trace=args.trace,
-                        sync_timing=args.sync_timing)
+                        sync_timing=args.sync_timing,
+                        debug_checks=args.debug_checks)
     if args.policy == "token_budget":
         budget = args.token_budget or args.batch * max(args.chunk_size, 1)
         policy = TokenBudgetPolicy(budget)

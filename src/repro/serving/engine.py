@@ -75,7 +75,13 @@ class EngineConfig:
     / ``paged_attention`` / ``append_chunk`` dispatch plus host spans per
     engine iteration), ``sync_timing`` (``block_until_ready`` inside the
     per-iteration dispatch timer, trading pipelining for honest host-side
-    step latencies).
+    step latencies), ``debug_checks`` (the ``repro.analysis.runtime``
+    sanitizer: checkify assertions traced INTO the jitted step — block-table
+    ids in range, position bounds, finite logprobs — plus host-side
+    allocator-aliasing and recompile-storm detection each iteration; a trip
+    raises ``DebugCheckError`` and counts
+    ``serving_debug_check_failures_total{check=}``.  Off by default and
+    graph-free when off: the compiled step is byte-identical).
     """
     # model execution
     dtype: Any = jnp.bfloat16
@@ -100,6 +106,7 @@ class EngineConfig:
     metrics: bool = True
     trace: bool = False
     sync_timing: bool = False
+    debug_checks: bool = False
 
     def __post_init__(self):
         if self.cache_kind not in kvcache.CACHE_KINDS:

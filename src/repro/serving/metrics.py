@@ -27,7 +27,7 @@ Export surfaces: ``snapshot()`` (nested plain dict, JSON-ready),
 
 ``Timer`` + ``log_event`` are the shared timing/structured-logging helpers
 the launch drivers use instead of ad-hoc ``time.time()`` prints (a repo
-lint pins that: ``scripts/lint_timing.py``).
+lint pins that: rule R1 in ``repro.analysis``).
 """
 from __future__ import annotations
 

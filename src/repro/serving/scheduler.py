@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import runtime as debug_runtime
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.serving import kvcache, trace
@@ -206,7 +207,25 @@ class ContinuousBatcher:
                                         n_top=ecfg.topk_logprobs)
             return (toks_out, lp, tv, ti), c
 
+        # raw step closure kept visible: benchmarks/serving.py traces it to
+        # assert debug_checks=False leaves the compiled graph untouched
+        self._step_fn = _step_fn
         self._step = jax.jit(_step_fn)
+        self._debug = bool(ecfg.debug_checks)
+        if self._debug:
+            # sanitizer layer (repro.analysis.runtime): the checked step is
+            # a SEPARATE jit — the plain self._step above stays pristine
+            debug_runtime.check_payload_alignment(self.params, ecfg.qmeta)
+            self._checked_step = debug_runtime.make_checked_step(
+                _step_fn, s_cache=self.s_cache,
+                num_blocks=ecfg.num_blocks if self.pages is not None
+                else None)
+            widths = getattr(self.policy, "program_widths", None)
+            n_programs = len(widths(self.chunk)) if callable(widths) else 4
+            # x2 + 2: weak-type promotion on the first call and the warmup
+            # trace of each rung may legitimately double-compile
+            self._recompile_monitor = debug_runtime.RecompileMonitor(
+                2 * n_programs + 2)
 
     # -- telemetry ------------------------------------------------------------
     def _init_telemetry(self, metrics: Optional[MetricsRegistry], trace_log):
@@ -421,16 +440,28 @@ class ContinuousBatcher:
                 self.pages.ensure(i, s.pos + take - 1)
         if self.pages is not None and self.pages.dirty:
             self.cache["table"] = self.pages.device_table()
+        if self._debug and self.pages is not None:
+            # catch allocator corruption BEFORE the step consumes the table
+            self._debug_guard(
+                lambda: debug_runtime.check_block_aliasing(self.pages))
         t_dispatch = time.perf_counter()
-        out, self.cache = self._step(
+        step_args = (
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
             jnp.asarray(lens), jnp.asarray(seeds), jnp.asarray(sidx),
             jnp.asarray(temps), jnp.asarray(tks), jnp.asarray(tps))
+        if self._debug:
+            err, (out, self.cache) = self._checked_step(*step_args)
+        else:
+            out, self.cache = self._step(*step_args)
         if self.engine_config.sync_timing:
             # honest host-side step latency: wait out the async dispatch
             # before stopping the clock (costs pipelining; off by default)
             jax.block_until_ready(out)
         dispatch_s = time.perf_counter() - t_dispatch
+        if self._debug:
+            failure = debug_runtime.consume_error(err)   # syncs; debug-only
+            if failure is not None:
+                self._debug_trip(failure)
         nxt, lps, tvs, tis = (np.asarray(a) for a in out)
         n_top = tvs.shape[1]
         now = time.perf_counter()
@@ -480,10 +511,32 @@ class ContinuousBatcher:
                                      logprob=float(lps[i]),
                                      top_logprobs=top))
         self._iterations += 1
+        if self._debug:
+            self._debug_guard(lambda: self._recompile_monitor.observe(
+                self._compiles, self._iterations))
         if self._mx is not None or self._trace_log is not None:
             self._record_iteration(t, int(np.sum(lens)), events,
                                    time.perf_counter() - t_iter, dispatch_s)
         return events
+
+    # -- debug_checks plumbing (repro.analysis.runtime) -----------------------
+    def _debug_guard(self, check_fn):
+        """Run a host-side sanitizer check, routing trips through
+        ``_debug_trip`` so every failure is counted before it raises."""
+        try:
+            check_fn()
+        except debug_runtime.DebugCheckError as e:
+            self._debug_trip(e)
+
+    def _debug_trip(self, e: "debug_runtime.DebugCheckError"):
+        """Count the trip on the Prometheus surface, then raise: sanitizer
+        failures must be visible in dashboards even when the exception is
+        swallowed by a driver's retry loop."""
+        self.metrics.counter(
+            debug_runtime.FAILURE_COUNTER,
+            "runtime sanitizer trips by check (EngineConfig.debug_checks)",
+            check=e.check).inc()
+        raise e
 
     def _done_reason(self, r: Request, s: _Slot, tok: int) -> Optional[str]:
         sp = r.params if r.params is not None else self.default_params

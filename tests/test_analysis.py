@@ -1,0 +1,457 @@
+"""Tests for repro.analysis: the static lint suite (rules R1-R8, the
+allowlist/baseline machinery, the CLI contract) and the runtime sanitizer
+(EngineConfig.debug_checks): clean runs stay event-free on every
+cache_kind; injected corruption — bad block-table ids, cross-slot block
+aliasing, NaN params — trips the matching check and counts it on the
+metrics registry."""
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import lint, runtime
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.lint import (Finding, Rule, all_rules, apply_allowlist,
+                                 apply_baseline, get_rule, lint_source,
+                                 load_baseline, write_baseline)
+from repro.analysis.runtime import DebugCheckError, RecompileMonitor
+from repro.configs import get_config, reduced
+from repro.core.quantized import QuantLinearMeta
+from repro.models import registry
+from repro.serving.engine import EngineConfig
+from repro.serving.kvcache import CACHE_KINDS
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+ARCH = "llama2-7b"
+S_CACHE, BLOCK, CHUNK = 32, 4, 5
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config(ARCH))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _ecfg(**kw):
+    kw.setdefault("dtype", jnp.float32)
+    kw.setdefault("s_cache", S_CACHE)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("chunk_size", CHUNK)
+    kw.setdefault("slots", 2)
+    kw.setdefault("debug_checks", True)
+    return EngineConfig(**kw)
+
+
+def _run(model, kind, corrupt=None, **eng_kw):
+    cfg, params = model
+    cb = ContinuousBatcher(params, cfg, _ecfg(cache_kind=kind, **eng_kw))
+    cb.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6, 7], max_new=4))
+    cb.submit(Request(rid=1, prompt=[2, 3, 4], max_new=4))
+    cb.step()                         # everything live before corruption
+    if corrupt is not None:
+        corrupt(cb)
+    cb.run(max_steps=60)
+    return cb
+
+
+# ===========================================================================
+# rule fixtures: each rule must flag its seeded violation AND pass a clean
+# twin of the same shape
+# ===========================================================================
+
+# (rule, rel path, bad source, expected symbols, clean source)
+RULE_FIXTURES = [
+    ("R1", "launch/foo.py",
+     "import time\nprint('hi')\nt0 = time.time()\n",
+     {"print", "time.time"},
+     "from repro.serving.metrics import Timer, log_event\n"
+     "log_event('hi')\n"
+     "with Timer() as t0:\n    pass\n"),
+    ("R2", "serving/foo.py",
+     "import numpy as np\n"
+     "def drain(out):\n"
+     "    return np.asarray(out), out.item(), out.tolist()\n",
+     {"np.asarray", ".item", ".tolist"},
+     "import numpy as np\n"
+     "def drain(out):\n"
+     "    return out\n"),
+    ("R2", "kernels/foo.py",
+     "import jax\n"
+     "@jax.jit\n"
+     "def f(x):\n"
+     "    return float(x) + 1\n",
+     {"host-float"},
+     "import jax.numpy as jnp\nimport jax\n"
+     "@jax.jit\n"
+     "def f(x):\n"
+     "    return x.astype(jnp.float32) + 1\n"),
+    ("R3", "serving/foo.py",
+     "import jax\n"
+     "class C:\n"
+     "    def build(self):\n"
+     "        def step(x):\n"
+     "            self.counter += 1\n"
+     "            return x\n"
+     "        self.f = jax.jit(step)\n",
+     {"mutable-closure"},
+     "import jax\n"
+     "class C:\n"
+     "    def build(self):\n"
+     "        def step(x):\n"
+     "            return x * 2\n"
+     "        self.f = jax.jit(step)\n"),
+    ("R3", "models/foo.py",
+     "import jax\n"
+     "@jax.jit\n"
+     "def f(x):\n"
+     "    if x > 0:\n"
+     "        return x\n"
+     "    return -x\n",
+     {"traced-branch"},
+     # branching on .shape is static and sanctioned
+     "import jax\n"
+     "@jax.jit\n"
+     "def f(x):\n"
+     "    if x.shape[0] > 4:\n"
+     "        return x\n"
+     "    return -x\n"),
+    ("R3", "models/foo.py",
+     "import jax\n"
+     "def build(fns):\n"
+     "    for fn in fns:\n"
+     "        fn = jax.jit(fn)\n",
+     {"jit-in-loop"},
+     "import jax\n"
+     "def build(fns):\n"
+     "    return [jax.jit(f) for f in fns]\n"
+     "fns2 = build([])\n"),
+    ("R3", "kernels/foo.py",
+     "import jax, functools\n"
+     "@functools.partial(jax.jit, static_argnames=('opts',))\n"
+     "def f(x, opts=[1]):\n"
+     "    return x\n",
+     {"nonhashable-static"},
+     "import jax, functools\n"
+     "@functools.partial(jax.jit, static_argnames=('opts',))\n"
+     "def f(x, opts=(1,)):\n"
+     "    return x\n"),
+    ("R4", "kernels/foo.py",
+     "import jax.experimental.pallas as pl\n"
+     "def run(x, kern):\n"
+     "    return pl.pallas_call(\n"
+     "        kern,\n"
+     "        grid=(4, 4),\n"
+     "        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],\n"
+     "        out_specs=pl.BlockSpec((8, 144), lambda i, j: (i, j)),\n"
+     "    )(x)\n",
+     {"index-map-arity", "tile-shape"},
+     "import jax.experimental.pallas as pl\n"
+     "def run(x, kern):\n"
+     "    return pl.pallas_call(\n"
+     "        kern,\n"
+     "        grid=(4, 4),\n"
+     "        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, 0))],\n"
+     "        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),\n"
+     "    )(x)\n"),
+    ("R4", "kernels/foo.py",
+     "from jax.experimental.pallas import tpu as pltpu\n"
+     "import jax.experimental.pallas as pl\n"
+     "def spec(nb):\n"
+     "    return pltpu.PrefetchScalarGridSpec(\n"
+     "        num_scalar_prefetch=2,\n"
+     "        grid=(2, 3),\n"
+     "        in_specs=[pl.BlockSpec((1, 8, 128),\n"
+     "                               lambda i, j, tbl: (i, j, 0))],\n"
+     "        out_specs=pl.BlockSpec((1, 8, 128),\n"
+     "                              lambda i, j, tbl, ps: (i, j, 0)),\n"
+     "        scratch_shapes=[pltpu.VMEM((0,), None)],\n"
+     "    )\n",
+     {"index-map-arity", "scratch-shape"},
+     "from jax.experimental.pallas import tpu as pltpu\n"
+     "import jax.experimental.pallas as pl\n"
+     "def spec(nb):\n"
+     "    return pltpu.PrefetchScalarGridSpec(\n"
+     "        num_scalar_prefetch=2,\n"
+     "        grid=(2, 3),\n"
+     "        in_specs=[pl.BlockSpec((1, 8, 128),\n"
+     "                               lambda i, j, tbl, ps: (i, j, 0))],\n"
+     "        out_specs=pl.BlockSpec((1, 8, 128),\n"
+     "                              lambda i, j, tbl, ps: (i, j, 0)),\n"
+     "        scratch_shapes=[pltpu.VMEM((8, 128), None)],\n"
+     "    )\n"),
+    ("R5", "parallel/foo.py",
+     "from jax.sharding import PartitionSpec as P\n"
+     "spec = P('tensor', None)\n",
+     {"unknown-axis"},
+     "from jax.sharding import PartitionSpec as P\n"
+     "spec = P('model', None)\n"),
+    ("R6", "kernels/foo.py",
+     "import numpy as np\nimport jax.numpy as jnp\n"
+     "a = np.zeros(4, dtype=np.float64)\n"
+     "b = jnp.zeros(4, dtype=float)\n"
+     "c = a.astype('float64')\n",
+     {"float64"},
+     "import numpy as np\nimport jax.numpy as jnp\n"
+     "a = np.zeros(4, dtype=np.float32)\n"
+     "b = jnp.zeros(4, dtype=jnp.float32)\n"
+     "c = a.astype(np.float32)\n"),
+    ("R7", "serving/foo.py",
+     "from repro.serving.engine import EngineConfig\n"
+     "def tune(ecfg: EngineConfig):\n"
+     "    ecfg.slots = 8\n"
+     "    object.__setattr__(ecfg, 'chunk_size', 4)\n"
+     "    setattr(ecfg, 'block_size', 32)\n",
+     {"config-mutation", "object.__setattr__"},
+     "from repro.serving.engine import EngineConfig\n"
+     "def tune(ecfg: EngineConfig):\n"
+     "    return ecfg.replace(slots=8, chunk_size=4, block_size=32)\n"),
+    ("R8", "serving/foo.py",
+     "import numpy as np\nimport random\n"
+     "seed = np.random.default_rng(0).integers(9)\n"
+     "jitter = random.random()\n",
+     {"np.random", "random"},
+     "import jax\n"
+     "key = jax.random.PRNGKey(0)\n"
+     "jitter = jax.random.uniform(key)\n"),
+]
+
+
+def test_rule_registry_complete():
+    names = [r.name for r in all_rules()]
+    assert names == [f"R{i}" for i in range(1, 9)]
+
+
+@pytest.mark.parametrize(
+    "rule_name,rel,bad,symbols,clean",
+    RULE_FIXTURES,
+    ids=[f"{r}-{'-'.join(sorted(s))[:40]}" for r, _, _, s, _ in RULE_FIXTURES])
+def test_rule_flags_seeded_violation(rule_name, rel, bad, symbols, clean):
+    rule = get_rule(rule_name)
+    found = lint_source(rule, rel, bad, allowlist=False)
+    assert symbols <= {f.symbol for f in found}, \
+        f"{rule_name} missed its seeded violation: {found}"
+    assert lint_source(rule, rel, clean, allowlist=False) == [], \
+        f"{rule_name} false-positived on the clean twin"
+
+
+def test_rule_scope_and_exclude():
+    r2 = get_rule("R2")
+    # out of scope (not serving/ or kernels/): same source, no findings
+    bad = "import numpy as np\nx = np.asarray(object())\n"
+    assert lint_source(r2, "serving/x.py", bad, allowlist=False)
+    assert lint_source(r2, "launch/x.py", bad, allowlist=False) == []
+    r1 = get_rule("R1")
+    assert lint_source(r1, "serving/metrics.py", "print('x')\n") == []
+
+
+def test_allowlist_pinned_counts():
+    class Toy(Rule):
+        name = "T0"
+        allow = {("pkg/a.py", "print"): (2, "two sanctioned prints")}
+
+    def mk(n):
+        return [Finding("T0", "pkg/a.py", i, "print", "bare print")
+                for i in range(n)]
+
+    assert apply_allowlist(Toy(), mk(2)) == []          # at the pin
+    over = apply_allowlist(Toy(), mk(3))                # growth fails
+    assert len(over) == 3
+    assert "2 allowed" in over[0].message
+    # a different symbol in the same file is NOT covered
+    other = [Finding("T0", "pkg/a.py", 1, "time.time", "m")]
+    assert apply_allowlist(Toy(), other) == other
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = [Finding("R1", "a.py", 3, "print", "m"),
+                Finding("R1", "a.py", 9, "print", "m"),
+                Finding("R6", "b.py", 1, "float64", "m")]
+    path = tmp_path / "baseline.txt"
+    write_baseline(findings, path)
+    base = load_baseline(path)
+    assert base == Counter({"R1|a.py|print": 2, "R6|b.py|float64": 1})
+    fresh, stale = apply_baseline(findings, base)
+    assert fresh == [] and not stale
+    # one fixed -> stale debt reported, none fresh
+    fresh, stale = apply_baseline(findings[:2], base)
+    assert fresh == [] and stale == Counter({"R6|b.py|float64": 1})
+    # one NEW finding -> exactly it escapes the baseline
+    extra = findings + [Finding("R1", "c.py", 2, "print", "m")]
+    fresh, stale = apply_baseline(extra, base)
+    assert [f.path for f in fresh] == ["c.py"] and not stale
+
+
+def test_cli_contract(tmp_path, capsys):
+    # seeded violation -> exit 1; baselined -> exit 0; clean file -> exit 0
+    bad = tmp_path / "serving"
+    bad.mkdir()
+    f = bad / "hot.py"
+    f.write_text("import numpy as np\nx = np.asarray(object()).item()\n")
+    base = tmp_path / "baseline.txt"
+    assert lint_main([str(tmp_path), "--baseline", str(base)]) == 1
+    assert lint_main([str(tmp_path), "--baseline", str(base),
+                      "--write-baseline"]) == 0
+    assert lint_main([str(tmp_path), "--baseline", str(base)]) == 0
+    f.write_text("import numpy as np\n")
+    out = lint_main([str(tmp_path), "--baseline", str(base)])
+    assert out == 0          # stale baseline entries warn, never fail
+    assert "no longer matches" in capsys.readouterr().out
+    assert lint_main(["--rules", "R1,nope"]) == 2
+    assert lint_main([str(tmp_path / "missing.py")]) == 2
+
+
+def test_repo_is_lint_clean_with_empty_baseline():
+    """The shipped contract: src/repro passes every rule with the (empty)
+    checked-in baseline — AST rules here; R5's config-loading project
+    check runs in ci.sh where the import cost is already paid."""
+    src = lint.repo_root() / "src" / "repro"
+    rules = all_rules()
+    findings = lint.lint_paths([src], rules, project_checks=False)
+    assert findings == [], "\n".join(f.format() for f in findings)
+    baseline = load_baseline(lint.repo_root() / "src" / "repro" /
+                             "analysis" / "baseline.txt")
+    assert not baseline, "baseline must ship empty (see ISSUE 8)"
+
+
+# ===========================================================================
+# runtime sanitizer (EngineConfig.debug_checks)
+# ===========================================================================
+
+@pytest.mark.parametrize("kind", CACHE_KINDS)
+def test_debug_clean_run_is_event_free(model, kind):
+    cb = _run(model, kind)
+    assert sorted(cb.finished) == [0, 1]
+    snap = cb.metrics.snapshot()
+    assert runtime.FAILURE_COUNTER not in snap.get("counters", {})
+
+
+def test_debug_off_is_graph_free(model):
+    cfg, params = model
+    cb = ContinuousBatcher(params, cfg, _ecfg(cache_kind="paged",
+                                              debug_checks=False))
+    assert cb._debug is False and not hasattr(cb, "_checked_step")
+    # the jitted step is the raw closure: no checkify primitives traced in
+    b = len(cb.slots)
+    toks = jnp.zeros((b, 1), jnp.int32)
+    vec_i = jnp.zeros((b,), jnp.int32)
+    vec_f = jnp.zeros((b,), jnp.float32)
+    jaxpr = jax.make_jaxpr(cb._step_fn)(
+        cb.params, cb.cache, toks, vec_i, vec_i, vec_i, vec_i,
+        vec_f, vec_i, jnp.ones((b,), jnp.float32))
+    prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
+    assert not any("check" in p for p in prims), prims
+
+
+def test_debug_catches_corrupt_block_table(model):
+    def corrupt(cb):
+        tbl = np.array(cb.cache["table"])
+        tbl[0, 0] = 10_000                      # out of [0, num_blocks)
+        cb.cache["table"] = jnp.asarray(tbl)
+
+    with pytest.raises(DebugCheckError) as ei:
+        _run(model, "paged", corrupt)
+    assert ei.value.check == "block_table"
+
+
+def test_debug_catches_injected_nan(model):
+    def corrupt(cb):
+        leaves, td = jax.tree_util.tree_flatten(cb.params)
+        big = max(range(len(leaves)),
+                  key=lambda i: getattr(leaves[i], "size", 0))
+        leaves[big] = jnp.full_like(leaves[big], jnp.nan)
+        cb.params = jax.tree_util.tree_unflatten(td, leaves)
+
+    with pytest.raises(DebugCheckError) as ei:
+        _run(model, "dense", corrupt)
+    assert ei.value.check == "nan_logits"
+
+
+def test_debug_catches_block_aliasing(model):
+    def corrupt(cb):
+        assert int(cb.pages.counts[0]) and int(cb.pages.counts[1])
+        cb.pages.table[1, 0] = cb.pages.table[0, 0]
+
+    with pytest.raises(DebugCheckError) as ei:
+        _run(model, "paged_q8", corrupt)
+    assert ei.value.check == "block_aliasing"
+
+
+def test_debug_trip_counts_on_metrics(model):
+    def corrupt(cb):
+        tbl = np.array(cb.cache["table"])
+        tbl[0, 0] = -3
+        cb.cache["table"] = jnp.asarray(tbl)
+
+    cfg, params = model
+    cb = ContinuousBatcher(params, cfg, _ecfg(cache_kind="paged"))
+    cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=2))
+    cb.step()
+    corrupt(cb)
+    with pytest.raises(DebugCheckError):
+        cb.run(max_steps=10)
+    counters = cb.metrics.snapshot()["counters"]
+    assert counters[runtime.FAILURE_COUNTER] == {"check=block_table": 1.0}
+
+
+def test_aliasing_checker_accepts_clean_and_rejects_freed(model):
+    cfg, params = model
+    cb = ContinuousBatcher(params, cfg, _ecfg(cache_kind="paged"))
+    cb.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new=2))
+    cb.step()
+    assert runtime.check_block_aliasing(cb.pages) > 0
+    # a live block that is ALSO on the free list must be rejected
+    live = int(cb.pages.table[0, 0])
+    cb.pages.alloc._free_set.add(live)
+    with pytest.raises(DebugCheckError) as ei:
+        runtime.check_block_aliasing(cb.pages)
+    assert ei.value.check == "block_aliasing"
+
+
+def test_recompile_monitor():
+    mon = RecompileMonitor(3)
+    mon.observe(compiles=3, iterations=10)        # at budget: fine
+    with pytest.raises(DebugCheckError) as ei:
+        mon.observe(compiles=4, iterations=11)
+    assert ei.value.check == "recompile_storm"
+
+
+def test_payload_alignment_check():
+    meta = QuantLinearMeta(k=32, n=16, bits=4, d=8, group_size=32)
+    good = {"layer": {"attn": {"wq": dict(
+        packed=jnp.zeros((32, meta.n_words), jnp.uint32),
+        g=jnp.zeros((1, 8, 8)), mu=jnp.zeros((1,)),
+        scale=jnp.zeros((1,)))}}}
+    qmeta = {("attn", "wq"): meta}
+    assert runtime.check_payload_alignment(good, qmeta) == 1
+    bad = jax.tree_util.tree_map(lambda x: x, good)
+    bad["layer"]["attn"]["wq"]["packed"] = \
+        jnp.zeros((32, meta.n_words + 1), jnp.uint32)
+    with pytest.raises(DebugCheckError) as ei:
+        runtime.check_payload_alignment(bad, qmeta)
+    assert ei.value.check == "payload_alignment"
+    assert runtime.check_payload_alignment(good, None) == 0
+
+
+def test_debug_checks_with_quantized_payloads(model):
+    """debug_checks composes with the QuantTensor engine: the payload
+    alignment check passes at build and a clean quantized run finishes."""
+    cfg, params = model
+    from repro.core.glvq import GLVQConfig
+    from repro.core import quantized
+    qparams, qmeta = quantized.quantize_param_tree(
+        params, cfg=GLVQConfig(d=8, bits=4, iters=2, group_size=32))
+    cb = ContinuousBatcher(qparams, cfg,
+                           _ecfg(cache_kind="paged", qmeta=qmeta))
+    cb.submit(Request(rid=0, prompt=[1, 2, 3, 4], max_new=3))
+    cb.run(max_steps=30)
+    assert sorted(cb.finished) == [0]
+
+
+def test_parse_failure_tag():
+    check, msg = runtime.parse_failure("[debug:bounds] pos escaped")
+    assert (check, msg) == ("bounds", "pos escaped")
+    assert runtime.parse_failure("something else")[0] == "unknown"
