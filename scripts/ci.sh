@@ -89,6 +89,17 @@ for kind in dense paged paged_q8 paged_q8c; do
         --cache "$kind" --debug-checks --no-metrics
 done
 echo "[ci] debug_checks smoke OK (all cache kinds)"
+
+# Prefix-cache smoke: radix sharing + copy-on-write + refcounted aliasing
+# under the sanitizer, across every paged cache kind ("dense" exercises the
+# flag being a validated no-op).  --shared-prefix guarantees cache hits.
+for kind in dense paged paged_q8 paged_q8c; do
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+        --requests 4 --batch 2 --prompt-len 24 --max-new 3 --chunk-size 4 \
+        --cache "$kind" --kv-block-size 8 --prefix-cache --shared-prefix 18 \
+        --debug-checks --no-metrics
+done
+echo "[ci] prefix-cache smoke OK (all cache kinds)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.engine \
     --smoke --out "$SMOKE_DIR/BENCH_engine.json"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

@@ -14,10 +14,10 @@ mechanisms:
   (benchmarks/serving.py asserts this).
 
 * **Host-side structural checks**: ``check_block_aliasing`` walks the
-  ``SlotPages`` table each iteration and rejects any block referenced by
-  two slots or simultaneously live + free — the invariant prefix-caching's
-  copy-on-write sharing will relax *deliberately* via refcounts, so it
-  must hold everywhere today (see ROADMAP).  ``check_payload_alignment``
+  ``SlotPages`` table each iteration and enforces the refcounted
+  ownership invariant (owner count == refcount, live ∩ free empty, no
+  live block at refcount 0) — sharing is legal exactly when the
+  allocator's books agree with the tables.  ``check_payload_alignment``
   validates packed GLVQ payloads against their ``QuantLinearMeta`` once at
   engine build (shapes are static; no per-step cost).
 
@@ -133,30 +133,45 @@ def consume_error(err) -> Optional[DebugCheckError]:
 # ---------------------------------------------------------------------------
 
 def check_block_aliasing(pages) -> int:
-    """No pool block may be referenced by two slots, nor be live in a
-    table while sitting on the free list.  This is THE precondition the
-    prefix-caching roadmap item will relax with refcounted copy-on-write
-    sharing; until then any aliasing is allocator corruption.  Returns the
-    number of live block references checked."""
-    owner = {}
+    """Refcounted ownership invariant over the ``SlotPages`` table (the
+    PR-3 exclusive-ownership check, relaxed for prefix-cache sharing):
+
+    * a block's slot-owner count must EQUAL its allocator refcount — a
+      table reference the allocator doesn't know about means a decref
+      path was skipped (or an incref never happened), and the block will
+      be handed out while a slot still reads it;
+    * no live table reference may sit on the free list (live ∩ free = ∅);
+    * no live table reference may be at refcount 0 (parked blocks are
+      cache-resident but must not appear in any slot's table).
+
+    Returns the number of distinct live blocks checked."""
+    owners: dict = {}
     free = getattr(pages.alloc, "_free_set", frozenset())
     for slot in range(pages.table.shape[0]):
         n = int(pages.counts[slot])
         for b in pages.table[slot, :n]:
             b = int(b)
-            prev = owner.get(b)
-            if prev is not None:
-                raise DebugCheckError(
-                    "block_aliasing",
-                    f"block {b} is referenced by slots {prev} and {slot}: "
-                    "appends to one slot would corrupt the other's KV")
             if b in free:
                 raise DebugCheckError(
                     "block_aliasing",
                     f"block {b} is live in slot {slot}'s table AND on the "
                     "free list: the next alloc would hand it out again")
-            owner[b] = slot
-    return len(owner)
+            owners.setdefault(b, []).append(slot)
+    refcount = getattr(pages.alloc, "refcount", lambda _b: 1)
+    for b, slots in owners.items():
+        refs = int(refcount(b))
+        if refs == 0:
+            raise DebugCheckError(
+                "block_aliasing",
+                f"block {b} is live in slot table(s) {slots} but its "
+                "refcount is 0: eviction would free KV a slot still reads")
+        if refs != len(slots):
+            raise DebugCheckError(
+                "block_aliasing",
+                f"block {b} has {len(slots)} table owner(s) {slots} but "
+                f"refcount {refs}: a missed incref/decref will leak the "
+                "block or free it under a live reader")
+    return len(owners)
 
 
 def check_payload_alignment(params, qmeta) -> int:

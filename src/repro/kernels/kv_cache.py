@@ -43,8 +43,8 @@ from repro.core import companding
 __all__ = ["MODES", "KV_MU", "PageLayout", "kv_quantize", "kv_dequantize",
            "chunk_roundtrip", "tile_pad_enabled", "padded_block_geom",
            "pad_to", "register_kv_backend", "kv_backends",
-           "resolve_kv_backend", "pool_init", "append", "append_chunk",
-           "gather"]
+           "resolve_kv_backend", "pool_init", "copy_pool_block", "append",
+           "append_chunk", "gather"]
 
 MODES = ("paged", "paged_q8", "paged_q8c")
 
@@ -168,6 +168,18 @@ def pool_init(num_blocks: int, block_size: int, n_kv: int, hd: int, dtype,
         pools["ksc"] = jnp.zeros((num_blocks, block_size, n_kv), jnp.float16)
         pools["vsc"] = jnp.zeros((num_blocks, block_size, n_kv), jnp.float16)
     return pools
+
+
+def copy_pool_block(pool, src, dst, *, stacked: bool = False):
+    """Duplicate one pool block's stored content: ``pool[dst] = pool[src]``
+    (codes AND scales copy verbatim, so the clone dequantizes bit-identically
+    to the original — the copy-on-write primitive behind prefix sharing).
+    ``src``/``dst`` may be traced int scalars; ``stacked`` marks a leading
+    scan-repeat axis ([R, NB, ...] — every repeat's layer copies the same
+    block id, matching the shared block table)."""
+    if stacked:
+        return pool.at[:, dst].set(pool[:, src])
+    return pool.at[dst].set(pool[src])
 
 
 # ---------------------------------------------------------------------------

@@ -155,6 +155,19 @@ def main(argv=None):
                          "paged block pools (paged_q8[c] = int8-quantized "
                          "blocks, c = mu-law companded)")
     ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged pool: shared "
+                         "prompt blocks are aliased read-only (refcounted, "
+                         "copy-on-write at the divergence block) so repeat "
+                         "prefixes skip straight to decode")
+    ap.add_argument("--prefix-cache-min-blocks", type=int, default=1,
+                    help="minimum FULL cached blocks a prompt must match "
+                         "before the hit is taken (shorter matches re-"
+                         "prefill; raises the sharing threshold)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="give every generated request the same N-token "
+                         "system-prompt prefix (the prefix-cache workload; "
+                         "0 = fully random prompts)")
     ap.add_argument("--kv-backend", default=None,
                     help="paged-cache kernel backend (pallas | xla)")
     ap.add_argument("--attn-backend", default=None,
@@ -224,6 +237,8 @@ def main(argv=None):
     ecfg = EngineConfig(dtype=jnp.float32, qmeta=qmeta, backend=args.backend,
                         cache_kind=args.cache,
                         block_size=args.kv_block_size,
+                        prefix_cache=args.prefix_cache,
+                        prefix_cache_min_blocks=args.prefix_cache_min_blocks,
                         kv_backend=args.kv_backend,
                         attn_backend=args.attn_backend, mesh=mesh,
                         chunk_size=args.chunk_size, s_cache=s_cache,
@@ -252,8 +267,11 @@ def main(argv=None):
                         stop_token_ids=tuple(args.stop_token or ()),
                         max_tokens=args.max_new)
     rng = np.random.default_rng(0)
+    shared = list(map(int, rng.integers(
+        1, cfg.vocab, min(args.shared_prefix, args.prompt_len))))
     for i in range(args.requests):
-        prompt = list(map(int, rng.integers(1, cfg.vocab, args.prompt_len)))
+        tail = args.prompt_len - len(shared)
+        prompt = shared + list(map(int, rng.integers(1, cfg.vocab, tail)))
         engine.submit(prompt, sp, rid=i)
     tm = metrics.Timer()
     n_events = 0
@@ -276,6 +294,11 @@ def main(argv=None):
               chunk=engine.batcher.chunk, mode=mode, tokens=toks,
               elapsed_s=dt, tok_per_s=toks / dt,
               done_reasons=reasons)
+    pstats = engine.prefix_cache_stats()
+    if pstats is not None:
+        log_event("serve", prefix_cache=pstats)
+    elif args.prefix_cache and args.cache == "dense":
+        log_event("serve", note="--prefix-cache needs a paged --cache kind")
     if args.metrics_json:
         snap = json.dumps(engine.metrics_snapshot(), indent=1)
         if args.metrics_json == "-":

@@ -1,6 +1,7 @@
 from repro.serving import kvcache
 from repro.serving.engine import (EngineConfig, RequestHandle, ServingEngine,
                                   TokenEvent)
+from repro.serving.kvcache import BlockAllocator, PrefixCache
 from repro.serving.policy import FCFSPolicy, SchedulerPolicy, TokenBudgetPolicy
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (DONE_CACHE_FULL, DONE_LENGTH, DONE_STOP,

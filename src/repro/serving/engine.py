@@ -58,7 +58,16 @@ class EngineConfig:
     ``kernels.attention.attn_backends()``: ``pallas`` = fused block-walk +
     dequant + flash SDPA, ``xla`` = gather-then-SDPA; None = platform
     default), ``s_cache`` (cache positions per slot; None lets model-level
-    calls infer capacity, the scheduler defaults it to 64).
+    calls infer capacity, the scheduler defaults it to 64),
+    ``prefix_cache`` (radix prefix caching over the paged pool: requests
+    whose prompts share a prefix alias the cached KV blocks read-only and
+    prefill only from the divergence point, with copy-on-write for a
+    mid-block boundary and LRU eviction of unreferenced cached blocks under
+    pool pressure; needs a paged ``cache_kind``, and sharing engages only
+    for global-attention stacks — recurrent state and sliding-window rings
+    cannot be reconstructed from aliased blocks), ``prefix_cache_min_blocks``
+    (smallest full-block match worth taking — shorter matches are treated
+    as misses so tiny shared stubs don't churn the pool with CoW copies).
 
     Scheduling: ``slots`` (concurrent batch lanes), ``chunk_size`` (max
     prompt tokens one iteration may consume per slot), ``pad_token``,
@@ -96,6 +105,8 @@ class EngineConfig:
     kv_backend: Optional[str] = None
     attn_backend: Optional[str] = None
     s_cache: Optional[int] = None
+    prefix_cache: bool = False
+    prefix_cache_min_blocks: int = 1
     # scheduling
     slots: int = 4
     chunk_size: int = 1
@@ -127,6 +138,9 @@ class EngineConfig:
         if self.topk_logprobs < 0:
             raise ValueError(f"topk_logprobs must be >= 0, "
                              f"got {self.topk_logprobs}")
+        if self.prefix_cache_min_blocks < 1:
+            raise ValueError(f"prefix_cache_min_blocks must be >= 1, "
+                             f"got {self.prefix_cache_min_blocks}")
         object.__setattr__(self, "stop_tokens",
                            tuple(int(t) for t in self.stop_tokens))
 
@@ -245,6 +259,18 @@ class ServingEngine:
         """Prometheus text-format rendering of the same registry (what
         ``launch/serve.py --metrics-port`` serves at ``/metrics``)."""
         return self.batcher.metrics.render_prometheus()
+
+    def prefix_cache_stats(self) -> Optional[dict]:
+        """Live prefix-cache counters, or None when the cache is off (or
+        the model's stack cannot share blocks: recurrent / sliding-window
+        state is not reconstructable from aliased pool blocks)."""
+        pc = self.batcher.prefix
+        if pc is None:
+            return None
+        return {"hits": pc.hits, "misses": pc.misses,
+                "tokens_reused": pc.tokens_reused,
+                "cow_copies": pc.cow_copies, "evictions": pc.evictions,
+                "resident_blocks": pc.resident_blocks}
 
     def submit(self, prompt: Sequence[int],
                params: Optional[SamplingParams] = None,

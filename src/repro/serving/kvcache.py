@@ -10,13 +10,28 @@ HBM layout (device side, built by ``models.lm.cache_init``):
     there and it is never handed out by the allocator, so stale scratch
     content can never alias a live slot's history.
 
-Host side (this module): ``BlockAllocator`` is a plain free-list over block
-ids 1..num_blocks-1; ``SlotPages`` tracks which table entries each slot has
-been granted, allocating lazily as a slot's position crosses a block boundary
-and returning all of a slot's blocks to the free list when it retires.  Local
-(sliding-window) attention layers write ring-style at ``pos % window`` and so
-only ever touch a slot's first ``ceil(window / block_size)`` table entries —
-the shared table needs no per-layer variants.
+Host side (this module): ``BlockAllocator`` is a REFCOUNTED free-list over
+block ids 1..num_blocks-1 — a block is ``free`` (on the free list), ``live``
+(refcount >= 1: that many slot tables reference it), or ``cached``
+(refcount 0 but retained resident for the prefix cache, evictable under pool
+pressure).  ``SlotPages`` tracks which table entries each slot has been
+granted, allocating lazily as a slot's position crosses a block boundary and
+decref'ing all of a slot's blocks when it retires.  Local (sliding-window)
+attention layers write ring-style at ``pos % window`` and so only ever touch
+a slot's first ``ceil(window / block_size)`` table entries — the shared
+table needs no per-layer variants.
+
+``PrefixCache`` is the radix index over those blocks: one node per FULL
+block of tokens, keyed by that block's token tuple, child-of its prefix.  A
+new request walks the radix with its prompt; matched full blocks are aliased
+read-only into its table (incref), a partially-matched boundary block is
+copied (copy-on-write — ``copy_block``) so mid-block divergence never
+writes into shared history, and the request prefills only from the
+divergence point.  Retiring requests register their full blocks back into
+the radix; blocks whose refcount hits 0 while registered stay resident as
+evictable LRU leaves instead of returning to the free list, so a hot system
+prompt survives request churn — and eviction under pool pressure means the
+cache never reduces effective capacity.
 
 Byte accounting helpers at the bottom are the analytic source of truth for
 ``benchmarks/kvcache.py`` (bytes/token, max resident slots at a fixed HBM
@@ -25,17 +40,18 @@ budget).
 from __future__ import annotations
 
 from collections import deque
-from typing import Iterable, List
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.kv_cache import MODES, PageLayout
+from repro.kernels.kv_cache import MODES, PageLayout, copy_pool_block
 
 __all__ = ["CACHE_KINDS", "PageLayout", "BlockAllocator", "SlotPages",
-           "static_table", "attn_layer_lengths", "cache_bytes",
-           "bytes_per_token", "max_resident_slots"]
+           "PrefixCache", "copy_block", "static_table",
+           "attn_layer_lengths", "cache_bytes", "bytes_per_token",
+           "max_resident_slots"]
 
 # every kernel-level paged mode plus the dense oracle — derived so the two
 # lists cannot drift
@@ -45,26 +61,44 @@ _ATTN_KINDS = ("attn", "attn_local", "attn_moe")
 
 
 class BlockAllocator:
-    """Free-list allocator over pool block ids; id 0 is reserved scratch.
+    """Refcounted allocator over pool block ids; id 0 is reserved scratch.
 
-    Beyond the free list it keeps the telemetry the serving metrics read
-    each iteration: ``high_water`` (max blocks ever live at once — the
-    capacity-planning number), cumulative ``total_allocs`` / ``total_frees``,
-    ``pool_exhausted`` (failed allocs), and ``double_free_rejected`` (the
-    PR-3 guard fired — counted *and* raised, so a crash-looping caller is
-    visible in the metrics, not just in its own traceback)."""
+    Ownership model (relaxed from PR 3's exclusive grant/free for prefix
+    sharing): every resident block carries a refcount — the number of slot
+    tables referencing it.  ``alloc`` mints a block at refcount 1,
+    ``incref`` aliases it into another slot (read-only sharing), ``decref``
+    releases one owner.  When the count hits 0 the block either returns to
+    the free list or — when the ``retain`` hook claims it (the prefix cache
+    holds a radix node for it) — parks as a refcount-0 CACHED block:
+    resident, not allocatable, evictable.  ``alloc`` under pool pressure
+    asks the ``reclaim`` hook to evict parked blocks before giving up.
+
+    Beyond that it keeps the telemetry the serving metrics read each
+    iteration: ``high_water`` (max blocks ever resident at once — the
+    capacity-planning number), cumulative ``total_allocs`` /
+    ``total_frees``, ``pool_exhausted`` (failed allocs), and
+    ``double_free_rejected`` (a release below refcount 0 — the PR-3
+    double-free guard, now enforced through decref; counted *and* raised,
+    so a crash-looping caller is visible in the metrics, not just in its
+    own traceback)."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free: deque[int] = deque(range(1, num_blocks))
         self._free_set: set[int] = set(self._free)
+        self._refs: Dict[int, int] = {}         # live block -> owner count
+        self._parked: set[int] = set()          # refcount-0 cached blocks
         self._ever_used: set[int] = set()
+        # hooks bound by PrefixCache: retain(bid) -> bool keeps a refcount-0
+        # block resident; reclaim(n) evicts parked blocks under pressure
+        self.retain: Optional[Callable[[int], bool]] = None
+        self.reclaim: Optional[Callable[[int], int]] = None
         self.recycled = 0                       # re-allocations of freed blocks
         self.high_water = 0                     # max used_blocks ever seen
         self.total_allocs = 0
         self.total_frees = 0
         self.pool_exhausted = 0                 # allocs that failed
-        self.double_free_rejected = 0           # frees the guard refused
+        self.double_free_rejected = 0           # releases the guard refused
 
     @property
     def free_blocks(self) -> int:
@@ -72,9 +106,26 @@ class BlockAllocator:
 
     @property
     def used_blocks(self) -> int:
+        """Resident blocks: live (refcount >= 1) plus parked (cached)."""
         return (self.num_blocks - 1) - len(self._free)
 
+    @property
+    def live_blocks(self) -> int:
+        return len(self._refs)
+
+    @property
+    def parked_blocks(self) -> int:
+        return len(self._parked)
+
+    def refcount(self, bid: int) -> int:
+        """Slot-owner count of a block (0 for parked/free blocks)."""
+        return self._refs.get(int(bid), 0)
+
     def alloc(self) -> int:
+        if not self._free and self._parked and self.reclaim is not None:
+            # pool pressure: ask the prefix cache to evict LRU refcount-0
+            # blocks — cached prefixes never reduce effective capacity
+            self.reclaim(1)
         if not self._free:
             self.pool_exhausted += 1
             raise RuntimeError(
@@ -83,6 +134,7 @@ class BlockAllocator:
                 "raise num_blocks, or admit fewer concurrent slots.")
         bid = self._free.popleft()
         self._free_set.discard(bid)
+        self._refs[bid] = 1
         if bid in self._ever_used:
             self.recycled += 1
         self._ever_used.add(bid)
@@ -91,14 +143,79 @@ class BlockAllocator:
             self.high_water = self.used_blocks
         return bid
 
+    def incref(self, bid: int) -> int:
+        """Add one owner to a resident block (aliasing a shared prefix block
+        into another slot's table).  A parked (refcount-0 cached) block is
+        resurrected to live.  Incref of a free / out-of-range block raises:
+        its content is not valid history."""
+        bid = int(bid)
+        if bid in self._refs:
+            self._refs[bid] += 1
+        elif bid in self._parked:
+            self._parked.discard(bid)
+            self._refs[bid] = 1
+        else:
+            raise RuntimeError(
+                f"incref of non-resident KV block {bid}: only live or "
+                "cached blocks hold valid history that can be shared")
+        return bid
+
+    def decref(self, bid: int) -> bool:
+        """Release one owner; returns True when the block left the live
+        set (refcount hit 0).  Where it goes then depends on the ``retain``
+        hook: parked (prefix-cache resident) or back on the free list.
+        Releasing a block with no owners is the double-free/below-zero
+        error — it would alias two slots onto one block."""
+        bid = int(bid)
+        if not bid:                              # never recycle scratch 0
+            return False
+        if bid < 0 or bid >= self.num_blocks:
+            raise ValueError(
+                f"free of out-of-range KV block id {bid} "
+                f"(pool has blocks 1..{self.num_blocks - 1})")
+        n = self._refs.get(bid)
+        if n is None:
+            # parked or free: either way owner count is already 0
+            self.double_free_rejected += 1
+            raise RuntimeError(
+                f"double free of KV block {bid}: its refcount is already 0 "
+                "(releasing below zero would alias two slots onto one "
+                "block)")
+        if n > 1:
+            self._refs[bid] = n - 1
+            return False
+        del self._refs[bid]
+        if self.retain is not None and self.retain(bid):
+            self._parked.add(bid)                # cached: resident, evictable
+        else:
+            self._free.append(bid)
+            self._free_set.add(bid)
+            self.total_frees += 1
+        return True
+
+    def release_parked(self, bid: int):
+        """Eviction path: a parked (refcount-0 cached) block returns to the
+        free list.  Only the prefix cache calls this, after unregistering
+        the block's radix node."""
+        bid = int(bid)
+        if bid not in self._parked:
+            raise RuntimeError(
+                f"release_parked of KV block {bid} which is not parked "
+                f"(refcount {self._refs.get(bid, 0)})")
+        self._parked.discard(bid)
+        self._free.append(bid)
+        self._free_set.add(bid)
+        self.total_frees += 1
+
     def free(self, ids: Iterable[int]):
-        """Return blocks to the pool.  A double-free is an error, not a
-        shrug: re-listing a block would hand it to two live slots and corrupt
-        cross-request KV history the next time either one writes.
+        """Release one owner from each block (the batch spelling of
+        ``decref`` — slot retirement routes a whole table row through it).
 
         Validates the whole batch before mutating anything, so a raise never
-        leaves the pool half-released."""
-        add = []
+        leaves the pool half-released: every id must be live, and a block
+        may appear at most once per batch (one table row references a block
+        at most once)."""
+        batch = []
         for bid in ids:
             bid = int(bid)
             if not bid:                         # never recycle scratch 0
@@ -107,25 +224,29 @@ class BlockAllocator:
                 raise ValueError(
                     f"free of out-of-range KV block id {bid} "
                     f"(pool has blocks 1..{self.num_blocks - 1})")
-            if bid in self._free_set or bid in add:
-                # also catches freeing a block that was never handed out:
-                # every non-live block sits on the free list by invariant
+            if bid not in self._refs or bid in batch:
+                # not live (free or parked -> owner count already 0), or
+                # listed twice in one batch: releasing below zero
                 self.double_free_rejected += 1
                 raise RuntimeError(
-                    f"double free of KV block {bid}: it is already on the "
-                    "free list; freeing it again would alias two slots onto "
-                    "one block")
-            add.append(bid)
-        self._free.extend(add)
-        self._free_set.update(add)
-        self.total_frees += len(add)
+                    f"double free of KV block {bid}: its refcount is "
+                    "already 0 (releasing below zero would alias two slots "
+                    "onto one block)")
+            batch.append(bid)
+        for bid in batch:
+            self.decref(bid)
 
 
 class SlotPages:
     """Per-slot block-table bookkeeping for the continuous-batching scheduler.
 
     The host table mirrors ``cache["table"]`` on device; ``dirty`` marks when
-    the device copy must be refreshed before the next decode step.
+    the device copy must be refreshed before the next decode step.  With the
+    prefix cache on, a slot's leading table entries may ALIAS blocks other
+    slots (or the radix index) also reference — the allocator refcounts keep
+    the books; aliased blocks are read-only by construction (a slot only
+    ever writes positions >= its claim-time ``pos``, which lies past every
+    shared block).
     """
 
     def __init__(self, slots: int, layout: PageLayout):
@@ -143,8 +264,23 @@ class SlotPages:
             self.counts[slot] += 1
             self.dirty = True
 
+    def adopt(self, slot: int, bids: Sequence[int]):
+        """Alias shared prefix blocks into a freshly-claimed slot's table
+        (incref each) — the slot's row must be empty (claim time)."""
+        if int(self.counts[slot]):
+            raise RuntimeError(
+                f"adopt into slot {slot} which already holds "
+                f"{int(self.counts[slot])} blocks (adopt is claim-time only)")
+        for j, bid in enumerate(bids):
+            self.table[slot, j] = self.alloc.incref(bid)
+        self.counts[slot] = len(bids)
+        if bids:
+            self.dirty = True
+
     def release(self, slot: int):
-        """Return a retired slot's blocks; its row falls back to scratch 0."""
+        """Release a retired slot's blocks (one decref each — shared blocks
+        stay resident for their other owners or the prefix cache); its row
+        falls back to scratch 0."""
         n = int(self.counts[slot])
         if n:
             self.alloc.free(self.table[slot, :n].tolist())
@@ -155,6 +291,203 @@ class SlotPages:
     def device_table(self) -> jnp.ndarray:
         self.dirty = False
         return jnp.asarray(self.table)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: radix index over full KV blocks
+# ---------------------------------------------------------------------------
+
+class _RadixNode:
+    """One FULL block of cached history.  ``key`` is the block's
+    ``block_size``-token tuple; the path from the root spells the whole
+    token prefix the block's KV content was computed from (KV at position p
+    depends causally on tokens[0..p], so content identity == path
+    identity)."""
+
+    __slots__ = ("key", "block", "children", "parent", "tick")
+
+    def __init__(self, key: Tuple[int, ...], block: int,
+                 parent: Optional["_RadixNode"]):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_RadixNode"] = {}
+        self.tick = 0
+
+
+class PrefixCache:
+    """Radix/trie index mapping token prefixes to resident pool blocks.
+
+    Only FULL blocks are indexed (a partially-filled block's content keeps
+    changing while its slot appends).  ``match`` walks the trie with a
+    prompt and returns the longest chain of cached blocks plus how many
+    tokens it covers — the last chain block may match only partially (the
+    prompt diverges mid-block), which the scheduler resolves with a
+    copy-on-write block copy.  ``insert`` registers a retired (or
+    prompt-complete) slot's full blocks; the allocator's ``retain`` hook
+    then parks their refcount-0 blocks instead of freeing them.  ``evict``
+    drops least-recently-matched LEAF nodes whose blocks have no live
+    owners — leaf-first keeps every remaining node's path intact, and the
+    allocator calls it via ``reclaim`` under pool pressure, so cached
+    prefixes never cost capacity.
+
+    Counters (``hits`` / ``misses`` / ``tokens_reused`` / ``cow_copies`` /
+    ``evictions``) are plain ints the scheduler mirrors onto the metrics
+    registry each iteration."""
+
+    def __init__(self, alloc: BlockAllocator, block_size: int,
+                 min_blocks: int = 1):
+        if min_blocks < 1:
+            raise ValueError(f"min_blocks must be >= 1, got {min_blocks}")
+        self.alloc = alloc
+        self.block_size = int(block_size)
+        self.min_blocks = int(min_blocks)
+        self.root = _RadixNode((), 0, None)
+        self.by_block: Dict[int, _RadixNode] = {}
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.tokens_reused = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        alloc.retain = self.by_block.__contains__
+        alloc.reclaim = self.evict
+
+    @property
+    def resident_blocks(self) -> int:
+        """Blocks the radix currently keeps resident (live-shared + parked)."""
+        return len(self.by_block)
+
+    def _touch(self, node: _RadixNode):
+        self._tick += 1
+        node.tick = self._tick
+
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest cached chain for ``tokens``: returns (block ids, matched
+        token count).  All chain blocks are full-block matches except
+        possibly the last, which may cover only ``matched % block_size``
+        leading tokens (mid-block divergence).  Touches every node on the
+        chain (LRU recency) but takes no references — the caller increfs
+        what it actually adopts."""
+        bs = self.block_size
+        toks = tuple(int(t) for t in tokens)
+        node, chain, i = self.root, [], 0
+        while True:
+            key = toks[i:i + bs]
+            child = node.children.get(key) if len(key) == bs else None
+            if child is not None:
+                self._touch(child)
+                chain.append(child.block)
+                node, i = child, i + bs
+                continue
+            # no full-block child: find the longest partial boundary match
+            best, best_n = None, 0
+            rest = toks[i:]
+            if rest:
+                for ckey, cnode in node.children.items():
+                    n = 0
+                    for a, b in zip(ckey, rest):
+                        if a != b:
+                            break
+                        n += 1
+                    if n > best_n:
+                        best, best_n = cnode, n
+            if best is not None:
+                self._touch(best)
+                chain.append(best.block)
+                i += best_n
+            return chain, i
+
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Register ``blocks`` (full blocks only — ``len(tokens)`` must be
+        ``len(blocks) * block_size``) under the token path.  Existing nodes
+        win: a block whose path is already cached is NOT re-registered (the
+        duplicate stays slot-private and frees on retire).  Returns how many
+        new nodes were created."""
+        bs = self.block_size
+        toks = tuple(int(t) for t in tokens)
+        if len(toks) != len(blocks) * bs:
+            raise ValueError(
+                f"insert of {len(blocks)} blocks needs exactly "
+                f"{len(blocks) * bs} tokens, got {len(toks)}")
+        node, created = self.root, 0
+        for j, bid in enumerate(blocks):
+            key = toks[j * bs:(j + 1) * bs]
+            child = node.children.get(key)
+            if child is None:
+                bid = int(bid)
+                if bid in self.by_block:
+                    # the block already backs a different path — allocator
+                    # corruption upstream; never index one block twice
+                    raise RuntimeError(
+                        f"block {bid} is already registered in the prefix "
+                        "index under a different token path")
+                child = _RadixNode(key, bid, node)
+                node.children[key] = child
+                self.by_block[bid] = child
+                created += 1
+            self._touch(child)
+            node = child
+        return created
+
+    def _evictable(self) -> Optional[_RadixNode]:
+        """Least-recently-matched LEAF whose block has no live owners."""
+        best = None
+        for bid, node in self.by_block.items():
+            if node.children or self.alloc.refcount(bid):
+                continue
+            if best is None or node.tick < best.tick:
+                best = node
+        return best
+
+    def evict(self, n: int = 1) -> int:
+        """Drop up to ``n`` LRU refcount-0 leaf blocks back to the free
+        list; returns how many were freed.  Evicting a leaf may expose its
+        parent as the next candidate, so deep cold chains drain tail-first
+        without ever breaking a surviving node's path."""
+        freed = 0
+        while freed < n:
+            node = self._evictable()
+            if node is None:
+                break
+            del node.parent.children[node.key]
+            del self.by_block[node.block]
+            self.alloc.release_parked(node.block)
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Evict every evictable block (tests / explicit cache drop)."""
+        return self.evict(len(self.by_block))
+
+
+def copy_block(cache, src, dst):
+    """Copy one GLOBAL-attention pool block ``src`` -> ``dst`` across every
+    layer of the cache pytree — the copy-on-write step for a partially
+    matched boundary block.  ``src``/``dst`` may be traced scalars (one
+    compiled program covers every pair).  Sliding-window layer pools (the
+    ``lt``-carrying dicts) are layer-private rings outside the shared table
+    and are left untouched; recurrent state isn't block-structured at all —
+    both are why the scheduler only enables prefix sharing for global-
+    attention-only stacks."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "kp" in node and "lt" not in node:
+                # leaves are [NB, bs, ...] or scan-stacked [R, NB, bs, ...]
+                return {k: copy_pool_block(
+                            v, src, dst,
+                            stacked=v.ndim == (5 if k in ("kp", "vp") else 4))
+                        if k in ("kp", "vp", "ksc", "vsc") else v
+                        for k, v in node.items()}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(cache)
 
 
 def static_table(batch: int, blocks_per_slot: int) -> jnp.ndarray:

@@ -39,7 +39,10 @@ class SchedulerPolicy:
 
     ``remaining`` below is the per-slot prompt view: ``None`` = free slot,
     ``0`` = decoding (consumes exactly 1 token), ``n > 0`` = still has n
-    prompt tokens to prefill.
+    prompt tokens to prefill.  With the prefix cache on, a cache hit
+    pre-advances the slot's prompt cursor to the reused token count at
+    claim time, so ``remaining`` — and therefore every budget/packing
+    decision below — already counts only the un-cached remainder.
     """
 
     name = "base"

@@ -173,18 +173,40 @@ class ContinuousBatcher:
         self.queue: deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
         self.pages: Optional[kvcache.SlotPages] = None
+        self.prefix: Optional[kvcache.PrefixCache] = None
         num_blocks = engine.num_blocks
         if engine.cache_kind != "dense":
             layout = kvcache.PageLayout.plan(s_cache, engine.slots,
                                              engine.block_size, num_blocks)
             self.pages = kvcache.SlotPages(engine.slots, layout)
             num_blocks = layout.num_blocks
+            if engine.prefix_cache:
+                # sharing is only sound when every cached position is
+                # reconstructable from the aliased blocks alone: recurrent
+                # state lives outside the pool and sliding-window rings
+                # OVERWRITE shared positions, so such stacks always miss
+                shareable = not registry.has_recurrent(cfg) \
+                    and _local_ring(cfg, s_cache) is None
+                if shareable:
+                    self.prefix = kvcache.PrefixCache(
+                        self.pages.alloc, layout.block_size,
+                        min_blocks=engine.prefix_cache_min_blocks)
+                # the CoW copy runs as ONE compiled program for any
+                # (src, dst) pair; donation lets XLA update the pools
+                # in place instead of cloning every layer per copy
+                self._copy_block = jax.jit(kvcache.copy_block,
+                                           donate_argnums=(0,))
         # the stored config carries the RESOLVED s_cache / num_blocks so the
         # compiled step and the cache agree on geometry
         self.engine_config = engine.replace(s_cache=s_cache,
                                             num_blocks=num_blocks)
         self.cache = registry.cache_init(cfg, engine.slots,
                                          engine=self.engine_config)
+        if self.prefix is not None:
+            # pre-pay the CoW program's one compile with a no-op
+            # scratch->scratch copy, so the first real mid-block
+            # divergence doesn't stall a serving iteration on a trace
+            self.cache = self._copy_block(self.cache, 0, 0)
         self._recurrent = registry.has_recurrent(cfg)
         self._reset = jax.jit(
             lambda c, i: registry.reset_slot(c, cfg, i))
@@ -287,6 +309,26 @@ class ContinuousBatcher:
                 "frees the double-free guard refused")
             self._m_exhaust = mx.counter(
                 "kv_pool_exhausted_total", "allocs that found no free block")
+        if self.prefix is not None:
+            self._m_pfx_hits = mx.counter(
+                "serving_prefix_cache_hits_total",
+                "claims that aliased at least min_blocks cached blocks")
+            self._m_pfx_miss = mx.counter(
+                "serving_prefix_cache_misses_total",
+                "claims with no usable cached prefix")
+            self._m_pfx_tokens = mx.counter(
+                "serving_prefix_tokens_reused_total",
+                "prompt tokens whose prefill was skipped via cached blocks")
+            self._m_pfx_cow = mx.counter(
+                "serving_prefix_cow_copies_total",
+                "copy-on-write block copies (mid-block divergence)")
+            self._m_pfx_evict = mx.counter(
+                "serving_prefix_evictions_total",
+                "cached blocks evicted (LRU) under pool pressure")
+            self._m_pfx_resident = mx.gauge(
+                "serving_prefix_shared_resident_blocks",
+                "pool blocks the radix index keeps resident "
+                "(live-shared + refcount-0 cached)")
         self._m_resident = mx.gauge(
             "kv_cache_resident_bytes",
             "modeled resident cache bytes over live slots "
@@ -323,6 +365,14 @@ class ContinuousBatcher:
                 self._m_frees.set_cumulative(al.total_frees)
                 self._m_dfree.set_cumulative(al.double_free_rejected)
                 self._m_exhaust.set_cumulative(al.pool_exhausted)
+            if self.prefix is not None:
+                pc = self.prefix
+                self._m_pfx_hits.set_cumulative(pc.hits)
+                self._m_pfx_miss.set_cumulative(pc.misses)
+                self._m_pfx_tokens.set_cumulative(pc.tokens_reused)
+                self._m_pfx_cow.set_cumulative(pc.cow_copies)
+                self._m_pfx_evict.set_cumulative(pc.evictions)
+                self._m_pfx_resident.set(pc.resident_blocks)
         if self._trace_log is not None:
             rec = dict(kind="iteration", iter=self._iterations, width=t,
                        slots=len(self.slots), valid_tokens=valid_toks,
@@ -477,6 +527,11 @@ class ContinuousBatcher:
                 s.prompt_cursor += take
                 if s.prompt_cursor == len(r.prompt):
                     tok = int(nxt[i])          # first generated token
+                    if self.prefix is not None:
+                        # the prompt's full blocks are finalized now —
+                        # index them so concurrent same-prefix requests
+                        # hit without waiting for this one to retire
+                        self._prefix_register(i, s, r)
             else:
                 tok = int(nxt[i])
             if tok is None:
@@ -498,7 +553,13 @@ class ContinuousBatcher:
                 self.finished[r.rid] = r
                 self.slots[i] = _Slot()        # slot recycled at pos 0
                 if self.pages is not None:
-                    self.pages.release(i)      # blocks back to the pool
+                    if self.prefix is not None:
+                        # index the generated extension too (multi-turn:
+                        # the next turn's prompt embeds this whole reply)
+                        self._prefix_register(i, s, r)
+                    # one decref per block: exclusive blocks return to the
+                    # free list, shared/indexed ones stay resident
+                    self.pages.release(i)
                 if self._mx is not None:
                     self._mx.counter("serving_requests_finished_total",
                                      "retired requests by done_reason",
@@ -562,3 +623,55 @@ class ContinuousBatcher:
                 # leak into the new occupant
                 self.cache = self._reset(self.cache,
                                          jnp.asarray(i, jnp.int32))
+            if self.prefix is not None:
+                self._prefix_claim(i, req)
+
+    def _prefix_claim(self, i: int, req: Request):
+        """Map a freshly-claimed slot's prompt onto cached blocks: full
+        matches are aliased read-only (incref), a partial boundary match is
+        copy-on-write copied into a private block, and the slot starts its
+        prefill at the divergence offset."""
+        pc = self.prefix
+        bs = self.pages.layout.block_size
+        chain, matched = pc.match(req.prompt)
+        # at least one prompt token must still run through the model so the
+        # chunk step has logits to sample the first output token from
+        usable = min(matched, len(req.prompt) - 1)
+        n_full = usable // bs
+        if n_full < pc.min_blocks:
+            pc.misses += 1
+            return
+        boundary = usable - n_full * bs        # tokens into block n_full
+        self.pages.adopt(i, chain[:n_full])
+        cached = n_full * bs
+        if boundary:
+            src = int(chain[n_full])
+            pc.alloc.incref(src)               # pin against eviction
+            try:
+                self.pages.ensure(i, cached)   # one private block at n_full
+                dst = int(self.pages.table[i, n_full])
+                self.cache = self._copy_block(self.cache, src, dst)
+                pc.cow_copies += 1
+                cached += boundary
+            except RuntimeError:
+                # pool too tight to grant the CoW copy's block — keep the
+                # full-block hit and recompute the boundary tokens
+                pass
+            finally:
+                pc.alloc.decref(src)           # re-parks via retain hook
+        s = self.slots[i]
+        s.pos = cached
+        s.prompt_cursor = cached               # budget sees only the rest
+        pc.hits += 1
+        pc.tokens_reused += cached
+
+    def _prefix_register(self, i: int, s: _Slot, r: Request):
+        """Index slot ``i``'s finalized FULL blocks (every position below
+        ``s.pos`` is written) so later requests can alias them."""
+        bs = self.pages.layout.block_size
+        n_full = min(s.pos // bs, int(self.pages.counts[i]))
+        if n_full < 1:
+            return
+        seq = (r.prompt + r.tokens)[:n_full * bs]
+        blocks = [int(b) for b in self.pages.table[i, :n_full]]
+        self.prefix.insert(seq, blocks)

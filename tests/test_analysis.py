@@ -411,6 +411,37 @@ def test_aliasing_checker_accepts_clean_and_rejects_freed(model):
     assert ei.value.check == "block_aliasing"
 
 
+def test_debug_catches_corrupted_refcount(model):
+    """Owner count != refcount (a skipped incref/decref) must trip
+    check=block_aliasing and count on the failure counter."""
+    def corrupt(cb):
+        live = int(cb.pages.table[0, 0])
+        cb.pages.alloc._refs[live] += 1        # phantom owner
+
+    with pytest.raises(DebugCheckError) as ei:
+        _run(model, "paged", corrupt)
+    assert ei.value.check == "block_aliasing"
+
+
+def test_refcount_zero_live_block_trips(model):
+    """A block referenced by a slot table while at refcount 0 (as if it
+    had been parked/evicted under a live reader) must be rejected."""
+    cfg, params = model
+    cb = ContinuousBatcher(params, cfg, _ecfg(cache_kind="paged",
+                                              prefix_cache=True))
+    cb.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new=2))
+    cb.step()
+    live = int(cb.pages.table[0, 0])
+    del cb.pages.alloc._refs[live]
+    with pytest.raises(DebugCheckError) as ei:
+        runtime.check_block_aliasing(cb.pages)
+    assert ei.value.check == "block_aliasing"
+    with pytest.raises(DebugCheckError):
+        cb.run(max_steps=10)
+    snap = cb.metrics.snapshot()["counters"]
+    assert snap[runtime.FAILURE_COUNTER]["check=block_aliasing"] == 1.0
+
+
 def test_recompile_monitor():
     mon = RecompileMonitor(3)
     mon.observe(compiles=3, iterations=10)        # at budget: fine

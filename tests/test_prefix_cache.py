@@ -1,0 +1,331 @@
+"""Prefix/radix caching over the paged KV pool: refcounted allocator
+lifecycle, radix match/insert/LRU-eviction units, aliased-table gather
+identity at the kernel level, and end-to-end greedy parity prefix-cache
+on vs off (bit-identical outputs) across every paged cache kind — plus
+copy-on-write mid-block divergence and refcounted churn under pool
+pressure with the debug sanitizer armed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import attention as attnk
+from repro.kernels import kv_cache as kvk
+from repro.models import registry
+from repro.serving import kvcache
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.kvcache import BlockAllocator, PrefixCache
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+PAGED_KINDS = ("paged", "paged_q8", "paged_q8c")
+S_CACHE, BLOCK, CHUNK = 32, 4, 5
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcount lifecycle
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcount_lifecycle():
+    alloc = BlockAllocator(6)                    # blocks 1..5 usable
+    a = alloc.alloc()
+    assert alloc.refcount(a) == 1 and alloc.live_blocks == 1
+    alloc.incref(a)
+    assert alloc.refcount(a) == 2
+    assert alloc.decref(a) is False              # still one owner
+    assert alloc.refcount(a) == 1
+    assert alloc.decref(a) is True               # released (no retain hook)
+    assert alloc.refcount(a) == 0 and a not in alloc._refs
+    assert alloc.free_blocks == 5
+
+
+def test_allocator_decref_below_zero_raises_and_counts():
+    alloc = BlockAllocator(4)
+    a = alloc.alloc()
+    alloc.decref(a)
+    with pytest.raises(RuntimeError, match="double free"):
+        alloc.decref(a)
+    assert alloc.double_free_rejected == 1
+    # incref of a block that isn't resident is the mirror-image corruption
+    with pytest.raises(RuntimeError, match="non-resident"):
+        alloc.incref(a)
+
+
+def test_allocator_park_and_resurrect():
+    """retain() parks refcount-0 blocks; incref resurrects them; reclaim()
+    runs under pool pressure before alloc gives up."""
+    kept: set = set()
+    alloc = BlockAllocator(3)                    # blocks 1..2 usable
+    alloc.retain = kept.__contains__
+    a = alloc.alloc()
+    kept.add(a)
+    alloc.decref(a)                              # parks, not freed
+    assert alloc.parked_blocks == 1 and alloc.free_blocks == 1
+    assert alloc.refcount(a) == 0
+    alloc.incref(a)                              # resurrect from parked
+    assert alloc.refcount(a) == 1 and alloc.parked_blocks == 0
+    alloc.decref(a)                              # re-parks
+    b = alloc.alloc()                            # one free block left: ok
+    evicted = []
+
+    def reclaim(n):
+        for _ in range(n):
+            if not alloc._parked:
+                return len(evicted)
+            bid = next(iter(alloc._parked))
+            kept.discard(bid)
+            alloc.release_parked(bid)
+            evicted.append(bid)
+        return len(evicted)
+
+    alloc.reclaim = reclaim
+    c = alloc.alloc()                            # pressure: evicts the park
+    assert evicted == [a] and c == a
+    alloc.free([b, c])
+
+
+def test_release_parked_requires_parked():
+    alloc = BlockAllocator(4)
+    a = alloc.alloc()
+    with pytest.raises(RuntimeError, match="not parked"):
+        alloc.release_parked(a)
+
+
+# ---------------------------------------------------------------------------
+# radix index units
+# ---------------------------------------------------------------------------
+
+def _pc(num_blocks=16, bs=4, **kw):
+    alloc = BlockAllocator(num_blocks)
+    return PrefixCache(alloc, bs, **kw), alloc
+
+
+def test_radix_insert_match_roundtrip():
+    pc, alloc = _pc()
+    b1, b2 = alloc.alloc(), alloc.alloc()
+    assert pc.insert([1, 2, 3, 4, 5, 6, 7, 8], [b1, b2]) == 2
+    chain, n = pc.match([1, 2, 3, 4, 5, 6, 7, 8, 9])
+    assert chain == [b1, b2] and n == 8
+    # shorter prompt matching only the first block
+    chain, n = pc.match([1, 2, 3, 4, 99])
+    assert chain == [b1] and n == 4
+    # diverging inside block 1: partial boundary match
+    chain, n = pc.match([1, 2, 3, 4, 5, 6, 99])
+    assert chain == [b1, b2] and n == 6
+    # no match at all
+    assert pc.match([9, 9, 9, 9]) == ([], 0)
+
+
+def test_radix_insert_dedup_and_double_register():
+    pc, alloc = _pc()
+    b1, b2, b3 = alloc.alloc(), alloc.alloc(), alloc.alloc()
+    assert pc.insert([1, 2, 3, 4], [b1]) == 1
+    # same path, different block: existing node wins, duplicate not indexed
+    assert pc.insert([1, 2, 3, 4, 5, 6, 7, 8], [b2, b3]) == 1
+    assert pc.resident_blocks == 2 and b2 not in pc.by_block
+    # one block under two different paths is corruption
+    with pytest.raises(RuntimeError, match="different token path"):
+        pc.insert([7, 7, 7, 7], [b1])
+    with pytest.raises(ValueError, match="exactly"):
+        pc.insert([1, 2, 3], [b1])
+
+
+def test_lru_eviction_ordering():
+    """Least-recently-matched refcount-0 LEAF goes first; parents only
+    after their children (paths stay intact)."""
+    pc, alloc = _pc(num_blocks=32)
+    ids = [alloc.alloc() for _ in range(4)]
+    pc.insert([1, 2, 3, 4, 5, 6, 7, 8], ids[:2])     # chain A: a1 -> a2
+    pc.insert([9, 9, 9, 9], [ids[2]])                # chain B
+    pc.insert([8, 8, 8, 8], [ids[3]])                # chain C
+    for b in ids:
+        alloc.decref(b)                              # all parked
+    pc.match([9, 9, 9, 9])                           # B most recent
+    pc.match([8, 8, 8, 8])
+    pc.match([1, 2, 3, 4])                           # touches a1 ONLY
+    # LRU leaves: a2 (never matched since insert) then B then C; a1 is
+    # not a leaf until a2 goes, and is the most recent anyway
+    assert pc.evict(1) == 1 and ids[1] not in pc.by_block
+    assert pc.evict(1) == 1 and ids[2] not in pc.by_block
+    assert pc.evict(1) == 1 and ids[3] not in pc.by_block
+    assert pc.evict(1) == 1 and ids[0] not in pc.by_block   # a1 last
+    assert pc.evict(1) == 0 and alloc.free_blocks == 31
+    assert pc.evictions == 4
+
+
+def test_evict_skips_live_blocks():
+    pc, alloc = _pc()
+    b1 = alloc.alloc()
+    pc.insert([1, 2, 3, 4], [b1])
+    assert pc.evict(1) == 0                      # refcount 1: not evictable
+    alloc.decref(b1)                             # parks (retain hook)
+    assert alloc.parked_blocks == 1
+    assert pc.evict(1) == 1 and alloc.free_blocks == 15
+
+
+# ---------------------------------------------------------------------------
+# kernels: aliased block tables are legal read-side inputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", PAGED_KINDS)
+def test_gather_identity_aliased_tables(mode):
+    """Two slots whose tables alias the same blocks must gather the exact
+    same K/V bytes — the read path the prefix cache relies on."""
+    rng = np.random.default_rng(7)
+    b, bps, bs, kv, hd = 2, 3, 4, 2, 16
+    shared = jnp.asarray([1, 2, 3], jnp.int32)
+    table = jnp.stack([shared, shared])          # both rows alias 1,2,3
+    cache = kvk.pool_init(1 + 3, bs, kv, hd, jnp.float32, mode)
+    for t in range(bps * bs):
+        k = jnp.asarray(rng.normal(size=(1, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, kv, hd)), jnp.float32)
+        cache = kvk.append(cache, k, v, shared[t // bs][None],
+                           jnp.asarray([t % bs], jnp.int32),
+                           mode=mode, backend="xla")
+    for be in ("xla", "pallas"):
+        ks, vs = kvk.gather(cache, table, mode=mode, backend=be,
+                            out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(ks[0]), np.asarray(ks[1]))
+        np.testing.assert_array_equal(np.asarray(vs[0]), np.asarray(vs[1]))
+    # and the fused attention path: identical queries over aliased tables
+    # give bit-identical outputs per backend
+    q = jnp.asarray(rng.normal(size=(2, 1, 2 * kv, hd)), jnp.float32)
+    q = q.at[1].set(q[0])
+    pos = jnp.asarray([bps * bs - 1] * 2, jnp.int32)   # last query position
+    lens = jnp.asarray([bps * bs] * 2, jnp.int32)      # appended history
+    for be in attnk.attn_backends():
+        out = attnk.paged_attention(q, cache, table, pos, lens, mode=mode,
+                                    window=0, backend=be,
+                                    out_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: greedy parity prefix-cache on vs off
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = reduced(get_config("llama2-7b"))
+    return cfg, registry.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def rgemma():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    return cfg, registry.init_params(jax.random.PRNGKey(1), cfg)
+
+
+def _ecfg(kind, prefix, **kw):
+    kw.setdefault("dtype", jnp.float32)
+    kw.setdefault("s_cache", S_CACHE)
+    kw.setdefault("block_size", BLOCK)
+    kw.setdefault("chunk_size", CHUNK)
+    kw.setdefault("slots", 2)
+    kw.setdefault("debug_checks", True)
+    return EngineConfig(cache_kind=kind, prefix_cache=prefix, **kw)
+
+
+def _serve(model, kind, prompts, prefix, **kw):
+    cfg, params = model
+    eng = ServingEngine(params, cfg, _ecfg(kind, prefix, **kw))
+    outs = [list(eng.submit(p).result(max_steps=400).tokens)
+            for p in prompts]
+    return outs, eng
+
+
+@pytest.mark.parametrize("kind", PAGED_KINDS)
+def test_prefix_parity_greedy_llama(llama, kind):
+    shared = list(range(1, 13))                  # 3 full blocks
+    prompts = [shared + [50 + r, 60 + r] for r in range(3)]
+    on, eng = _serve(llama, kind, prompts, True)
+    off, _ = _serve(llama, kind, prompts, False)
+    assert on == off                             # bit-identical greedy
+    st = eng.prefix_cache_stats()
+    assert st["hits"] == 2 and st["misses"] == 1
+    assert st["tokens_reused"] == 2 * len(shared)
+
+
+def test_prefix_cow_mid_block_divergence(llama):
+    """Prompts diverging mid-block force the copy-on-write boundary copy;
+    outputs stay bit-identical to the cache-off run."""
+    shared = list(range(1, 15))                  # 14 tokens: 3.5 blocks
+    prompts = [shared + [50 + r] for r in range(3)]
+    on, eng = _serve(llama, "paged_q8", prompts, True)
+    off, _ = _serve(llama, "paged_q8", prompts, False)
+    assert on == off
+    st = eng.prefix_cache_stats()
+    assert st["cow_copies"] >= 1 and st["hits"] == 2
+
+
+def test_prefix_full_prompt_match_still_samples(llama):
+    """A prompt entirely contained in the cache must still prefill >= 1
+    token (the clamp to len(prompt) - 1) so the first sample has logits."""
+    p = list(range(1, 13))
+    on, eng = _serve(llama, "paged", [p, p, p], True)
+    off, _ = _serve(llama, "paged", [p, p, p], False)
+    assert on == off and eng.prefix_cache_stats()["hits"] == 2
+
+
+def test_recurrent_stack_disables_sharing_but_parity_holds(rgemma):
+    """recurrentgemma carries recurrent + sliding-window state outside the
+    pool: the engine must refuse to share (prefix stays None) and behave
+    identically with the flag on."""
+    shared = list(range(1, 13))
+    prompts = [shared + [50 + r] for r in range(2)]
+    on, eng = _serve(rgemma, "paged", prompts, True)
+    off, _ = _serve(rgemma, "paged", prompts, False)
+    assert eng.prefix_cache_stats() is None
+    assert eng.batcher.prefix is None
+    assert on == off
+
+
+def test_prefix_hit_pre_advances_budget_view(llama):
+    """A cache hit converts prefill work into reuse: the slot's prompt
+    cursor starts at the reused offset, so TokenBudgetPolicy-style
+    ``remaining`` sees only the un-cached tail."""
+    cfg, params = llama
+    eng = ServingEngine(params, cfg, _ecfg("paged", True))
+    eng.submit(list(range(1, 13)) + [50]).result(max_steps=400)
+    h = eng.submit(list(range(1, 13)) + [51])
+    eng.step()                                   # claim happens here
+    s = next(s for s in eng.batcher.slots if not s.free)
+    assert s.req.rid == h.rid
+    assert eng.prefix_cache_stats()["hits"] == 1
+    h.result(max_steps=400)
+
+
+def test_refcounted_churn_under_pressure(llama):
+    """Many shared-prefix requests through a small pool with the sanitizer
+    armed: refcounts must stay consistent every iteration, eviction must
+    keep alloc from exhausting, and retiring the fleet returns the pool to
+    parked-or-free with zero live blocks."""
+    cfg, params = llama
+    eng = ServingEngine(params, cfg, _ecfg("paged_q8c", True, slots=3))
+    shared = list(range(1, 9))
+    handles = [eng.submit(shared + [40 + r, 70 + r]) for r in range(8)]
+    for h in handles:
+        h.result(max_steps=1000)
+    assert all(h.done for h in handles)
+    alloc = eng.batcher.pages.alloc
+    assert alloc.live_blocks == 0                # every slot retired
+    st = eng.prefix_cache_stats()
+    # the first wave (3 slots) claims against an empty trie concurrently;
+    # every later request must hit
+    assert st["hits"] >= 5 and st["misses"] <= 3
+    assert st["resident_blocks"] == alloc.parked_blocks
+    assert alloc.double_free_rejected == 0
+    # metrics surface mirrors the live counters
+    counters = eng.metrics_snapshot()["counters"]
+    assert counters["serving_prefix_cache_hits_total"][""] == st["hits"]
+    assert counters["serving_prefix_tokens_reused_total"][""] \
+        == st["tokens_reused"]
+
+
+def test_prefix_cache_off_has_no_index(llama):
+    cfg, params = llama
+    cb = ContinuousBatcher(params, cfg, _ecfg("paged", False))
+    assert cb.prefix is None
+    cb.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5], max_new=2))
+    cb.run(max_steps=40)
+    assert cb.pages.alloc.parked_blocks == 0     # nothing retained
