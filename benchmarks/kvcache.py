@@ -14,6 +14,14 @@ Two parts:
     reduced config per cache kind.  Off-TPU the paged kernels run via the
     XLA fallback (or Pallas interpret mode), so absolute numbers only
     compare like with like — the JSON records the platform.
+  * **GLVQ codec quality**: held-out reconstruction MSE of the
+    ``paged_glvq`` runtime codec with a codebook fitted by the paper's
+    Babai-STE loop vs the uniform signed-int4 grid (the identity default
+    book), on synthetic KV-like samples (heavy-tailed, sub-vector-aligned
+    anisotropy).  Full mode asserts the calibrated book wins.
+
+Full (non ``--smoke``) mode also asserts the acceptance bars:
+``paged_glvq`` bytes/token <= 0.15x dense and calibrated MSE < uniform.
 
 Run:  PYTHONPATH=src python -m benchmarks.kvcache [--smoke] [--out ...]
 """
@@ -85,6 +93,51 @@ def bench_throughput(smoke: bool = False):
     return rows
 
 
+def bench_glvq_mse(smoke: bool = False):
+    """Held-out reconstruction MSE: calibrated GLVQ book vs the uniform
+    signed-int4 grid, through the actual ``paged_glvq`` runtime codec
+    (quantize -> word-pack -> unpack -> dequantize).  Synthetic KV-like
+    samples: heavy-tailed (student-t) with a per-sub-vector anisotropy
+    profile — the correlated/outlier-channel structure the learned lattice
+    exploits and the uniform grid cannot."""
+    from repro.core.glvq import GLVQConfig, quantize_group
+    from repro.kernels import kv_cache as kvk
+    rng = np.random.default_rng(0)
+    hd, d, bits = 16, 4, 4
+    n = 192 if smoke else 768
+    prof = np.array([2.5, 1.0, 0.35, 0.12])
+    mix = np.linalg.qr(rng.normal(size=(d, d)))[0] @ np.diag(prof)
+
+    def draw(m):
+        z = rng.standard_t(3, size=(m, hd // d, d))
+        x = np.einsum("ij,nkj->nki", mix, z).reshape(m, hd)
+        amax = np.maximum(np.abs(x).max(-1, keepdims=True), 1e-6)
+        return jnp.asarray((x / amax).astype(np.float32))
+
+    fit, held = draw(n), draw(n)
+    spec = kvk.GLVQSpec(bits=bits, d=d, hd=hd)
+
+    def codec_mse(g, mu, x):
+        gi = jnp.linalg.inv(g)
+        mu = jnp.asarray([mu], jnp.float32)
+        w, a = kvk.glvq_quantize(x[:, None], gi[None], mu, spec)
+        back = kvk.glvq_dequantize(w, a, g[None], mu, spec, jnp.float32)
+        return float(jnp.mean((back[:, 0] - x) ** 2))
+
+    ident = kvk.glvq_default_book(1, spec)
+    out = quantize_group(fit.T, None, jnp.asarray(bits, jnp.int32),
+                         GLVQConfig(d=d, bits=bits,
+                                    iters=12 if smoke else 150))
+    uniform = codec_mse(ident["kg"][0], 0.0, held)
+    calibrated = codec_mse(out["g"], float(out["mu"]), held)
+    print(f"[kvcache] glvq held-out MSE: uniform-int4 {uniform:.6f}  "
+          f"calibrated {calibrated:.6f}  ratio {calibrated / uniform:.3f}")
+    return [dict(kind="glvq_mse", codec=name, bits=bits, d=d, hd=hd,
+                 held_out_mse=v)
+            for name, v in (("uniform_int4", uniform),
+                            ("glvq_calibrated", calibrated))]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=str(Path(__file__).parent
@@ -96,13 +149,25 @@ def main(argv=None):
     mid = {r["cache"]: r["bytes_per_token"] for r in cap
            if r["seq_len"] == S_CACHE_FULL // 2}
     ratio = mid["paged_q8"] / mid["dense"]
+    glvq_ratio = mid["paged_glvq"] / mid["dense"]
     print(f"[kvcache] paged_q8 / dense bytes-per-token at "
           f"s={S_CACHE_FULL // 2}: {ratio:.3f}")
+    print(f"[kvcache] paged_glvq / dense bytes-per-token at "
+          f"s={S_CACHE_FULL // 2}: {glvq_ratio:.3f}")
+    mse_rows = bench_glvq_mse(smoke=args.smoke)
+    if not args.smoke:
+        # acceptance bars (full mode only; smoke keeps CI fast)
+        assert glvq_ratio <= 0.15, \
+            f"paged_glvq bytes/token ratio {glvq_ratio:.3f} > 0.15x dense"
+        mse = {r["codec"]: r["held_out_mse"] for r in mse_rows}
+        assert mse["glvq_calibrated"] < mse["uniform_int4"], \
+            "calibrated GLVQ book did not beat the uniform int4 grid"
     result = dict(
         platform=jax.default_backend(),
         hbm_budget_bytes=HBM_BUDGET,
         paged_q8_over_dense_bytes_per_token=ratio,
-        rows=cap + bench_throughput(smoke=args.smoke),
+        paged_glvq_over_dense_bytes_per_token=glvq_ratio,
+        rows=cap + bench_throughput(smoke=args.smoke) + mse_rows,
     )
     Path(args.out).write_text(json.dumps(result, indent=2))
     print(f"[kvcache] wrote {args.out}")

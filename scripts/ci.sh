@@ -83,17 +83,27 @@ PYEOF
 # Runtime-sanitizer smoke: debug_checks=on serving across ALL cache kinds
 # (in-graph checkify assertions + allocator aliasing + recompile monitor
 # must pass clean on every KV layout, quantized blocks included).
-for kind in dense paged paged_q8 paged_q8c; do
+for kind in dense paged paged_q8 paged_q8c paged_glvq; do
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
         --requests 2 --batch 2 --prompt-len 7 --max-new 3 --chunk-size 4 \
         --cache "$kind" --debug-checks --no-metrics
 done
 echo "[ci] debug_checks smoke OK (all cache kinds)"
 
+# GLVQ lattice-coded KV smoke on BOTH kv backends (the xla fallback and the
+# Pallas kernels in interpret mode) so the packed-code append/gather path
+# can't rot behind the platform default.
+for be in xla pallas; do
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+        --requests 2 --batch 2 --prompt-len 7 --max-new 3 --chunk-size 4 \
+        --cache paged_glvq --kv-backend "$be" --debug-checks --no-metrics
+done
+echo "[ci] paged_glvq smoke OK (both kv backends)"
+
 # Prefix-cache smoke: radix sharing + copy-on-write + refcounted aliasing
 # under the sanitizer, across every paged cache kind ("dense" exercises the
 # flag being a validated no-op).  --shared-prefix guarantees cache hits.
-for kind in dense paged paged_q8 paged_q8c; do
+for kind in dense paged paged_q8 paged_q8c paged_glvq; do
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
         --requests 4 --batch 2 --prompt-len 24 --max-new 3 --chunk-size 4 \
         --cache "$kind" --kv-block-size 8 --prefix-cache --shared-prefix 18 \

@@ -13,7 +13,8 @@ evaluation path of the paper's Tables 1-3. Packed serving payloads come from
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterable, List, Optional
+import functools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,11 +23,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.sdba import group_salience, fractional_bits, sdba as sdba_fn
 from repro.core.baselines import gptq_quantize, rtn_quantize, fixed_lattice_init
-from repro.core.glvq import GLVQConfig, quantize_layer, dequantize_layer
+from repro.core.glvq import GLVQConfig, quantize_group, quantize_layer, \
+    dequantize_layer
+from repro.kernels import kv_cache
 from repro.models import layers
 from repro.models.layers import rms_norm
 
-__all__ = ["collect_h", "quantize_model", "layer_slice", "layer_set"]
+__all__ = ["collect_h", "quantize_model", "layer_slice", "layer_set",
+           "KVCodebook", "calibrate_kv", "save_kv_codebook",
+           "load_kv_codebook"]
 
 
 def layer_slice(tree, i: int):
@@ -134,6 +139,217 @@ def quantize_model(params, cfg: ModelConfig, *, method: str = "glvq",
         new_blocks = layer_set(new_blocks, i, p)
     out = dict(params, blocks=(new_blocks,))
     return out, QuantReport(method=method, bits=bits, layer_mse=mses)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache codebook calibration (paged_glvq)
+# ---------------------------------------------------------------------------
+
+_ATTN_KINDS = ("attn", "attn_local", "attn_moe")
+
+
+@dataclasses.dataclass
+class KVCodebook:
+    """Calibrated per-head GLVQ codebooks for the ``paged_glvq`` KV cache.
+
+    ``blocks`` aligns with ``cfg.scan_unit`` (None for non-attention
+    kinds); each attention entry is a dict of the ``GLVQ_BOOK_LEAVES``
+    with a leading scan-repeat axis: kg/kgi/vg/vgi [R, KV, d, d],
+    kmu/vmu [R, KV].  ``tail`` aligns with ``cfg.scan_tail``, same leaves
+    without the repeat axis.  ``models.lm.cache_init`` grafts these over
+    the identity defaults; ``serving.engine.EngineConfig.kv_codebook``
+    threads them into the engine."""
+    bits: int
+    d: int
+    hd: int
+    blocks: Tuple[Optional[Dict[str, np.ndarray]], ...]
+    tail: Tuple[Optional[Dict[str, np.ndarray]], ...]
+
+
+def _kv_sample_cache(params, tokens, cfg: ModelConfig, chunk: int):
+    """Run the dense serving step over one token batch; the filled dense
+    cache IS the post-RoPE K/V tap (family-agnostic: any stack lm serves)."""
+    from repro.models import lm
+    b, t = tokens.shape
+    cache = lm.cache_init(cfg, b, t, jnp.float32)
+    if any(k == "attn_local" for k in
+           tuple(cfg.scan_unit) + tuple(cfg.scan_tail)):
+        chunk = min(chunk, cfg.window)    # ring layers reject wider chunks
+    for start in range(0, t, chunk):
+        slab = tokens[:, start:start + chunk]
+        lens = jnp.full((b,), slab.shape[1], jnp.int32)
+        pos = jnp.full((b,), start, jnp.int32)
+        _, cache = lm.chunk_step(params, cache, jnp.asarray(slab), pos, lens,
+                                 cfg, dtype=jnp.float32)
+    return cache
+
+
+@functools.partial(jax.jit, static_argnames=("qcfg",))
+def _fit_kv_heads(samples, bits, qcfg: GLVQConfig):
+    """samples [KV, n_tok, hd] (per-token max-abs normalized) -> per-head
+    (g [KV, d, d], mu [KV]) via the paper's Babai-STE loop.  Rows are
+    already in [-1, 1], so quantize_group's global scale is exactly 1 and
+    the learned (G, mu) applies verbatim to the runtime codec's
+    per-token-normalized inputs."""
+    fit = lambda s: quantize_group(s, None, bits, qcfg)
+    out = jax.vmap(fit)(samples)
+    return out["g"], out["mu"]
+
+
+def _normalize_tokens(x: np.ndarray) -> np.ndarray:
+    """[n_tok, hd] -> per-token max-abs normalized (the runtime codec's
+    pre-lattice view)."""
+    amax = np.maximum(np.max(np.abs(x), axis=-1, keepdims=True), 1e-6)
+    return (x / amax).astype(np.float32)
+
+
+def _fit_book(k_all, v_all, spec, qcfg: GLVQConfig, rng,
+              samples_per_head: int, per_head: bool):
+    """k_all/v_all [n_tok, KV, hd] (np) -> dict of GLVQ_BOOK_LEAVES
+    ([KV, d, d] / [KV]) for one layer (repeat)."""
+    n_kv = k_all.shape[1]
+    bits = jnp.asarray(spec.bits, jnp.int32)
+
+    def head_samples(x_all, h):
+        x = x_all[:, h] if per_head else x_all.reshape(-1, x_all.shape[-1])
+        if x.shape[0] > samples_per_head:
+            x = x[rng.choice(x.shape[0], samples_per_head, replace=False)]
+        return _normalize_tokens(x)
+
+    def head_mse(x, g, mu):
+        """Per-head runtime-codec reconstruction MSE on the fit samples
+        (x [n, heads, hd] is already per-token normalized, so the codec's
+        own amax is exactly 1 and (g, mu) apply verbatim)."""
+        w, a = kv_cache.glvq_quantize(x, jnp.linalg.inv(g), mu, spec)
+        b = kv_cache.glvq_dequantize(w, a, g, mu, spec, jnp.float32)
+        return np.asarray(jnp.mean((b - x) ** 2, axis=(0, 2)))
+
+    leaves = {}
+    for side, x_all in (("k", k_all), ("v", v_all)):
+        heads = [head_samples(x_all, h) for h in
+                 (range(n_kv) if per_head else [0])]
+        n = min(s.shape[0] for s in heads)
+        stacked = jnp.asarray(np.stack([s[:n] for s in heads]))
+        g, mu = _fit_kv_heads(stacked, bits, qcfg)
+        g = np.asarray(g, np.float32)
+        mu = np.asarray(mu, np.float32)
+        # candidate selection: quantize_group's mu floor (>= 10) forces
+        # companding, which can LOSE to the plain uniform grid on light-
+        # tailed heads — per head, keep whichever of (learned G, mu) and
+        # (identity/hi, mu=0 -> compand bypassed) reconstructs the fit
+        # samples better, so calibration never regresses the codec.
+        x = jnp.moveaxis(stacked, 0, 1)               # [n, heads, hd]
+        eye = np.broadcast_to(np.eye(spec.d, dtype=np.float32) / spec.hi,
+                              g.shape).copy()
+        mse_l = head_mse(x, jnp.asarray(g), jnp.asarray(mu))
+        mse_i = head_mse(x, jnp.asarray(eye), jnp.zeros_like(jnp.asarray(mu)))
+        use_i = mse_i <= mse_l
+        g = np.where(use_i[:, None, None], eye, g)
+        mu = np.where(use_i, np.float32(0.0), mu)
+        if not per_head:                    # per-layer fallback: share
+            g = np.broadcast_to(g, (n_kv,) + g.shape[1:]).copy()
+            mu = np.broadcast_to(mu, (n_kv,)).copy()
+        leaves[side + "g"] = g.astype(np.float32)
+        leaves[side + "gi"] = np.linalg.inv(g).astype(np.float32)
+        leaves[side + "mu"] = mu.astype(np.float32)
+    return leaves
+
+
+def calibrate_kv(params, batches: Iterable[dict], cfg: ModelConfig, *,
+                 bits: int = 4, d: int = 0, chunk: int = 32,
+                 samples_per_head: int = 1024, per_head: bool = True,
+                 qcfg: Optional[GLVQConfig] = None,
+                 seed: int = 0) -> KVCodebook:
+    """Fit per-head (fallback: per-layer) KV lattice codebooks.
+
+    Runs the dense serving step over ``batches`` (dicts with "tokens"
+    [B, T]), taps every attention layer's post-RoPE K/V from the filled
+    dense cache, per-token max-abs normalizes (the runtime codec's
+    pre-lattice view), and fits each head's generation matrix + companding
+    mu with the existing ``quantize_group`` Babai-STE loop.  ``per_head=
+    False`` (or too few samples) pools heads into one per-layer codebook.
+    Returns a ``KVCodebook`` ready for ``EngineConfig.kv_codebook``."""
+    spec = kv_cache.default_glvq_spec(cfg.hd, bits=bits, d=d or None)
+    qcfg = qcfg or GLVQConfig(d=spec.d, bits=spec.bits, iters=60)
+    if qcfg.d != spec.d or qcfg.bits != spec.bits:
+        qcfg = dataclasses.replace(qcfg, d=spec.d, bits=spec.bits)
+    rng = np.random.default_rng(seed)
+
+    unit_kinds = tuple(cfg.scan_unit)
+    tail_kinds = tuple(cfg.scan_tail)
+    # samples[(where, idx, repeat)] = list of ([n_tok, KV, hd] k, same v)
+    acc: Dict[tuple, list] = {}
+    for batch in batches:
+        tokens = np.asarray(batch["tokens"])
+        t = tokens.shape[1]
+        cache = _kv_sample_cache(params, tokens, cfg, chunk)
+
+        def harvest(kv_leaves, key, t=t):
+            k, v = np.asarray(kv_leaves["k"]), np.asarray(kv_leaves["v"])
+            s = min(t, k.shape[1])          # ring layers hold min(window, t)
+            kk = k[:, :s].reshape(-1, k.shape[2], k.shape[3])
+            vv = v[:, :s].reshape(-1, v.shape[2], v.shape[3])
+            acc.setdefault(key, []).append((kk, vv))
+
+        for ui, kind in enumerate(unit_kinds):
+            if kind not in _ATTN_KINDS:
+                continue
+            for r in range(cfg.n_repeats):
+                harvest(layer_slice(cache["blocks"][ui], r), ("u", ui, r))
+        for ti, kind in enumerate(tail_kinds):
+            if kind in _ATTN_KINDS:
+                harvest(cache["tail"][ti], ("t", ti, 0))
+
+    def fit(key):
+        parts = acc[key]
+        k_all = np.concatenate([p[0] for p in parts])
+        v_all = np.concatenate([p[1] for p in parts])
+        ph = per_head and k_all.shape[0] >= 4 * k_all.shape[1]
+        return _fit_book(k_all, v_all, spec, qcfg, rng,
+                         samples_per_head, ph)
+
+    blocks: list = []
+    for ui, kind in enumerate(unit_kinds):
+        if kind not in _ATTN_KINDS:
+            blocks.append(None)
+            continue
+        per_rep = [fit(("u", ui, r)) for r in range(cfg.n_repeats)]
+        blocks.append({n: np.stack([b[n] for b in per_rep])
+                       for n in kv_cache.GLVQ_BOOK_LEAVES})
+    tail: list = []
+    for ti, kind in enumerate(tail_kinds):
+        tail.append(fit(("t", ti, 0)) if kind in _ATTN_KINDS else None)
+    return KVCodebook(bits=spec.bits, d=spec.d, hd=spec.hd,
+                      blocks=tuple(blocks), tail=tuple(tail))
+
+
+def save_kv_codebook(path: str, book: KVCodebook) -> None:
+    """Serialize a KVCodebook to one ``.npz`` (flattened leaf keys)."""
+    arrs: Dict[str, np.ndarray] = {
+        "meta": np.asarray([book.bits, book.d, book.hd,
+                            len(book.blocks), len(book.tail)], np.int64)}
+    for where, entries in (("b", book.blocks), ("t", book.tail)):
+        for i, bk in enumerate(entries):
+            if bk is None:
+                continue
+            for n, a in bk.items():
+                arrs[f"{where}{i}/{n}"] = np.asarray(a, np.float32)
+    np.savez(path, **arrs)
+
+
+def load_kv_codebook(path: str) -> KVCodebook:
+    with np.load(path) as z:
+        bits, d, hd, nb, nt = (int(x) for x in z["meta"])
+
+        def entry(where, i):
+            keys = {n: z[f"{where}{i}/{n}"]
+                    for n in kv_cache.GLVQ_BOOK_LEAVES
+                    if f"{where}{i}/{n}" in z}
+            return keys or None
+
+        blocks = tuple(entry("b", i) for i in range(nb))
+        tail = tuple(entry("t", i) for i in range(nt))
+    return KVCodebook(bits=bits, d=d, hd=hd, blocks=blocks, tail=tail)
 
 
 def _quantize_one(w, h, method: str, qcfg: GLVQConfig, bits: float):

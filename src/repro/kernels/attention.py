@@ -24,7 +24,11 @@ One kernel family covers both program widths of the unified serving step:
   * all paged cache kinds: ``paged`` (cast only), ``paged_q8`` (int8 +
     per-token-per-head scale), ``paged_q8c`` (mu-law companded int8) — the
     dequant math is ``kv_cache.kv_dequantize``, shared with the unfused
-    path.
+    path — and ``paged_glvq`` (word-packed lattice codes): the per-head
+    generation matrices ride into the kernel as per-grid-step codebook
+    blocks and each pool block decodes in VMEM via
+    ``kv_cache.glvq_decode_head`` (unpack -> [n_vec, d] @ G^T -> mu-law
+    expand -> amax rescale), so HBM only ever moves ~4-bit codes.
 
 Backends mirror the ``kernels.kv_cache`` registry: ``pallas`` (the fused
 kernel; interpret mode off-TPU) and ``xla`` (gather-then-SDPA, today's
@@ -144,14 +148,14 @@ def masked_sdpa(q, ck, cv, valid, *, n_rep: int, scale: float):
 class _XlaAttn:
     @staticmethod
     def paged_attention(q, cache, table, pos, lens, *, mode, window,
-                        k_chunk, v_chunk, kv_backend, out_dtype):
+                        k_chunk, v_chunk, kv_backend, out_dtype, glvq=None):
         b, t, h, hd = q.shape
         kv = cache["kp"].shape[2]
         bs = cache["kp"].shape[1]
         nb = table.shape[1]
         n_rep = h // kv
         ck, cv = kv_cache.gather(cache, table, mode=mode, backend=kv_backend,
-                                 out_dtype=out_dtype)
+                                 out_dtype=out_dtype, glvq=glvq)
         apos = pos[:, None] + jnp.arange(t)[None]             # [B, T]
         if window:
             hist, intra = window_chunk_masks(pos, apos, t, nb * bs, window)
@@ -172,7 +176,8 @@ class _XlaAttn:
 
 def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
                        t: int, bs: int, nb: int, scale: float,
-                       has_chunk: bool):
+                       has_chunk: bool,
+                       glvq: Optional[kv_cache.GLVQSpec] = None):
     """Grid (B, KV, nb [+1]): one program per (slot, kv head, table block).
 
     The query block holds all ``n_rep * T`` rows of one (slot, kv head) —
@@ -180,9 +185,13 @@ def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
     Online softmax state (running max / denominator / accumulator) lives in
     VMEM scratch across the sequential block walk; with ``has_chunk`` the
     final grid step attends the in-flight chunk keys (sliding-window layers
-    read the pre-append ring, so the chunk's own keys arrive separately)."""
+    read the pre-append ring, so the chunk's own keys arrive separately).
+    ``paged_glvq`` adds this head's codebook (G / mu per K and V) as four
+    extra refs and decodes packed words in VMEM."""
     quant = mode != "paged"
-    n_in = (4 if quant else 2) + (2 if has_chunk else 0)
+    is_glvq = mode == "paged_glvq"
+    n_in = (4 if quant else 2) + (4 if is_glvq else 0) \
+        + (2 if has_chunk else 0)
     q_ref = refs[0]
     ins = refs[1:1 + n_in]
     o_ref, m_ref, l_ref, acc_ref = refs[1 + n_in:]
@@ -192,6 +201,9 @@ def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
     else:
         kp_ref, vp_ref = ins[:2]
         rest = ins[2:]
+    if is_glvq:
+        kg_ref, kmu_ref, vg_ref, vmu_ref = rest[:4]
+        rest = rest[4:]
 
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -229,7 +241,18 @@ def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
     def _history_block():
         ck = kp_ref[0, :, 0, :]
         cv = vp_ref[0, :, 0, :]
-        if quant:
+        if is_glvq:
+            # decode packed words with this head's [d, d] codebook; output
+            # columns pad to the (tile-aligned) accumulator width with
+            # zeros, matching the zero-padded query columns
+            hd_out = acc_ref.shape[-1]
+            k = kv_cache.glvq_decode_head(ck, ksc_ref[0, :, 0], kg_ref[0],
+                                          kmu_ref[0], glvq, jnp.float32,
+                                          hd_out)
+            v = kv_cache.glvq_decode_head(cv, vsc_ref[0, :, 0], vg_ref[0],
+                                          vmu_ref[0], glvq, jnp.float32,
+                                          hd_out)
+        elif quant:
             k = kv_cache.kv_dequantize(ck, ksc_ref[0, :, 0], mode,
                                        jnp.float32)
             v = kv_cache.kv_dequantize(cv, vsc_ref[0, :, 0], mode,
@@ -274,7 +297,7 @@ def _fused_attn_kernel(tbl_ref, pos_ref, *refs, mode: str, window: int,
 class _PallasAttn:
     @staticmethod
     def paged_attention(q, cache, table, pos, lens, *, mode, window,
-                        k_chunk, v_chunk, kv_backend, out_dtype):
+                        k_chunk, v_chunk, kv_backend, out_dtype, glvq=None):
         # lens is part of the uniform backend signature: pad-query outputs
         # are garbage the caller masks (same contract as the chunk step),
         # so the kernel never needs it.  kv_backend routes the unfused
@@ -285,6 +308,9 @@ class _PallasAttn:
         nb = table.shape[1]
         n_rep = h // kv
         quant = mode != "paged"
+        is_glvq = mode == "paged_glvq"
+        if is_glvq and glvq is None:
+            glvq = kv_cache.glvq_spec_from_pool(cache)
         has_chunk = k_chunk is not None
         r = n_rep * t
 
@@ -317,6 +343,7 @@ class _PallasAttn:
                 kc = kv_cache.pad_to(kv_cache.pad_to(kc, 2, 8), 3, 128)
                 vc = kv_cache.pad_to(kv_cache.pad_to(vc, 2, 8), 3, 128)
         bs_p = kp.shape[1]
+        pd_p = kp.shape[3]        # pool last dim: hd_p, or padded words
 
         # index maps see (grid..., *scalar_prefetch_refs); the table walk is
         # the scalar-prefetch trick: block j of slot i streams pool block
@@ -329,13 +356,20 @@ class _PallasAttn:
         def pool_spec(nd4: bool):
             if nd4:
                 return pl.BlockSpec(
-                    (1, bs_p, 1, hd_p),
+                    (1, bs_p, 1, pd_p),
                     lambda i, g, j, tbl, ps:
                     (tbl[i * nb + jnp.minimum(j, nb - 1)], 0, g, 0))
             return pl.BlockSpec(
                 (1, bs_p, 1),
                 lambda i, g, j, tbl, ps:
                 (tbl[i * nb + jnp.minimum(j, nb - 1)], 0, g))
+
+        def book_spec(arr):
+            # per-head codebook: grid step (i, g, j) reads head g's slice
+            if arr.ndim == 3:
+                return pl.BlockSpec((1,) + arr.shape[1:],
+                                    lambda i, g, j, tbl, ps: (g, 0, 0))
+            return pl.BlockSpec((1,), lambda i, g, j, tbl, ps: (g,))
 
         def chunk_spec():
             return pl.BlockSpec((1, 1, t_p, hd_p),
@@ -346,6 +380,10 @@ class _PallasAttn:
         if quant:
             ins += [ksc, vsc]
             in_specs += [pool_spec(False), pool_spec(False)]
+        if is_glvq:
+            books = [cache["kg"], cache["kmu"], cache["vg"], cache["vmu"]]
+            ins += books
+            in_specs += [book_spec(a) for a in books]
         if has_chunk:
             ins += [kc, vc]
             in_specs += [chunk_spec(), chunk_spec()]
@@ -363,7 +401,7 @@ class _PallasAttn:
         out = pl.pallas_call(
             functools.partial(_fused_attn_kernel, mode=mode, window=window,
                               t=t, bs=bs, nb=nb, scale=hd ** -0.5,
-                              has_chunk=has_chunk),
+                              has_chunk=has_chunk, glvq=glvq),
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((b, kv, r_p, hd_p), out_dtype),
             interpret=not _on_tpu(),
@@ -379,18 +417,20 @@ class _PallasAttn:
 # ---------------------------------------------------------------------------
 
 def _dispatch(impl, has_chunk, q, pools, table, pos, lens, *chunk, mode,
-              window, kv_backend, out_dtype):
+              window, kv_backend, out_dtype, glvq):
     kc, vc = chunk if has_chunk else (None, None)
     return impl.paged_attention(q, pools, table, pos, lens, mode=mode,
                                 window=window, k_chunk=kc, v_chunk=vc,
-                                kv_backend=kv_backend, out_dtype=out_dtype)
+                                kv_backend=kv_backend, out_dtype=out_dtype,
+                                glvq=glvq)
 
 
 def paged_attention(q, cache, table, pos, lens, *, mode: str,
                     window: int = 0, k_chunk=None, v_chunk=None,
                     kv_backend: Optional[str] = None,
                     backend: Optional[str] = None, mesh=None,
-                    out_dtype=None):
+                    out_dtype=None,
+                    glvq: Optional[kv_cache.GLVQSpec] = None):
     """Attention over a slot's paged KV history -> out [B, T, H*hd].
 
     q [B, T, H, hd] post-RoPE queries; ``cache`` this layer's pools
@@ -412,11 +452,17 @@ def paged_attention(q, cache, table, pos, lens, *, mode: str,
     """
     out_dtype = q.dtype if out_dtype is None else out_dtype
     impl = _ATTN_BACKENDS[resolve_attn_backend(backend)]
-    pools = {n: cache[n] for n in ("kp", "vp", "ksc", "vsc") if n in cache}
+    names = ("kp", "vp", "ksc", "vsc")
+    if mode == "paged_glvq":
+        # decode needs G / mu per head (G^-1 is encode-only, stays behind)
+        names += ("kg", "vg", "kmu", "vmu")
+        if glvq is None:
+            glvq = kv_cache.glvq_spec_from_pool(cache)
+    pools = {n: cache[n] for n in names if n in cache}
     has_chunk = k_chunk is not None
     call = functools.partial(_dispatch, impl, has_chunk, mode=mode,
                              window=window, kv_backend=kv_backend,
-                             out_dtype=out_dtype)
+                             out_dtype=out_dtype, glvq=glvq)
     args = (q, pools, table, pos, lens)
     if has_chunk:
         args += (k_chunk, v_chunk)

@@ -14,12 +14,21 @@ This module owns the two device operations on that layout:
     dequantize them into dense [B, S, KV, hd] history for attention.
 
 Cache modes (``MODES``):
-  * ``paged``     — blocks store the raw compute dtype (paging only).
-  * ``paged_q8``  — int8 codes + per-token-per-head f16 max-abs scale.
-  * ``paged_q8c`` — int8 after mu-law companding (``core.companding`` with a
+  * ``paged``      — blocks store the raw compute dtype (paging only).
+  * ``paged_q8``   — int8 codes + per-token-per-head f16 max-abs scale.
+  * ``paged_q8c``  — int8 after mu-law companding (``core.companding`` with a
     fixed mu, ``KV_MU``): the code grid concentrates near zero where K/V mass
     lives, trading headroom at the tails — the paper's GLVQ companding applied
     to the serving cache.
+  * ``paged_glvq`` — the paper's grouped lattice vector quantizer applied to
+    K/V activations: each head-dim vector splits into d-dim sub-vectors,
+    Babai-rounded against a per-head learned generation matrix
+    (``core.lattice``), the b-bit integer coordinates word-packed
+    (``core.packing``) into uint32 pool blocks.  Per-head codebooks
+    (G / G^-1 / mu) live as extra pool leaves; the default (uncalibrated)
+    codebook is the identity lattice, which makes ``paged_glvq`` exactly
+    uniform signed-b-bit quantization — the baseline the calibrated
+    codebooks (``data.calibration.calibrate_kv``) must beat.
 
 Backends mirror the ``kernels.ops`` matmul registry: ``pallas`` (scalar-
 prefetch block scatter/gather, fused dequant in VMEM; interpret-mode off-TPU)
@@ -38,15 +47,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import companding
+from repro.core import companding, lattice, packing
 
-__all__ = ["MODES", "KV_MU", "PageLayout", "kv_quantize", "kv_dequantize",
+__all__ = ["MODES", "INT8_MODES", "KV_MU", "PageLayout", "GLVQSpec",
+           "default_glvq_spec", "glvq_default_book", "glvq_spec_from_pool",
+           "glvq_quantize", "glvq_dequantize", "glvq_decode_head",
+           "GLVQ_BOOK_LEAVES",
+           "kv_quantize", "kv_dequantize",
            "chunk_roundtrip", "tile_pad_enabled", "padded_block_geom",
            "pad_to", "register_kv_backend", "kv_backends",
            "resolve_kv_backend", "pool_init", "copy_pool_block", "append",
            "append_chunk", "gather"]
 
-MODES = ("paged", "paged_q8", "paged_q8c")
+MODES = ("paged", "paged_q8", "paged_q8c", "paged_glvq")
+INT8_MODES = ("paged_q8", "paged_q8c")
 
 # Fixed companding strength for the paged_q8c mode. K/V activations are far
 # less heavy-tailed than weights, so a mild mu suffices; per-block learned mu
@@ -113,11 +127,149 @@ class PageLayout:
 
 
 # ---------------------------------------------------------------------------
+# GLVQ codec spec + codebooks (paged_glvq)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GLVQSpec:
+    """Static geometry of the ``paged_glvq`` codec.
+
+    ``bits`` / ``d`` / ``hd`` are NOT derivable from pool shapes (hd = 16
+    packs to 2 words at bits = 3 AND bits = 4), so the spec threads
+    statically from the ``EngineConfig`` down to the kernels.  Hashable, so
+    it rides through ``functools.partial`` into Pallas kernels."""
+    bits: int = 4                 # coordinate bit-width (word-packed)
+    d: int = 4                    # lattice sub-vector length along hd
+    hd: int = 128                 # head dim (d must divide it)
+
+    def __post_init__(self):
+        if not 2 <= self.bits <= 8:
+            raise ValueError(f"GLVQSpec.bits must be in [2, 8], "
+                             f"got {self.bits}")
+        if self.d < 1 or self.hd % self.d:
+            raise ValueError(f"lattice dim d={self.d} must divide head dim "
+                             f"hd={self.hd}")
+
+    @property
+    def n_words(self) -> int:
+        """uint32 words per head-dim vector (word padding included)."""
+        return packing.packed_len(self.hd, self.bits)
+
+    @property
+    def n_vec(self) -> int:
+        return self.hd // self.d
+
+    @property
+    def hi(self) -> int:
+        return lattice.int_range(self.bits)[1]
+
+
+def default_glvq_spec(hd: int, bits: int = 4,
+                      d: Optional[int] = None) -> GLVQSpec:
+    """Spec with the largest supported lattice dim dividing ``hd``."""
+    if d is None:
+        d = next((c for c in (4, 2) if hd % c == 0), 1)
+    return GLVQSpec(bits=bits, d=d, hd=hd)
+
+
+# codebook pool leaves: per-KV-head generation matrices + companding mu.
+# kgi/vgi cache G^-1 so the encode path never inverts inside the step.
+GLVQ_BOOK_LEAVES = ("kg", "kgi", "vg", "vgi", "kmu", "vmu")
+
+
+def glvq_default_book(n_kv: int, spec: GLVQSpec) -> Dict[str, jax.Array]:
+    """Identity-lattice codebook: G = I / hi, so Babai rounding degenerates
+    to uniform signed-``bits``-bit quantization (mu <= 0 disables the
+    companding).  This is both the uncalibrated fallback AND the uniform-int
+    baseline calibrated codebooks are benchmarked against."""
+    eye = jnp.broadcast_to(jnp.eye(spec.d, dtype=jnp.float32),
+                           (n_kv, spec.d, spec.d))
+    return dict(kg=eye / spec.hi, kgi=eye * spec.hi,
+                vg=eye / spec.hi, vgi=eye * spec.hi,
+                kmu=jnp.zeros((n_kv,), jnp.float32),
+                vmu=jnp.zeros((n_kv,), jnp.float32))
+
+
+def glvq_spec_from_pool(cache: Dict[str, jax.Array]) -> GLVQSpec:
+    """Best-effort spec recovery for callers that did not thread one:
+    assumes the default ``bits=4`` (whose 8-codes-per-word packing makes
+    hd recoverable whenever ``hd % 8 == 0``).  Callers running bits != 4
+    must pass their ``GLVQSpec`` explicitly."""
+    d = cache["kg"].shape[-1]
+    hd = cache["kp"].shape[-1] * packing.per_word(4)
+    return GLVQSpec(bits=4, d=d, hd=hd)
+
+
+def glvq_quantize(x, g_inv, mu, spec: GLVQSpec) -> Tuple[jax.Array, jax.Array]:
+    """GLVQ encode: x [..., KV, hd] -> (uint32 words [..., KV, n_words],
+    f16 amax [..., KV]).
+
+    Per token-head: normalize by max-abs, mu-law compand (skipped while the
+    head's mu <= 0 — the uncalibrated identity book), split hd into d-dim
+    sub-vectors, Babai-round each against G^-1 (``lattice.babai_round``
+    semantics: clip(round(G^-1 y))), word-pack the signed codes."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-6)
+    u = (x / amax[..., None]).astype(jnp.float32)
+    mu = mu.astype(jnp.float32)[..., None]                     # [KV, 1]
+    y = jnp.where(mu > 0, companding.compand(u, jnp.maximum(mu, 1.0)), u)
+    yv = y.reshape(y.shape[:-1] + (spec.n_vec, spec.d))
+    z = jnp.einsum("kij,...kvj->...kvi", g_inv.astype(jnp.float32), yv)
+    lo, hi = lattice.int_range(spec.bits)
+    z = jnp.clip(jnp.round(z), lo, hi).astype(jnp.int32)
+    codes = z.reshape(y.shape)                                 # [..., KV, hd]
+    return packing.pack_codes(codes, spec.bits), amax.astype(jnp.float16)
+
+
+def glvq_dequantize(words, amax, g, mu, spec: GLVQSpec, dtype) -> jax.Array:
+    """GLVQ decode: (uint32 words [..., KV, n_words], f16 amax [..., KV])
+    -> values [..., KV, hd].  Exact mat-vec ``G z`` per sub-vector
+    (``lattice.babai_decode``), mu-law expand, rescale by amax."""
+    codes = packing.unpack_codes(words, spec.bits, spec.hd)    # [..., KV, hd]
+    zv = codes.astype(jnp.float32).reshape(
+        codes.shape[:-1] + (spec.n_vec, spec.d))
+    y = jnp.einsum("kij,...kvj->...kvi", g.astype(jnp.float32), zv)
+    y = y.reshape(codes.shape)
+    mu = mu.astype(jnp.float32)[..., None]                     # [KV, 1]
+    u = jnp.where(mu > 0, companding.expand(y, jnp.maximum(mu, 1.0)), y)
+    return (u * amax.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def glvq_decode_head(words, amax, g, mu, spec: GLVQSpec, dtype,
+                     hd_out: Optional[int] = None) -> jax.Array:
+    """Single-head GLVQ decode, Pallas-friendly: one 2-D dot per call
+    (no batched einsum, which Mosaic rejects).  words [n, >= n_words]
+    uint32 (trailing pad words ignored), amax [n], g [d, d], mu scalar ->
+    values [n, hd_out or hd] (extra columns zero-padded for tile-aligned
+    out blocks)."""
+    codes = packing.unpack_codes(words[:, :spec.n_words], spec.bits, spec.hd)
+    z = codes.astype(jnp.float32).reshape(-1, spec.d)
+    # rows of z @ G^T are G z — the exact lattice.babai_decode mat-vec
+    y = jax.lax.dot_general(z, g.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())))
+    y = y.reshape(-1, spec.hd)
+    mu = mu.astype(jnp.float32)
+    u = jnp.where(mu > 0, companding.expand(y, jnp.maximum(mu, 1.0)), y)
+    u = u * amax.astype(jnp.float32)[:, None]
+    if hd_out is not None and hd_out != spec.hd:
+        u = jnp.pad(u, ((0, 0), (0, hd_out - spec.hd)))
+    return u.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # quantize / dequantize (shared by both backends)
 # ---------------------------------------------------------------------------
 
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown cache mode {mode!r}; available: {MODES}")
+
+
 def kv_quantize(x, mode: str) -> Tuple[jax.Array, jax.Array]:
     """x [..., KV, hd] -> (int8 codes [..., KV, hd], f16 amax [..., KV])."""
+    if mode not in INT8_MODES:
+        raise ValueError(f"kv_quantize handles the int8 modes {INT8_MODES}, "
+                         f"got {mode!r} (paged_glvq uses glvq_quantize; "
+                         f"paged stores the raw dtype)")
     amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-6)
     u = x / amax[..., None]
     if mode == "paged_q8c":
@@ -128,14 +280,20 @@ def kv_quantize(x, mode: str) -> Tuple[jax.Array, jax.Array]:
 
 def kv_dequantize(codes, amax, mode: str, dtype) -> jax.Array:
     """(int8 codes [..., KV, hd], f16 amax [..., KV]) -> values [..., KV, hd]."""
+    if mode not in INT8_MODES:
+        raise ValueError(f"kv_dequantize handles the int8 modes "
+                         f"{INT8_MODES}, got {mode!r} (paged_glvq uses "
+                         f"glvq_dequantize; paged stores the raw dtype)")
     u = codes.astype(jnp.float32) / 127.0
     if mode == "paged_q8c":
         u = companding.expand(u, KV_MU)
     return (u * amax.astype(jnp.float32)[..., None]).astype(dtype)
 
 
-def chunk_roundtrip(k, v, *, mode: str, store_dtype,
-                    out_dtype) -> Tuple[jax.Array, jax.Array]:
+def chunk_roundtrip(k, v, *, mode: str, store_dtype, out_dtype,
+                    glvq: Optional[GLVQSpec] = None,
+                    book: Optional[Dict[str, jax.Array]] = None,
+                    ) -> Tuple[jax.Array, jax.Array]:
     """Roundtrip a chunk's in-flight K/V through the cache codec.
 
     Sliding-window chunk attention reads the chunk's own keys before they
@@ -143,22 +301,54 @@ def chunk_roundtrip(k, v, *, mode: str, store_dtype,
     would return.  For the quantized kinds that is quantize -> dequantize;
     for ``paged`` the codec is a dtype cast — and when the pool stores the
     compute dtype already, an identity (the arrays are returned untouched,
-    no casts)."""
+    no casts).  ``paged_glvq`` additionally needs the layer's codebook
+    (``book``: any mapping with the ``GLVQ_BOOK_LEAVES`` — the pool dict
+    itself works; default: the identity book)."""
+    _check_mode(mode)
     if mode == "paged":
         if jnp.dtype(store_dtype) == jnp.dtype(out_dtype):
             return k, v
         return (k.astype(store_dtype).astype(out_dtype),
                 v.astype(store_dtype).astype(out_dtype))
+    if mode == "paged_glvq":
+        spec = glvq if glvq is not None else default_glvq_spec(k.shape[-1])
+        bk = book if book is not None else glvq_default_book(k.shape[-2],
+                                                             spec)
+        return (glvq_dequantize(*glvq_quantize(k, bk["kgi"], bk["kmu"], spec),
+                                bk["kg"], bk["kmu"], spec, out_dtype),
+                glvq_dequantize(*glvq_quantize(v, bk["vgi"], bk["vmu"], spec),
+                                bk["vg"], bk["vmu"], spec, out_dtype))
     return (kv_dequantize(*kv_quantize(k, mode), mode, out_dtype),
             kv_dequantize(*kv_quantize(v, mode), mode, out_dtype))
 
 
 def pool_init(num_blocks: int, block_size: int, n_kv: int, hd: int, dtype,
-              mode: str) -> Dict[str, jax.Array]:
+              mode: str, *, glvq: Optional[GLVQSpec] = None,
+              book: Optional[Dict[str, jax.Array]] = None,
+              ) -> Dict[str, jax.Array]:
     """Per-layer pool leaves.  ``kp``/``vp`` are the K/V blocks; quantized
-    modes add per-token-per-head scales ``ksc``/``vsc``."""
-    if mode not in MODES:
-        raise ValueError(f"unknown cache mode {mode!r}; available: {MODES}")
+    modes add per-token-per-head scales ``ksc``/``vsc``; ``paged_glvq``
+    stores word-packed lattice codes in ``kp``/``vp`` (uint32
+    [nb, bs, KV, n_words]) plus the per-head codebook leaves
+    (``GLVQ_BOOK_LEAVES``; ``book`` overrides the identity default with
+    calibrated matrices)."""
+    _check_mode(mode)
+    if mode == "paged_glvq":
+        spec = glvq if glvq is not None else default_glvq_spec(hd)
+        if spec.hd != hd:
+            raise ValueError(f"GLVQSpec.hd={spec.hd} != pool head dim {hd}")
+        pools = dict(
+            kp=jnp.zeros((num_blocks, block_size, n_kv, spec.n_words),
+                         jnp.uint32),
+            vp=jnp.zeros((num_blocks, block_size, n_kv, spec.n_words),
+                         jnp.uint32),
+            ksc=jnp.zeros((num_blocks, block_size, n_kv), jnp.float16),
+            vsc=jnp.zeros((num_blocks, block_size, n_kv), jnp.float16),
+        )
+        bk = book if book is not None else glvq_default_book(n_kv, spec)
+        pools.update({n: jnp.asarray(bk[n], jnp.float32)
+                      for n in GLVQ_BOOK_LEAVES})
+        return pools
     store = dtype if mode == "paged" else jnp.int8
     pools = dict(
         kp=jnp.zeros((num_blocks, block_size, n_kv, hd), store),
@@ -243,7 +433,7 @@ class _XlaKV:
         return new
 
     @staticmethod
-    def gather(cache, table, mode, out_dtype):
+    def gather(cache, table, mode, out_dtype, glvq=None):
         b, nb = table.shape
         bs = cache["kp"].shape[1]
         flat = table.reshape(-1)
@@ -252,12 +442,18 @@ class _XlaKV:
             g = jnp.take(pool, flat, axis=0)          # [B*nb, bs, KV, hd]
             return g.reshape((b, nb * bs) + pool.shape[2:])
 
-        kg, vg = pull(cache["kp"]), pull(cache["vp"])
+        kw, vw = pull(cache["kp"]), pull(cache["vp"])
         if mode == "paged":
-            return kg.astype(out_dtype), vg.astype(out_dtype)
+            return kw.astype(out_dtype), vw.astype(out_dtype)
         ksc, vsc = pull(cache["ksc"]), pull(cache["vsc"])
-        return (kv_dequantize(kg, ksc, mode, out_dtype),
-                kv_dequantize(vg, vsc, mode, out_dtype))
+        if mode == "paged_glvq":
+            spec = glvq if glvq is not None else glvq_spec_from_pool(cache)
+            return (glvq_dequantize(kw, ksc, cache["kg"], cache["kmu"],
+                                    spec, out_dtype),
+                    glvq_dequantize(vw, vsc, cache["vg"], cache["vmu"],
+                                    spec, out_dtype))
+        return (kv_dequantize(kw, ksc, mode, out_dtype),
+                kv_dequantize(vw, vsc, mode, out_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -310,12 +506,26 @@ def _append_chunk_kernel(pbids_ref, bids_ref, offs_ref, *refs, quant: bool,
                 out_ref[0, o] = new_ref[0, _tok]
 
 
-def _gather_kernel(tbl_ref, *refs, mode: str, out_dtype):
+def _gather_kernel(tbl_ref, *refs, mode: str, out_dtype,
+                   glvq: Optional[GLVQSpec] = None):
     """Grid (B, nb): dequantize pool block table[b, j] into out[b, j]."""
     if mode == "paged":
         kp, vp, gk, gv = refs
         gk[0, 0] = kp[0].astype(out_dtype)
         gv[0, 0] = vp[0].astype(out_dtype)
+        return
+    if mode == "paged_glvq":
+        # pool blocks carry packed words; codebooks ride as const refs and
+        # each KV head decodes with its own [d, d] generation matrix.
+        kp, ksc, vp, vsc, kg, kmu, vg, vmu, gk, gv = refs
+        hd_p = gk.shape[-1]
+        for h in range(kg.shape[0]):
+            gk[0, 0, :, h] = glvq_decode_head(kp[0][:, h], ksc[0][:, h],
+                                              kg[h], kmu[h], glvq,
+                                              out_dtype, hd_p)
+            gv[0, 0, :, h] = glvq_decode_head(vp[0][:, h], vsc[0][:, h],
+                                              vg[h], vmu[h], glvq,
+                                              out_dtype, hd_p)
         return
     kp, ksc, vp, vsc, gk, gv = refs
     gk[0, 0] = kv_dequantize(kp[0], ksc[0], mode, out_dtype)
@@ -421,16 +631,26 @@ class _PallasKV:
         return new
 
     @staticmethod
-    def gather(cache, table, mode, out_dtype):
+    def gather(cache, table, mode, out_dtype, glvq=None):
         b, nb = table.shape
-        bs, kv, hd = cache["kp"].shape[1:]
+        bs, kv, pd = cache["kp"].shape[1:]       # pd: stored last dim
+        is_glvq = mode == "paged_glvq"
+        spec = None
+        if is_glvq:
+            spec = glvq if glvq is not None else glvq_spec_from_pool(cache)
+            hd = spec.hd                          # decoded head dim != pd
+        else:
+            hd = pd
         quant = mode != "paged"
         pools = (("kp", "ksc", "vp", "vsc") if quant else ("kp", "vp"))
         ins = tuple(cache[p] for p in pools)
-        padded = tile_pad_enabled() and padded_block_geom(bs, hd) != (bs, hd)
+        padded = tile_pad_enabled() and padded_block_geom(bs, pd) != (bs, pd)
         if padded:
             ins = tuple(_pad_pool_leaf(n, a) for n, a in zip(pools, ins))
-        bs_p, _, hd_p = ins[0].shape[1:]
+        bs_p = ins[0].shape[1]
+        hd_p = (padded_block_geom(bs, hd)[1] if tile_pad_enabled() else hd)
+        consts = ((cache["kg"], cache["kmu"], cache["vg"], cache["vmu"])
+                  if is_glvq else ())
 
         def pool_spec(arr):
             nd = arr.ndim - 1
@@ -439,22 +659,29 @@ class _PallasKV:
                 lambda i, j, tbl, _nd=nd:
                 (tbl[i * nb + j],) + (0,) * _nd)
 
+        def const_spec(arr):
+            nd = arr.ndim
+            return pl.BlockSpec(arr.shape,
+                                lambda i, j, tbl, _nd=nd: (0,) * _nd)
+
         out_spec = pl.BlockSpec((1, 1, bs_p, kv, hd_p),
                                 lambda i, j, tbl: (i, j, 0, 0, 0))
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b, nb),
-            in_specs=[pool_spec(a) for a in ins],
+            in_specs=([pool_spec(a) for a in ins]
+                      + [const_spec(a) for a in consts]),
             out_specs=(out_spec, out_spec),
         )
         out_sds = jax.ShapeDtypeStruct((b, nb, bs_p, kv, hd_p), out_dtype)
         gk, gv = pl.pallas_call(
-            functools.partial(_gather_kernel, mode=mode, out_dtype=out_dtype),
+            functools.partial(_gather_kernel, mode=mode, out_dtype=out_dtype,
+                              glvq=spec),
             grid_spec=grid_spec,
             out_shape=(out_sds, out_sds),
             interpret=not _on_tpu(),
-        )(table.reshape(-1), *ins)
-        if padded:
+        )(table.reshape(-1), *ins, *consts)
+        if bs_p != bs or hd_p != hd:
             gk, gv = gk[:, :, :bs, :, :hd], gv[:, :, :bs, :, :hd]
         return gk.reshape(b, nb * bs, kv, hd), gv.reshape(b, nb * bs, kv, hd)
 
@@ -464,9 +691,11 @@ class _PallasKV:
 # ---------------------------------------------------------------------------
 
 def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
-           mode: str, backend: Optional[str] = None) -> Dict[str, jax.Array]:
+           mode: str, backend: Optional[str] = None,
+           glvq: Optional[GLVQSpec] = None) -> Dict[str, jax.Array]:
     """Write one token per slot.  k_new/v_new [B, KV, hd]; bids/offs [B] int32
     (the slot's current block id / in-block offset).  Returns the new cache."""
+    _check_mode(mode)
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
     from repro.serving import trace      # lazy: tracing-time only, no cycle
     with trace.annotate(f"kv_append[{mode}]"):
@@ -474,6 +703,11 @@ def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
             store = cache["kp"].dtype
             return be.append(cache, k_new.astype(store), v_new.astype(store),
                              None, None, bids, offs)
+        if mode == "paged_glvq":
+            spec = glvq if glvq is not None else glvq_spec_from_pool(cache)
+            kq, ks = glvq_quantize(k_new, cache["kgi"], cache["kmu"], spec)
+            vq, vs = glvq_quantize(v_new, cache["vgi"], cache["vmu"], spec)
+            return be.append(cache, kq, vq, ks, vs, bids, offs)
         kq, ks = kv_quantize(k_new, mode)
         vq, vs = kv_quantize(v_new, mode)
         return be.append(cache, kq, vq, ks, vs, bids, offs)
@@ -481,7 +715,8 @@ def append(cache: Dict[str, jax.Array], k_new, v_new, bids, offs, *,
 
 def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
                  valid, prog_bids, *, mode: str,
-                 backend: Optional[str] = None) -> Dict[str, jax.Array]:
+                 backend: Optional[str] = None,
+                 glvq: Optional[GLVQSpec] = None) -> Dict[str, jax.Array]:
     """Write up to T tokens per slot in one call (chunked prefill).
 
     k_new/v_new [B, T, KV, hd]; bids/offs [B, T] int32 target block id /
@@ -491,6 +726,7 @@ def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
     the scratch block 0) — the Pallas backend runs one grid program per
     (slot, touched block); the XLA backend scatters directly and ignores it.
     Returns the new cache."""
+    _check_mode(mode)
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
     num_blocks = cache["kp"].shape[0]
     from repro.serving import trace      # lazy: tracing-time only, no cycle
@@ -502,17 +738,24 @@ def append_chunk(cache: Dict[str, jax.Array], k_new, v_new, bids, offs,
             return be.append_chunk(cache, k_new.astype(store),
                                    v_new.astype(store), None, None, bids,
                                    offs, prog_bids)
+        if mode == "paged_glvq":
+            spec = glvq if glvq is not None else glvq_spec_from_pool(cache)
+            kq, ks = glvq_quantize(k_new, cache["kgi"], cache["kmu"], spec)
+            vq, vs = glvq_quantize(v_new, cache["vgi"], cache["vmu"], spec)
+            return be.append_chunk(cache, kq, vq, ks, vs, bids, offs,
+                                   prog_bids)
         kq, ks = kv_quantize(k_new, mode)
         vq, vs = kv_quantize(v_new, mode)
         return be.append_chunk(cache, kq, vq, ks, vs, bids, offs, prog_bids)
 
 
 def gather(cache: Dict[str, jax.Array], table, *, mode: str,
-           backend: Optional[str] = None,
-           out_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+           backend: Optional[str] = None, out_dtype=jnp.float32,
+           glvq: Optional[GLVQSpec] = None) -> Tuple[jax.Array, jax.Array]:
     """Read blocks ``table`` [B, nb] back as dense dequantized history:
     (k, v) each [B, nb * block_size, KV, hd] in logical token order."""
+    _check_mode(mode)
     be = _KV_BACKENDS[resolve_kv_backend(backend)]
     from repro.serving import trace      # lazy: tracing-time only, no cycle
     with trace.annotate(f"kv_gather[{mode}]"):
-        return be.gather(cache, table, mode, out_dtype)
+        return be.gather(cache, table, mode, out_dtype, glvq=glvq)

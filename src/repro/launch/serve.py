@@ -153,8 +153,22 @@ def main(argv=None):
     ap.add_argument("--cache", default="dense", choices=kvcache.CACHE_KINDS,
                     help="attention-cache mode: dense per-slot buffers, or "
                          "paged block pools (paged_q8[c] = int8-quantized "
-                         "blocks, c = mu-law companded)")
+                         "blocks, c = mu-law companded; paged_glvq = "
+                         "3-4 bit grouped lattice VQ with learned per-head "
+                         "codebooks — see --kv-codebook)")
     ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--kv-codebook", default=None, metavar="PATH",
+                    help="calibrated KV codebook .npz for --cache "
+                         "paged_glvq (data.calibration.calibrate_kv / "
+                         "save_kv_codebook); omitted = identity lattice "
+                         "(plain uniform signed kv-bits grid)")
+    ap.add_argument("--kv-bits", type=int, default=4,
+                    help="paged_glvq code bits per KV dimension (2-8; "
+                         "overridden by the codebook's bits when "
+                         "--kv-codebook is given)")
+    ap.add_argument("--kv-d", type=int, default=0,
+                    help="paged_glvq lattice sub-vector dim (0 = auto: "
+                         "largest of 4/2/1 dividing head_dim)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix cache over the paged pool: shared "
                          "prompt blocks are aliased read-only (refcounted, "
@@ -233,9 +247,17 @@ def main(argv=None):
         else:
             print(f"[serve] tp={args.tp}: note — TP only shards quantized "
                   "matmuls; pass --quant-bits to shard the weights")
+    kv_codebook = None
+    if args.kv_codebook:
+        from repro.data.calibration import load_kv_codebook
+        kv_codebook = load_kv_codebook(args.kv_codebook)
+        log_event("serve", kv_codebook=args.kv_codebook,
+                  bits=kv_codebook.bits, d=kv_codebook.d)
     s_cache = max(64, args.prompt_len + args.max_new + 8)
     ecfg = EngineConfig(dtype=jnp.float32, qmeta=qmeta, backend=args.backend,
                         cache_kind=args.cache,
+                        kv_bits=args.kv_bits, kv_d=args.kv_d,
+                        kv_codebook=kv_codebook,
                         block_size=args.kv_block_size,
                         prefix_cache=args.prefix_cache,
                         prefix_cache_min_blocks=args.prefix_cache_min_blocks,

@@ -342,7 +342,8 @@ def static_local_table(batch: int, blocks_per_slot: int) -> jnp.ndarray:
 
 def paged_attn_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
                           dtype, kind: str, *, batch: int = 0,
-                          s_cache: int = 0, local: bool = False):
+                          s_cache: int = 0, local: bool = False,
+                          glvq=None, book=None):
     """Per-layer block pools for the paged cache modes.
 
     Global attention layers share the scheduler-managed block geometry (the
@@ -356,16 +357,18 @@ def paged_attn_cache_init(cfg: ModelConfig, num_blocks: int, block_size: int,
         ring = min(cfg.window, s_cache) if s_cache else cfg.window
         nb_l = -(-ring // block_size)
         pools = kv_cache.pool_init(1 + batch * nb_l, block_size,
-                                   cfg.n_kv_heads, cfg.hd, dtype, kind)
+                                   cfg.n_kv_heads, cfg.hd, dtype, kind,
+                                   glvq=glvq, book=book)
         pools["lt"] = static_local_table(batch, nb_l)
         return pools
     return kv_cache.pool_init(num_blocks, block_size, cfg.n_kv_heads, cfg.hd,
-                              dtype, kind)
+                              dtype, kind, glvq=glvq, book=book)
 
 
 def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
                           window: int = 0, kind: str = "paged",
-                          kv_backend=None, attn_backend=None, mesh=None):
+                          kv_backend=None, attn_backend=None, mesh=None,
+                          glvq=None):
     """Variable-width serving step against the paged cache.
 
     cache holds this layer's pools (``kp``/``vp`` + scales); table [B, nb]
@@ -408,30 +411,34 @@ def paged_attention_chunk(p, x, cfg: ModelConfig, cache, table, pos, lens, *,
         # keys], the chunk keys roundtripped through the cache codec so
         # intra-chunk reads match what a later gather would return
         k_rt, v_rt = kv_cache.chunk_roundtrip(
-            k, v, mode=kind, store_dtype=cache["kp"].dtype, out_dtype=x.dtype)
+            k, v, mode=kind, store_dtype=cache["kp"].dtype, out_dtype=x.dtype,
+            glvq=glvq, book=cache if kind == "paged_glvq" else None)
         out = attn_kernels.paged_attention(
             q, cache, table[:, :nb_l], pos, lens, mode=kind, window=window,
             k_chunk=k_rt, v_chunk=v_rt, kv_backend=kv_backend,
-            backend=attn_backend, mesh=mesh, out_dtype=x.dtype)
+            backend=attn_backend, mesh=mesh, out_dtype=x.dtype, glvq=glvq)
         cache = kv_cache.append_chunk(cache, k, v, bids,
                                       (p_eff % bs).astype(jnp.int32),
                                       valid_q, prog_bids,
-                                      mode=kind, backend=kv_backend)
+                                      mode=kind, backend=kv_backend,
+                                      glvq=glvq)
     else:
         cache = kv_cache.append_chunk(cache, k, v, bids,
                                       (p_eff % bs).astype(jnp.int32),
                                       valid_q, prog_bids,
-                                      mode=kind, backend=kv_backend)
+                                      mode=kind, backend=kv_backend,
+                                      glvq=glvq)
         out = attn_kernels.paged_attention(
             q, cache, table[:, :nb_l], pos, lens, mode=kind, window=0,
             kv_backend=kv_backend, backend=attn_backend, mesh=mesh,
-            out_dtype=x.dtype)
+            out_dtype=x.dtype, glvq=glvq)
     return linear(out, p["wo"], x.dtype), cache
 
 
 def paged_attention_decode(p, x, cfg: ModelConfig, cache, table, pos, *,
                            window: int = 0, kind: str = "paged",
-                           kv_backend=None, attn_backend=None, mesh=None):
+                           kv_backend=None, attn_backend=None, mesh=None,
+                           glvq=None):
     """One-token decode — the T=1 specialization of
     ``paged_attention_chunk``."""
     b = x.shape[0]
@@ -439,7 +446,8 @@ def paged_attention_decode(p, x, cfg: ModelConfig, cache, table, pos, *,
     return paged_attention_chunk(p, x, cfg, cache, table, pos_v,
                                  jnp.ones((b,), jnp.int32), window=window,
                                  kind=kind, kv_backend=kv_backend,
-                                 attn_backend=attn_backend, mesh=mesh)
+                                 attn_backend=attn_backend, mesh=mesh,
+                                 glvq=glvq)
 
 
 # ---------------------------------------------------------------------------

@@ -65,7 +65,7 @@ def block_apply(p: Params, x, cfg: ModelConfig, kind: str, pos):
 
 def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int,
                      dtype, *, cache_kind: str = "dense", block_size: int = 16,
-                     num_blocks: int = 0):
+                     num_blocks: int = 0, glvq=None):
     if kind in ("attn", "attn_local", "attn_moe"):
         if cache_kind != "dense":
             # sliding-window layers get a layer-private ring pool sized to
@@ -73,7 +73,7 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, s_cache: int,
             # baked-in table "lt") instead of the global pool depth
             return layers.paged_attn_cache_init(
                 cfg, num_blocks, block_size, dtype, cache_kind, batch=batch,
-                s_cache=s_cache, local=(kind == "attn_local"))
+                s_cache=s_cache, local=(kind == "attn_local"), glvq=glvq)
         if kind == "attn_local":
             return layers.attn_cache_init(cfg, batch,
                                           min(cfg.window, s_cache), dtype)
@@ -109,7 +109,7 @@ def block_chunk(p: Params, x, cfg: ModelConfig, kind: str, cache, pos, lens,
                 p["attn"], h, cfg, cache, table, pos, lens, window=win,
                 kind=pages["kind"], kv_backend=pages["backend"],
                 attn_backend=pages.get("attn_backend"),
-                mesh=pages.get("mesh"))
+                mesh=pages.get("mesh"), glvq=pages.get("glvq"))
         else:
             win = min(cfg.window, cache["k"].shape[1]) \
                 if kind == "attn_local" else 0
@@ -247,22 +247,34 @@ def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype, *,
                cache_kind: str = "dense", block_size: int = 16,
-               num_blocks: Optional[int] = None) -> Params:
+               num_blocks: Optional[int] = None, kv_bits: int = 4,
+               kv_d: int = 0, kv_codebook=None) -> Params:
     """Decode cache for the whole stack.
 
     ``cache_kind="dense"`` (default): per-slot max-length K/V buffers — the
-    parity oracle.  Paged kinds (``paged`` / ``paged_q8`` / ``paged_q8c``)
-    replace every attention layer's buffers with shared block pools plus one
-    top-level block table ``cache["table"]`` [batch, ceil(s_cache/block_size)]
-    (block 0 is reserved scratch; see ``serving.kvcache``).  Recurrent layers
-    (rglru / mamba) keep per-slot state either way."""
+    parity oracle.  Paged kinds (``paged`` / ``paged_q8`` / ``paged_q8c`` /
+    ``paged_glvq``) replace every attention layer's buffers with shared
+    block pools plus one top-level block table ``cache["table"]``
+    [batch, ceil(s_cache/block_size)] (block 0 is reserved scratch; see
+    ``serving.kvcache``).  Recurrent layers (rglru / mamba) keep per-slot
+    state either way.
+
+    ``paged_glvq`` pools carry per-head codebook leaves: identity (uniform
+    ``kv_bits``-bit) by default, overridden per layer by a calibrated
+    ``kv_codebook`` (``data.calibration.KVCodebook`` — per-repeat arrays
+    grafted after the scan-stack broadcast).  ``kv_d`` = 0 picks the
+    largest supported lattice dim dividing ``cfg.hd``."""
     layout = None
     if cache_kind != "dense":
         layout = kv_cache.PageLayout.plan(s_cache, batch, block_size,
                                           num_blocks)
         num_blocks = layout.num_blocks
+    glvq = None
+    if cache_kind == "paged_glvq":
+        glvq = kv_cache.default_glvq_spec(cfg.hd, bits=kv_bits,
+                                          d=kv_d or None)
     kw = dict(cache_kind=cache_kind, block_size=block_size,
-              num_blocks=num_blocks or 0)
+              num_blocks=num_blocks or 0, glvq=glvq)
     blocks = []
     for kind in cfg.scan_unit:
         one = block_cache_init(cfg, kind, batch, s_cache, dtype, **kw)
@@ -270,6 +282,17 @@ def cache_init(cfg: ModelConfig, batch: int, s_cache: int, dtype, *,
             lambda a: jnp.broadcast_to(a[None], (cfg.n_repeats,) + a.shape), one))
     tail = [block_cache_init(cfg, kind, batch, s_cache, dtype, **kw)
             for kind in cfg.scan_tail]
+    if kv_codebook is not None and cache_kind == "paged_glvq":
+        for i, bk in enumerate(getattr(kv_codebook, "blocks", ()) or ()):
+            if bk is not None and i < len(blocks):
+                blocks[i] = dict(blocks[i], **{
+                    n: jnp.asarray(bk[n], jnp.float32)
+                    for n in kv_cache.GLVQ_BOOK_LEAVES})
+        for i, bk in enumerate(getattr(kv_codebook, "tail", ()) or ()):
+            if bk is not None and i < len(tail):
+                tail[i] = dict(tail[i], **{
+                    n: jnp.asarray(bk[n], jnp.float32)
+                    for n in kv_cache.GLVQ_BOOK_LEAVES})
     cache = dict(blocks=tuple(blocks), tail=tail)
     if layout is not None:
         cache["table"] = jnp.zeros((batch, layout.blocks_per_slot), jnp.int32)
@@ -307,7 +330,8 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
                cfg: ModelConfig, *, engine=None, dtype=jnp.bfloat16,
                qmeta=None, unroll: int = 1, backend=None,
                cache_kind: str = "dense", kv_backend=None,
-               attn_backend=None, s_cache: Optional[int] = None, mesh=None):
+               attn_backend=None, s_cache: Optional[int] = None, mesh=None,
+               kv_bits: int = 4, kv_d: int = 0):
     """One variable-width serving step: the unified prefill/decode program.
 
     ``engine`` (a ``serving.engine.EngineConfig``, duck-typed here to keep
@@ -332,6 +356,8 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
         kv_backend, s_cache, mesh = (engine.kv_backend, engine.s_cache,
                                      engine.mesh)
         attn_backend = engine.attn_backend
+        kv_bits = getattr(engine, "kv_bits", kv_bits)
+        kv_d = getattr(engine, "kv_d", kv_d)
     if qmeta:
         params = _quantized_view(params, qmeta, backend, mesh)
     pages = None
@@ -339,6 +365,9 @@ def chunk_step(params: Params, cache: Params, tokens, pos, lens,
         pages = dict(table=cache["table"], kind=cache_kind,
                      backend=kv_backend, attn_backend=attn_backend,
                      mesh=mesh, s_cache=s_cache)
+        if cache_kind == "paged_glvq":
+            pages["glvq"] = kv_cache.default_glvq_spec(cfg.hd, bits=kv_bits,
+                                                       d=kv_d or None)
     b, t = tokens.shape
     valid = jnp.arange(t)[None] < lens[:, None]
     x = params["embed"].astype(dtype)[tokens]               # [B,T,D]
@@ -374,7 +403,8 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                 *, engine=None, dtype=jnp.bfloat16, qmeta=None,
                 unroll: int = 1, backend=None, cache_kind: str = "dense",
                 kv_backend=None, attn_backend=None,
-                s_cache: Optional[int] = None, mesh=None):
+                s_cache: Optional[int] = None, mesh=None, kv_bits: int = 4,
+                kv_d: int = 0):
     """One-token decode — the T=1 specialization of ``chunk_step``.
     token [B] int32, pos [B] (or scalar) int32 -> (logits [B, V], cache).
 
@@ -394,4 +424,5 @@ def decode_step(params: Params, cache: Params, token, pos, cfg: ModelConfig,
                       jnp.ones((b,), jnp.int32), cfg, dtype=dtype,
                       qmeta=qmeta, unroll=unroll, backend=backend,
                       cache_kind=cache_kind, kv_backend=kv_backend,
-                      attn_backend=attn_backend, s_cache=s_cache, mesh=mesh)
+                      attn_backend=attn_backend, s_cache=s_cache, mesh=mesh,
+                      kv_bits=kv_bits, kv_d=kv_d)

@@ -133,7 +133,10 @@ def cache_init(cfg: ModelConfig, batch: int, s_cache: Optional[int] = None,
         return whisper.cache_init(cfg, batch, s_cache,
                                   max(s_cache // cfg.frontend_stride, 8), dtype)
     return lm.cache_init(cfg, batch, s_cache, dtype, cache_kind=cache_kind,
-                         block_size=block_size, num_blocks=num_blocks)
+                         block_size=block_size, num_blocks=num_blocks,
+                         kv_bits=getattr(engine, "kv_bits", 4),
+                         kv_d=getattr(engine, "kv_d", 0),
+                         kv_codebook=getattr(engine, "kv_codebook", None))
 
 
 def has_recurrent(cfg: ModelConfig) -> bool:

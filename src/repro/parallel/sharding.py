@@ -229,8 +229,12 @@ def batch_specs(batch, mesh: Mesh):
 # block_size, KV, hd], ksc/vsc [R?, num_blocks, block_size, KV].  These are
 # NOT dense [B, S, ...] layouts: the pool dims (num_blocks, block_size) index
 # physical blocks shared by every slot, so sharding either one over the data
-# axes would scatter one slot's history across data replicas.
-_PAGED_POOLS = {"kp": -2, "vp": -2, "ksc": -1, "vsc": -1}   # name -> KV dim
+# axes would scatter one slot's history across data replicas.  paged_glvq
+# codebook leaves (kg/kgi/vg/vgi [R?, KV, d, d], kmu/vmu [R?, KV]) shard the
+# same KV-head dim and replicate over data like the pools they decode.
+_PAGED_POOLS = {"kp": -2, "vp": -2, "ksc": -1, "vsc": -1,   # name -> KV dim
+                "kg": -3, "kgi": -3, "vg": -3, "vgi": -3,
+                "kmu": -1, "vmu": -1}
 
 
 def cache_specs_tree(cache, mesh: Mesh, cfg=None):
@@ -294,10 +298,17 @@ def paged_attn_specs(pools, *, chunked: bool = False):
     owns whole (kv-head, query-group) pairs, so no collective is needed;
     the [B, T, H*hd] output concatenates head shards along its flattened
     last dim.  Returns (in_specs, out_spec) matching the positional args
-    (q, pools, table, pos, lens[, k_chunk, v_chunk])."""
+    (q, pools, table, pos, lens[, k_chunk, v_chunk]).
+
+    Specs are keyed by leaf NAME, not ndim: paged_glvq codebook leaves
+    (kg/vg [KV, d, d], kmu/vmu [KV]) lead with the KV-head dim, unlike the
+    block pools."""
     head4 = P(None, None, "model", None)
-    pool_specs = {n: head4 if pools[n].ndim == 4 else P(None, None, "model")
-                  for n in pools}
+    by_name = {"kp": head4, "vp": head4,
+               "ksc": P(None, None, "model"), "vsc": P(None, None, "model"),
+               "kg": P("model", None, None), "vg": P("model", None, None),
+               "kmu": P("model"), "vmu": P("model")}
+    pool_specs = {n: by_name[n] for n in pools}
     in_specs = (head4, pool_specs, P(None, None), P(None), P(None))
     if chunked:
         in_specs = in_specs + (head4, head4)

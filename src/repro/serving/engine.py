@@ -51,7 +51,12 @@ class EngineConfig:
     from ``kernels.ops.matmul_backends()``; None = platform default),
     ``unroll`` (scan unroll), ``mesh`` (tensor-parallel shard_map mesh).
 
-    Attention cache: ``cache_kind`` (dense | paged | paged_q8 | paged_q8c),
+    Attention cache: ``cache_kind`` (dense | paged | paged_q8 | paged_q8c |
+    paged_glvq), ``kv_bits`` / ``kv_d`` / ``kv_codebook`` (the paged_glvq
+    lattice codec: coordinate bit-width, sub-vector dim — 0 = auto — and an
+    optional calibrated ``data.calibration.KVCodebook``, whose bits/d
+    override the scalars when set; without one the identity codebook makes
+    paged_glvq exact uniform signed-kv_bits quantization),
     ``block_size`` / ``num_blocks`` (paged pool geometry; ``num_blocks``
     None = planned from ``s_cache`` x ``slots``), ``kv_backend`` (name from
     ``kernels.kv_cache.kv_backends()``), ``attn_backend`` (name from
@@ -105,6 +110,10 @@ class EngineConfig:
     kv_backend: Optional[str] = None
     attn_backend: Optional[str] = None
     s_cache: Optional[int] = None
+    kv_bits: int = 4
+    kv_d: int = 0
+    kv_codebook: Any = dataclasses.field(default=None, compare=False,
+                                         repr=False)
     prefix_cache: bool = False
     prefix_cache_min_blocks: int = 1
     # scheduling
@@ -141,8 +150,17 @@ class EngineConfig:
         if self.prefix_cache_min_blocks < 1:
             raise ValueError(f"prefix_cache_min_blocks must be >= 1, "
                              f"got {self.prefix_cache_min_blocks}")
-        object.__setattr__(self, "stop_tokens",
-                           tuple(int(t) for t in self.stop_tokens))
+        kv_bits, kv_d = self.kv_bits, self.kv_d
+        if self.kv_codebook is not None:
+            # a calibrated codebook is authoritative for the codec geometry
+            kv_bits = int(getattr(self.kv_codebook, "bits", kv_bits))
+            kv_d = int(getattr(self.kv_codebook, "d", kv_d))
+        if not 2 <= kv_bits <= 8:
+            raise ValueError(f"kv_bits must be in [2, 8], got {kv_bits}")
+        for field, value in (("kv_bits", kv_bits), ("kv_d", kv_d),
+                             ("stop_tokens",
+                              tuple(int(t) for t in self.stop_tokens))):
+            object.__setattr__(self, field, value)
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

@@ -46,12 +46,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.kv_cache import MODES, PageLayout, copy_pool_block
+from repro.core import packing
+from repro.kernels.kv_cache import (MODES, PageLayout, copy_pool_block,
+                                    default_glvq_spec)
 
 __all__ = ["CACHE_KINDS", "PageLayout", "BlockAllocator", "SlotPages",
            "PrefixCache", "copy_block", "static_table",
            "attn_layer_lengths", "cache_bytes", "bytes_per_token",
-           "max_resident_slots"]
+           "codebook_bytes", "max_resident_slots"]
 
 # every kernel-level paged mode plus the dense oracle — derived so the two
 # lists cannot drift
@@ -474,7 +476,10 @@ def copy_block(cache, src, dst):
     def walk(node):
         if isinstance(node, dict):
             if "kp" in node and "lt" not in node:
-                # leaves are [NB, bs, ...] or scan-stacked [R, NB, bs, ...]
+                # leaves are [NB, bs, ...] or scan-stacked [R, NB, bs, ...];
+                # GLVQ codebook leaves (kg/kgi/kmu/...) are per-layer
+                # constants shared by every block and stay out of the copy
+
                 return {k: copy_pool_block(
                             v, src, dst,
                             stacked=v.ndim == (5 if k in ("kp", "vp") else 4))
@@ -521,17 +526,23 @@ def attn_layer_lengths(cfg: ModelConfig, s_cache: int) -> List[int]:
     return [s for s, _ in _attn_layers(cfg, s_cache)]
 
 
-def _per_pos_bytes(cfg: ModelConfig, kind: str, dtype_bytes: int) -> float:
+def _per_pos_bytes(cfg: ModelConfig, kind: str, dtype_bytes: int,
+                   kv_bits: int = 4) -> float:
     """K+V bytes for one retained position of one attention layer."""
     per_head = cfg.n_kv_heads * cfg.hd
     if kind in ("dense", "paged"):
         return 2 * per_head * dtype_bytes
+    if kind == "paged_glvq":
+        # uint32 word-packed lattice codes + f16 per-token-per-head amax
+        words = packing.packed_len(cfg.hd, kv_bits)
+        return 2 * (cfg.n_kv_heads * 4 * words + cfg.n_kv_heads * 2)
     # int8 codes + f16 per-token-per-head scale
     return 2 * (per_head * 1 + cfg.n_kv_heads * 2)
 
 
 def cache_bytes(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
-                block_size: int = 16, dtype_bytes: int = 2) -> int:
+                block_size: int = 16, dtype_bytes: int = 2,
+                kv_bits: int = 4) -> int:
     """Resident attention-cache bytes for ONE slot holding ``seq_len`` tokens.
 
     Dense reserves every layer's full retained length up front.  Paged
@@ -546,7 +557,7 @@ def cache_bytes(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
     total = 0.0
     for s_layer, local in _attn_layers(cfg, s_cache):
         if kind == "dense":
-            total += s_layer * _per_pos_bytes(cfg, kind, dtype_bytes)
+            total += s_layer * _per_pos_bytes(cfg, kind, dtype_bytes, kv_bits)
         else:
             if local:
                 blocks = -(-s_layer // block_size)     # static ring ownership
@@ -554,23 +565,39 @@ def cache_bytes(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
                 touched = min(seq_len, s_layer)
                 blocks = -(-touched // block_size) if touched else 0
             total += blocks * block_size * _per_pos_bytes(cfg, kind,
-                                                          dtype_bytes)
+                                                          dtype_bytes, kv_bits)
     if kind != "dense":
         total += 4 * (-(-s_cache // block_size))      # int32 table row
     return int(total)
 
 
 def bytes_per_token(cfg: ModelConfig, kind: str, seq_len: int, s_cache: int,
-                    block_size: int = 16, dtype_bytes: int = 2) -> float:
+                    block_size: int = 16, dtype_bytes: int = 2,
+                    kv_bits: int = 4) -> float:
     """Resident cache bytes per stored token at sequence length ``seq_len``."""
     return cache_bytes(cfg, kind, seq_len, s_cache, block_size,
-                       dtype_bytes) / max(seq_len, 1)
+                       dtype_bytes, kv_bits) / max(seq_len, 1)
+
+
+def codebook_bytes(cfg: ModelConfig, kind: str, kv_bits: int = 4,
+                   kv_d: int = 0) -> int:
+    """Resident GLVQ codebook overhead: the f32 generation-matrix leaves
+    (kg/kgi/vg/vgi ``[KV, d, d]`` + kmu/vmu ``[KV]``) every attention layer
+    carries in its pool.  Shared by ALL slots (and never copied by CoW), so
+    it is a flat per-model constant, not part of bytes/token.  0 for every
+    other cache kind."""
+    if kind != "paged_glvq":
+        return 0
+    spec = default_glvq_spec(cfg.hd, bits=kv_bits, d=kv_d or None)
+    per_layer = (4 * cfg.n_kv_heads * spec.d * spec.d
+                 + 2 * cfg.n_kv_heads) * 4
+    return per_layer * len(_attn_layers(cfg, 1))
 
 
 def max_resident_slots(cfg: ModelConfig, kind: str, hbm_bytes: float,
                        seq_len: int, s_cache: int, block_size: int = 16,
-                       dtype_bytes: int = 2) -> int:
+                       dtype_bytes: int = 2, kv_bits: int = 4) -> int:
     """How many concurrent slots at ``seq_len`` fit a fixed cache budget."""
     per_slot = cache_bytes(cfg, kind, seq_len, s_cache, block_size,
-                           dtype_bytes)
+                           dtype_bytes, kv_bits)
     return int(hbm_bytes // max(per_slot, 1))

@@ -333,6 +333,20 @@ class ContinuousBatcher:
             "kv_cache_resident_bytes",
             "modeled resident cache bytes over live slots "
             "(serving.kvcache.cache_bytes)", kind=ecfg.cache_kind)
+        # the byte-economy gauges carry a host label: under multi-process
+        # serving each process exports its own resident-byte series
+        host = str(jax.process_index())
+        self._m_bpt = mx.gauge(
+            "serving_kv_bytes_per_token",
+            "modeled resident cache bytes per live stored token "
+            "(serving.kvcache.cache_bytes over current slot positions)",
+            kind=ecfg.cache_kind, host=host)
+        self._m_book_bytes = mx.gauge(
+            "serving_kv_codebook_bytes",
+            "resident GLVQ codebook overhead (f32 generation matrices "
+            "shared by all slots; 0 for non-glvq cache kinds)", host=host)
+        self._m_book_bytes.set(kvcache.codebook_bytes(
+            self.cfg, ecfg.cache_kind, ecfg.kv_bits, ecfg.kv_d))
 
     def _record_iteration(self, t: int, valid_toks: int, live_events:
                           List[TokenEvent], step_s: float, dispatch_s: float):
@@ -355,7 +369,10 @@ class ContinuousBatcher:
                     width=t, policy=self._policy_name)
             w.inc()
             self._m_compile.set_cumulative(self._compiles)
-            self._m_resident.set(self._resident_bytes())
+            resident = self._resident_bytes()
+            self._m_resident.set(resident)
+            live_toks = sum(s.pos for s in self.slots if not s.free)
+            self._m_bpt.set(resident / live_toks if live_toks else 0.0)
             if self.pages is not None:
                 al = self.pages.alloc
                 self._m_blocks_used.set(al.used_blocks)
@@ -396,7 +413,7 @@ class ContinuousBatcher:
         return sum(
             kvcache.cache_bytes(self.cfg, ecfg.cache_kind, s.pos,
                                 self.s_cache, ecfg.block_size,
-                                self._dtype_bytes)
+                                self._dtype_bytes, ecfg.kv_bits)
             for s in self.slots if not s.free)
 
     @property

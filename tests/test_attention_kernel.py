@@ -20,7 +20,7 @@ from repro.kernels import attention as attn
 from repro.kernels import kv_cache as kvk
 from repro.models import registry
 
-PAGED_KINDS = ("paged", "paged_q8", "paged_q8c")
+PAGED_KINDS = ("paged", "paged_q8", "paged_q8c", "paged_glvq")
 TOL = dict(atol=2e-5, rtol=2e-5)
 
 
@@ -218,6 +218,16 @@ def test_engine_token_parity_fused_vs_oracle(arch):
         assert abs(ev.top_logprobs[0][1] - ev.logprob) < 1e-5
         assert ev.top_logprobs[0][1] >= ev.top_logprobs[1][1] \
             >= ev.top_logprobs[2][1]
+
+
+@pytest.mark.parametrize("arch", ("llama2-7b", "recurrentgemma-9b"))
+def test_engine_token_parity_fused_vs_oracle_glvq(arch):
+    """paged_glvq end-to-end: the fused block-walk's in-kernel lattice
+    decode (codes @ G^T + compand expand + amax) must reproduce the XLA
+    gather oracle's greedy token streams bit-for-bit."""
+    xla_toks, _ = _greedy_stream(arch, "xla", kind="paged_glvq")
+    pal_toks, _ = _greedy_stream(arch, "pallas", kind="paged_glvq")
+    assert xla_toks == pal_toks
 
 
 # ---------------------------------------------------------------------------

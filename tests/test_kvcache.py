@@ -13,7 +13,11 @@ from repro.serving import kvcache
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 KV_BACKENDS = ("xla", "pallas")
-PAGED_KINDS = ("paged", "paged_q8", "paged_q8c")
+PAGED_KINDS = ("paged", "paged_q8", "paged_q8c", "paged_glvq")
+# round-trip reconstruction tolerance per codec (values ~N(0,1)):
+# raw = exact, int8 ~ amax/256, int4 lattice ~ amax/14
+ROUNDTRIP_TOL = {"paged": 1e-6, "paged_q8": 0.05, "paged_q8c": 0.05,
+                 "paged_glvq": 0.4}
 
 
 # ---------------------------------------------------------------------------
@@ -47,8 +51,8 @@ def test_kv_kernel_backend_parity(mode):
     for i in range(2):
         np.testing.assert_allclose(np.asarray(outs["xla"][i]),
                                    np.asarray(outs["pallas"][i]), atol=1e-6)
-    # round trip: exact for raw paged, int8-bounded for the quantized modes
-    tol = 1e-6 if mode == "paged" else 0.05
+    # round trip: exact for raw paged, codec-bounded for the quantized modes
+    tol = ROUNDTRIP_TOL[mode]
     for i in range(2):
         g = np.asarray(outs["xla"][i])
         for t, vals in written.items():
@@ -225,6 +229,21 @@ def test_quantized_cache_matches_dense_within_tolerance(arch, kind):
     assert np.abs(out - ref).max() < 0.05 * scale + 0.05
 
 
+@pytest.mark.parametrize("arch", ["llama2-7b", "recurrentgemma-9b"])
+def test_glvq_cache_matches_dense_within_tolerance(arch):
+    """4-bit lattice history: coarser than int8, so the drift bound is
+    wider — but it must stay bounded relative to the logit scale on both a
+    dense-attention and a recurrent/sliding-window family."""
+    cfg = reduced(get_config(arch))
+    params = registry.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(11)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (2, 12)), jnp.int32)
+    ref = _teacher_forced_logits(params, cfg, tokens, "dense")
+    out = _teacher_forced_logits(params, cfg, tokens, "paged_glvq")
+    scale = np.abs(ref).max()
+    assert np.abs(out - ref).max() < 0.3 * scale + 0.05
+
+
 # ---------------------------------------------------------------------------
 # scheduler: slot churn, recurrent resets, block recycling
 # ---------------------------------------------------------------------------
@@ -309,6 +328,95 @@ def test_encdec_rejects_paged_cache():
 # ---------------------------------------------------------------------------
 # analytic byte accounting (the benchmark's source of truth)
 # ---------------------------------------------------------------------------
+
+def test_unknown_cache_kind_typed_errors():
+    """Satellite regression: an unknown cache kind must raise a typed
+    ValueError NAMING the valid kinds at every entry layer — engine build,
+    pool init, codec, and the analytic byte model — instead of silently
+    falling through to a default codec."""
+    from repro.serving.engine import EngineConfig
+    with pytest.raises(ValueError, match="paged_glvq"):
+        EngineConfig(cache_kind="paged_q4")
+    with pytest.raises(ValueError, match="paged_glvq"):
+        kvk.pool_init(4, 4, 2, 16, jnp.float32, "paged_q4")
+    with pytest.raises(ValueError, match="paged_q8"):
+        kvk.kv_quantize(jnp.zeros((1, 2, 8)), "paged_glvq")  # int8-only API
+    with pytest.raises(ValueError, match="paged_q8"):
+        kvk.kv_dequantize(jnp.zeros((1, 2, 8), jnp.int8),
+                          jnp.zeros((1, 2)), "nope", jnp.float32)
+    with pytest.raises(ValueError, match="available"):
+        kvcache.cache_bytes(reduced(get_config("llama2-7b")), "paged_q4",
+                            8, 16)
+
+
+def test_bytes_per_token_glvq_beats_q8():
+    """Acceptance bar: paged_glvq resident bytes/token <= 0.15x dense bf16
+    at llama2-7b geometry (hd = 128, 4 bits: 64 B codes + 2 B amax per head
+    position vs 512 B dense), and the codebook overhead is a flat per-model
+    constant independent of sequence length."""
+    cfg = get_config("llama2-7b")
+    s_cache, seq = 4096, 2048
+    dense = kvcache.bytes_per_token(cfg, "dense", seq, s_cache)
+    q8 = kvcache.bytes_per_token(cfg, "paged_q8", seq, s_cache)
+    glvq = kvcache.bytes_per_token(cfg, "paged_glvq", seq, s_cache)
+    assert glvq <= 0.15 * dense
+    assert glvq < q8
+    bk = kvcache.codebook_bytes(cfg, "paged_glvq")
+    assert bk > 0 and bk == kvcache.codebook_bytes(cfg, "paged_glvq")
+    assert kvcache.codebook_bytes(cfg, "paged_q8") == 0
+    # 3-bit packs tighter still
+    assert kvcache.bytes_per_token(cfg, "paged_glvq", seq, s_cache,
+                                   kv_bits=3) < glvq
+
+
+def test_kv_codebook_calibration_roundtrip():
+    """calibrate_kv on a reduced llama: the fitted book must survive
+    save/load bit-exactly, graft into cache_init over the identity
+    defaults, and never reconstruct the fit samples worse than the
+    uncalibrated identity codec (per-head candidate selection)."""
+    from repro.core.glvq import GLVQConfig
+    from repro.data import calibration as cal
+    cfg = reduced(get_config("llama2-7b"))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    batches = [{"tokens": rng.integers(1, cfg.vocab, (2, 16))}]
+    book = cal.calibrate_kv(params, batches, cfg, bits=4, chunk=8,
+                            samples_per_head=64,
+                            qcfg=GLVQConfig(d=4, bits=4, iters=6), seed=0)
+    assert (book.bits, book.hd) == (4, cfg.hd)
+    entries = [b for b in list(book.blocks) + list(book.tail)
+               if b is not None]
+    assert entries, "no attention layer was calibrated"
+    for bk in entries:
+        for n in kvk.GLVQ_BOOK_LEAVES:
+            assert n in bk
+        # G @ G^-1 == I per head
+        g = bk["kg"].reshape(-1, book.d, book.d)
+        gi = bk["kgi"].reshape(-1, book.d, book.d)
+        np.testing.assert_allclose(np.einsum("kij,kjl->kil", g, gi),
+                                   np.broadcast_to(np.eye(book.d),
+                                                   g.shape), atol=1e-4)
+    path = "/tmp/test_kv_codebook.npz"
+    cal.save_kv_codebook(path, book)
+    book2 = cal.load_kv_codebook(path)
+    assert (book2.bits, book2.d, book2.hd) == (book.bits, book.d, book.hd)
+    for a, b in zip(list(book.blocks) + list(book.tail),
+                    list(book2.blocks) + list(book2.tail)):
+        assert (a is None) == (b is None)
+        if a is not None:
+            for n in a:
+                np.testing.assert_array_equal(a[n], b[n])
+    # grafting: cache_init with the codebook must carry the fitted leaves
+    from repro.serving.engine import EngineConfig
+    ecfg = EngineConfig(dtype=jnp.float32, cache_kind="paged_glvq",
+                        s_cache=16, block_size=4, kv_codebook=book2)
+    assert ecfg.kv_bits == book.bits and ecfg.kv_d == book.d
+    cache = registry.cache_init(cfg, 2, engine=ecfg)
+    lay = cache["blocks"][0] if book.blocks[0] is not None else \
+        cache["tail"][0]
+    src = book.blocks[0] if book.blocks[0] is not None else book.tail[0]
+    np.testing.assert_allclose(np.asarray(lay["kg"]), src["kg"], atol=1e-6)
+
 
 def test_bytes_per_token_paged_q8_beats_dense():
     """Acceptance bar: paged_q8 resident bytes/token <= 0.3x dense bf16 at
@@ -418,3 +526,56 @@ def test_chunk_roundtrip_quantized_matches_cache_codec():
         np.testing.assert_allclose(np.asarray(rk), np.asarray(want),
                                    atol=1e-6)
         assert float(jnp.abs(rk - k).max()) > 1e-6  # not the identity
+
+
+def test_chunk_roundtrip_glvq_matches_cache_codec():
+    """paged_glvq in-flight chunk keys must roundtrip through the SAME
+    lattice codec (quantize -> word-pack -> unpack -> dequantize) the cache
+    applies, with the identity default book when no codebook is given."""
+    rng = np.random.default_rng(2)
+    kv, hd = 2, 16
+    k = jnp.asarray(rng.normal(size=(2, 3, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 3, kv, hd)), jnp.float32)
+    spec = kvk.default_glvq_spec(hd)
+    rk, rv = kvk.chunk_roundtrip(k, v, mode="paged_glvq",
+                                 store_dtype=jnp.uint32,
+                                 out_dtype=jnp.float32, glvq=spec)
+    book = kvk.glvq_default_book(kv, spec)
+    words, amax = kvk.glvq_quantize(k, book["kgi"], book["kmu"], spec)
+    want = kvk.glvq_dequantize(words, amax, book["kg"], book["kmu"], spec,
+                               jnp.float32)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(want), atol=1e-6)
+    assert float(jnp.abs(rk - k).max()) > 1e-6  # not the identity
+
+
+def test_glvq_identity_book_is_uniform_grid():
+    """With the identity default book (G = I/hi, mu = 0) the lattice codec
+    degenerates to plain per-token uniform signed-4-bit quantization — the
+    uncalibrated fallback's semantics are exactly the int4 baseline."""
+    rng = np.random.default_rng(3)
+    hd, kv = 16, 2
+    spec = kvk.default_glvq_spec(hd)
+    book = kvk.glvq_default_book(kv, spec)
+    x = jnp.asarray(rng.normal(size=(5, kv, hd)), jnp.float32)
+    words, amax = kvk.glvq_quantize(x, book["kgi"], book["kmu"], spec)
+    back = kvk.glvq_dequantize(words, amax, book["kg"], book["kmu"], spec,
+                               jnp.float32)
+    am = np.maximum(np.abs(np.asarray(x)).max(-1, keepdims=True), 1e-6)
+    hi = spec.hi
+    codes = np.clip(np.round(np.asarray(x) / am * hi), -hi - 1, hi)
+    # the cache stores amax as f16 — the dequant rescale uses that rounding
+    want = codes / hi * am.astype(np.float16).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(back), want, atol=1e-5)
+
+
+def test_glvq_spec_validation_and_pool_inference():
+    with pytest.raises(ValueError, match="bits"):
+        kvk.GLVQSpec(bits=1, d=4, hd=16)
+    with pytest.raises(ValueError, match="divide"):
+        kvk.GLVQSpec(bits=4, d=3, hd=16)
+    spec = kvk.default_glvq_spec(96)
+    assert (spec.d, spec.hd, spec.bits) == (4, 96, 4)
+    assert kvk.default_glvq_spec(6).d == 2    # 6 % 4 != 0 -> fall to 2
+    cache = kvk.pool_init(4, 4, 2, 16, jnp.float32, "paged_glvq")
+    got = kvk.glvq_spec_from_pool(cache)
+    assert (got.bits, got.d, got.hd) == (4, 4, 16)

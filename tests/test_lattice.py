@@ -73,3 +73,76 @@ def test_spectral_clip():
     gc = lattice.spectral_clip(g, 0.5, 1.5)
     s = jnp.linalg.svd(gc, compute_uv=False)
     assert float(s.max()) <= 1.5 + 1e-4 and float(s.min()) >= 0.5 - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# babai_round / babai_decode as the paged_glvq KV codec (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4]),
+       st.sampled_from([3, 4]))
+def test_babai_kv_codec_roundtrip_error_bound(seed, d, bits):
+    """KV-codec property: per-token max-abs-normalized vectors encoded with
+    babai_round against a well-conditioned G and decoded with babai_decode
+    stay within the Appendix-A Babai bound whenever no coordinate clipped,
+    and codes always lie in the signed bits-range (word-packable)."""
+    rng = np.random.default_rng(seed)
+    g = _rand_basis(rng, d, cond=2.0)
+    # per-token normalized sub-vectors, scaled into the lattice's coverage
+    x = rng.normal(size=(d, 64))
+    x = x / np.maximum(np.abs(x).max(axis=0, keepdims=True), 1e-6)
+    lo, hi = lattice.int_range(bits)
+    g = g / np.abs(np.linalg.inv(g) @ x).max() * hi / (hi + 1)  # cover range
+    ginv = jnp.asarray(np.linalg.inv(g), jnp.float32)
+    z = lattice.babai_round(ginv, jnp.asarray(x, jnp.float32), bits)
+    zn = np.asarray(z)
+    assert zn.min() >= lo and zn.max() <= hi
+    back = np.asarray(lattice.babai_decode(jnp.asarray(g, jnp.float32), z))
+    unclipped = np.all((zn > lo) & (zn < hi), axis=0)
+    err = np.linalg.norm(x - back, axis=0)
+    bound = lattice.babai_error_bound(np.asarray(g, np.float32))
+    assert np.all(err[unclipped] <= bound + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4]),
+       st.sampled_from([3, 4]))
+def test_babai_kv_codec_spectral_clip_ill_conditioned(seed, d, bits):
+    """Ill-conditioned G edge: spectral_clip must bound the decode error
+    amplification — after clipping to [0.25 s_max, s_max] the codec's
+    roundtrip error on in-range data stays finite and within the clipped
+    basis' Babai bound (an unclipped near-singular G would explode it)."""
+    rng = np.random.default_rng(seed)
+    u, _, vt = np.linalg.svd(rng.normal(size=(d, d)))
+    s = np.linspace(1.0, 1e-6, d)                      # nearly singular
+    g_bad = jnp.asarray(u @ np.diag(s) @ vt, jnp.float32)
+    g = lattice.spectral_clip(g_bad, 0.25, 1.0)
+    sv = np.linalg.svd(np.asarray(g), compute_uv=False)
+    assert sv.min() >= 0.25 - 1e-4
+    x = rng.normal(size=(d, 32)).astype(np.float32)
+    x /= np.maximum(np.abs(x).max(axis=0, keepdims=True), 1e-6)
+    x *= 0.2                                           # stay in coverage
+    ginv = jnp.linalg.inv(g)
+    z = lattice.babai_round(ginv, jnp.asarray(x), bits)
+    back = np.asarray(lattice.babai_decode(g, z))
+    err = np.linalg.norm(x - back, axis=0)
+    assert np.all(np.isfinite(err))
+    assert np.all(err <= lattice.babai_error_bound(np.asarray(g)) + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([3, 4]),
+       st.sampled_from([10, 12, 16, 20]))
+def test_babai_codes_word_pack_roundtrip_nondivisible(seed, bits, hd):
+    """Word-packing edge: signed Babai codes at a head dim that does NOT
+    fill the last uint32 word (hd % per_word != 0) must unpack bit-exactly
+    — pad lanes are ignored, sign bits survive the word boundary."""
+    from repro.core import packing
+    rng = np.random.default_rng(seed)
+    lo, hi = lattice.int_range(bits)
+    codes = jnp.asarray(rng.integers(lo, hi + 1, size=(6, hd)), jnp.int32)
+    words = packing.pack_codes(codes, bits)
+    assert words.shape[-1] == packing.packed_len(hd, bits)
+    back = packing.unpack_codes(words, bits, hd)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))

@@ -402,6 +402,38 @@ def test_paged_run_block_pool_gauges_and_prometheus():
     assert "serving_requests_finished_total" in text
 
 
+def test_kv_byte_economy_gauges_and_host_label():
+    """serving_kv_bytes_per_token{kind=,host=} tracks the analytic model
+    while slots are live (high-water > 0, back to 0 at retirement) and
+    serving_kv_codebook_bytes{host=} is the flat GLVQ codebook overhead —
+    positive only for paged_glvq, present in snapshot AND Prometheus."""
+    import jax
+    from repro.serving import kvcache as skv
+    cfg, params = _params()
+    host = f"host={jax.process_index()}"
+    for kind, book_positive in (("paged_glvq", True), ("paged_q8", False)):
+        eng = ServingEngine(params, cfg,
+                            _ecfg(chunk_size=CHUNK, cache_kind=kind))
+        eng.submit([1, 2, 3, 4, 5], SamplingParams(max_tokens=3))
+        eng.run()
+        snap = eng.metrics_snapshot()
+        bpt = snap["gauges"]["serving_kv_bytes_per_token"]
+        key = f"{host},kind={kind}"
+        assert bpt[key] == 0.0                       # all slots retired
+        hw = snap["gauges"]["serving_kv_bytes_per_token__high_water"][key]
+        assert hw > 0
+        book = snap["gauges"]["serving_kv_codebook_bytes"][host]
+        want_book = skv.codebook_bytes(cfg, kind)
+        assert book == want_book
+        assert (book > 0) == book_positive
+        text = eng.render_prometheus()
+        assert "serving_kv_bytes_per_token{" in text
+        assert "serving_kv_codebook_bytes{" in text
+    # glvq stores fewer bytes per live token than int8 at equal positions
+    assert skv.bytes_per_token(cfg, "paged_glvq", 8, 32, 4) < \
+        skv.bytes_per_token(cfg, "paged_q8", 8, 32, 4)
+
+
 def test_trace_log_iteration_records_from_engine(tmp_path):
     path = tmp_path / "trace.jsonl"
     cfg, params = _params()

@@ -18,7 +18,7 @@ from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.kvcache import BlockAllocator, PrefixCache
 from repro.serving.scheduler import ContinuousBatcher, Request
 
-PAGED_KINDS = ("paged", "paged_q8", "paged_q8c")
+PAGED_KINDS = ("paged", "paged_q8", "paged_q8c", "paged_glvq")
 S_CACHE, BLOCK, CHUNK = 32, 4, 5
 
 
@@ -246,13 +246,16 @@ def test_prefix_parity_greedy_llama(llama, kind):
     assert st["tokens_reused"] == 2 * len(shared)
 
 
-def test_prefix_cow_mid_block_divergence(llama):
+@pytest.mark.parametrize("kind", ("paged_q8", "paged_glvq"))
+def test_prefix_cow_mid_block_divergence(llama, kind):
     """Prompts diverging mid-block force the copy-on-write boundary copy;
-    outputs stay bit-identical to the cache-off run."""
+    outputs stay bit-identical to the cache-off run.  paged_glvq rides the
+    same copy (uint32 word pools copy like any code pool; the codebook
+    leaves are shared per-layer constants and stay out of it)."""
     shared = list(range(1, 15))                  # 14 tokens: 3.5 blocks
     prompts = [shared + [50 + r] for r in range(3)]
-    on, eng = _serve(llama, "paged_q8", prompts, True)
-    off, _ = _serve(llama, "paged_q8", prompts, False)
+    on, eng = _serve(llama, kind, prompts, True)
+    off, _ = _serve(llama, kind, prompts, False)
     assert on == off
     st = eng.prefix_cache_stats()
     assert st["cow_copies"] >= 1 and st["hits"] == 2
